@@ -1,0 +1,49 @@
+"""Paper Table 6: provider cost comparison for a fixed evaluation task
+(10,000 examples, 400 input / 150 output tokens)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.engines import PRICE_BOOK, api_cost
+
+TASK = {"examples": 10_000, "in_tokens": 400, "out_tokens": 150}
+
+TABLE6 = [
+    ("openai", "gpt-4o"),
+    ("openai", "gpt-4o-mini"),
+    ("anthropic", "claude-3-5-sonnet"),
+    ("anthropic", "claude-3-haiku"),
+    ("google", "gemini-1.5-pro"),
+]
+
+
+def run() -> list[str]:
+    lines = []
+    n = TASK["examples"]
+    for provider, model in TABLE6:
+        t0 = time.perf_counter()
+        total = api_cost(
+            provider, model, n * TASK["in_tokens"], n * TASK["out_tokens"]
+        )
+        pin, pout = PRICE_BOOK[(provider, model)]
+        in_cost = n * TASK["in_tokens"] * pin / 1e6
+        out_cost = n * TASK["out_tokens"] * pout / 1e6
+        us = (time.perf_counter() - t0) * 1e6
+        lines.append(
+            f"table6_cost_{provider}_{model},{us:.1f},"
+            f"input=${in_cost:.2f} output=${out_cost:.2f} total=${total:.2f}"
+        )
+    # paper: 1M examples at gpt-4o vs mini — the 20x regression-testing gap
+    m = 1_000_000
+    big = api_cost("openai", "gpt-4o", m * 400, m * 150)
+    small = api_cost("openai", "gpt-4o-mini", m * 400, m * 150)
+    lines.append(
+        f"table6_cost_1M_scale,0,gpt4o=${big:.0f} mini=${small:.0f} "
+        f"ratio={big/small:.1f}x"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,43 @@
+"""Paper Table 5: empirical coverage of 95% CIs on lognormal(sigma=0.5)
+data — BCa stays near-nominal at small n, percentile/analytical undercover."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.stats import bca_bootstrap, percentile_bootstrap, t_interval
+
+
+def run(n_datasets: int = 200, n_boot: int = 300, full: bool = False) -> list[str]:
+    if full:
+        n_datasets, n_boot = 1000, 1000
+    sigma = 0.5
+    true_mean = float(np.exp(sigma**2 / 2))
+    methods = {
+        "percentile": lambda d, s: percentile_bootstrap(d, n_boot=n_boot, seed=s),
+        "bca": lambda d, s: bca_bootstrap(d, n_boot=n_boot, seed=s),
+        "analytical_t": lambda d, s: t_interval(d),
+    }
+    lines = []
+    rng = np.random.default_rng(0)
+    for n in (50, 200, 1000):
+        data_sets = [rng.lognormal(0.0, sigma, n) for _ in range(n_datasets)]
+        for name, fn in methods.items():
+            t0 = time.perf_counter()
+            hits = 0
+            for s, d in enumerate(data_sets):
+                iv = fn(d, s)
+                hits += int(iv.lo <= true_mean <= iv.hi)
+            dt = time.perf_counter() - t0
+            cov = hits / n_datasets
+            lines.append(
+                f"table5_coverage_{name}_n{n},{dt*1e6/n_datasets:.0f},"
+                f"coverage={cov:.3f} target=0.95"
+            )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

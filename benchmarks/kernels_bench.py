@@ -1,0 +1,72 @@
+"""Kernel-layer microbenchmarks (CPU wall time of the jnp twin paths +
+derived arithmetic intensity).  Interpret-mode Pallas timings are not
+hardware-representative, so the jnp oracle is what we time on CPU; the
+dry-run roofline covers the TPU projection."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bootstrap.ref import bootstrap_means_ref
+from repro.kernels.bertscore.ref import bertscore_ref
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.RandomState(0)
+    lines = []
+
+    b, s, h, kh, d = 1, 2048, 8, 2, 64
+    q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True, scale=0.125))
+    us = _time(fn, q, k, v)
+    flops = 4 * s * s * h * d * 0.5
+    lines.append(
+        f"kernel_flash_attention_jnp_s{s},{us:.0f},gflops={flops/us/1e3:.1f}"
+    )
+
+    bb, l, hh, p, n = 2, 1024, 8, 64, 64
+    x = jnp.asarray(rng.randn(bb, l, hh, p) * 0.3, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(bb, l, hh)) * 0.3 + 0.1, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.randn(hh)) - 0.2, jnp.float32)
+    bm = jnp.asarray(rng.randn(bb, l, hh, n) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.randn(bb, l, hh, n) * 0.3, jnp.float32)
+    fn2 = jax.jit(lambda *xs: ssd_chunked(*xs, 256)[0])
+    us = _time(fn2, x, dt, a, bm, cm)
+    lines.append(f"kernel_ssd_jnp_l{l},{us:.0f},tokens_per_s={bb*l/us*1e6:.0f}")
+
+    data = jnp.asarray(rng.randn(100_000), jnp.float32)
+    fn3 = jax.jit(lambda d: bootstrap_means_ref(d, 256, 0))
+    us = _time(fn3, data)
+    lines.append(
+        f"kernel_bootstrap_jnp_n100k_B256,{us:.0f},"
+        f"resample_elems_per_s={256*100_000/us*1e6:.2e}"
+    )
+
+    cand = jnp.asarray(rng.randn(64, 48, 128), jnp.float32)
+    ref = jnp.asarray(rng.randn(64, 48, 128), jnp.float32)
+    mask = jnp.ones((64, 48))
+    fn4 = jax.jit(lambda c, r, m: bertscore_ref(c, r, m, m)[2])
+    us = _time(fn4, cand, ref, mask)
+    lines.append(f"kernel_bertscore_jnp_b64,{us:.0f},pairs_per_s={64/us*1e6:.0f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

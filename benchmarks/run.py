@@ -1,0 +1,61 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores the paper's
+original sample counts (slower); the default sizes finish in minutes on CPU.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2_scaling,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+
+    from benchmarks import (
+        caching,
+        cost,
+        coverage,
+        kernels_bench,
+        scaling,
+        throughput,
+        type1,
+    )
+
+    suites = {
+        "fig2_scaling": lambda: scaling.run(),
+        "table3_throughput": lambda: throughput.run(),
+        "table4_caching": lambda: caching.run(),
+        "table5_coverage": lambda: coverage.run(full=args.full),
+        "type1_error": lambda: type1.run(full=args.full),
+        "table6_cost": lambda: cost.run(),
+        "kernels": lambda: kernels_bench.run(),
+    }
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR={e!r}", file=sys.stderr)
+        print(f"# {name} finished in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig 2: throughput vs executor count — linear until the global rate
+limit saturates."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.simkit import simulate_eval
+
+
+def run(n_examples: int = 20_000) -> list[str]:
+    lines = []
+    prev = 0.0
+    for workers in (1, 2, 4, 8, 12, 16):
+        t0 = time.perf_counter()
+        res = simulate_eval(n_examples, workers)
+        us = (time.perf_counter() - t0) * 1e6
+        lines.append(
+            f"fig2_scaling_w{workers},{us:.0f},"
+            f"throughput={res.throughput_per_min:.0f}/min "
+            f"p50={res.latency_p50_ms:.0f}ms waited={res.rate_limited_s:.1f}s"
+        )
+        prev = res.throughput_per_min
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,38 @@
+"""Paper §5.4: Type-I error of the significance tests under the null
+(identical model outputs + noise) stays at the nominal 5% level."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.stats import mcnemar_test, paired_t_test, wilcoxon_signed_rank
+
+
+def run(n_sims: int = 2000, n: int = 100, full: bool = False) -> list[str]:
+    if full:
+        n_sims = 10_000
+    rng = np.random.default_rng(1)
+    rejections = {"mcnemar": 0, "paired_t": 0, "wilcoxon": 0}
+    t0 = time.perf_counter()
+    for _ in range(n_sims):
+        base_p = rng.uniform(0.3, 0.8)
+        # binary: same per-example success probability for both models
+        a_bin = rng.random(n) < base_p
+        b_bin = rng.random(n) < base_p
+        rejections["mcnemar"] += int(mcnemar_test(a_bin, b_bin).p_value < 0.05)
+        # continuous: same distribution
+        a = rng.normal(0.0, 1.0, n)
+        b = a + rng.normal(0.0, 0.5, n)  # paired noise, zero true shift
+        rejections["paired_t"] += int(paired_t_test(a, b).p_value < 0.05)
+        rejections["wilcoxon"] += int(wilcoxon_signed_rank(a, b).p_value < 0.05)
+    dt = time.perf_counter() - t0
+    return [
+        f"type1_{name},{dt*1e6/n_sims:.0f},rate={cnt/n_sims:.4f} nominal=0.05"
+        for name, cnt in rejections.items()
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

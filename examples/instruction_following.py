@@ -1,0 +1,71 @@
+"""Paper §5.6 end-to-end: instruction-following evaluation comparing two
+models with lexical, semantic and LLM-judge metrics, bootstrap CIs and the
+full significance-test pipeline.
+
+  PYTHONPATH=src python examples/instruction_following.py
+"""
+
+import tempfile
+
+from repro.core import (
+    EngineModelConfig,
+    EvalRunner,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+    compare_results,
+)
+from repro.data import instruction_examples
+
+
+def make_task(model_name: str, cache_root: str) -> EvalTask:
+    return EvalTask(
+        task_id=f"instruction-following-{model_name}",
+        model=EngineModelConfig(provider="openai", model_name=model_name),
+        inference=InferenceConfig(
+            batch_size=50, n_workers=4,
+            cache_dir=f"{cache_root}/{model_name}",
+            rate_limit_rpm=10_000,
+        ),
+        metrics=(
+            MetricConfig("exact_match", type="lexical"),
+            MetricConfig("bertscore", type="semantic"),
+            MetricConfig(
+                "llm_judge", type="llm_judge",
+                params={"rubric": "Rate helpfulness 1-5", "scale": 5},
+            ),
+        ),
+        statistics=StatisticsConfig(
+            confidence_level=0.95, bootstrap_iterations=1000, ci_method="bca"
+        ),
+    )
+
+
+def main() -> None:
+    rows = instruction_examples(200, seed=4)
+    cache_root = tempfile.mkdtemp()
+    runner = EvalRunner()
+
+    res_a = runner.evaluate(rows, make_task("gpt-4o", cache_root))
+    res_b = runner.evaluate(rows, make_task("gpt-4o-mini", cache_root))
+
+    print("=== gpt-4o ===")
+    for name, mv in res_a.metrics.items():
+        print(f"  {name:12s} {mv}")
+    unparseable = len(res_a.logs.get("judge_unparseable", []))
+    print(f"  judge unparseable: {unparseable} "
+          f"({unparseable/len(rows)*100:.2f}%) logged for review")
+
+    print("\n=== gpt-4o-mini ===")
+    for name, mv in res_b.metrics.items():
+        print(f"  {name:12s} {mv}")
+
+    print("\n=== comparison (test selected per metric type, Table 2) ===")
+    for name, cmp in compare_results(res_a, res_b).items():
+        print(f"  {cmp.summary()}")
+        print(f"    selected because: {cmp.recommendation.reason}")
+
+
+if __name__ == "__main__":
+    main()

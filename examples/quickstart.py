@@ -1,0 +1,53 @@
+"""Quickstart: evaluate a model on a synthetic QA set with full statistical
+accounting — the paper's minimal workflow.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+from repro.core import (
+    EngineModelConfig,
+    EvalRunner,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+)
+from repro.data import qa_examples
+
+
+def main() -> None:
+    rows = qa_examples(100, seed=0)
+    task = EvalTask(
+        task_id="quickstart-qa",
+        model=EngineModelConfig(provider="openai", model_name="gpt-4o-mini"),
+        inference=InferenceConfig(
+            batch_size=25,
+            n_workers=4,
+            cache_dir=tempfile.mkdtemp() + "/cache",
+        ),
+        metrics=(
+            MetricConfig("exact_match"),
+            MetricConfig("token_f1"),
+            MetricConfig("rouge_l"),
+            MetricConfig("embedding_similarity", type="semantic"),
+        ),
+        statistics=StatisticsConfig(
+            confidence_level=0.95, bootstrap_iterations=1000, ci_method="bca"
+        ),
+    )
+
+    result = EvalRunner().evaluate(rows, task)
+
+    print(f"evaluated {len(rows)} examples "
+          f"({result.throughput_per_min:.0f} examples/min)\n")
+    for name, mv in result.metrics.items():
+        print(f"  {name:24s} {mv}")
+    print(f"\ncache: {result.cache_stats}")
+    print(f"engine cost: ${result.engine_stats['total_cost']:.4f}")
+    print(f"stage timing: { {k: round(v, 3) for k, v in result.timing.items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""The paper's primary contribution: distributed, statistically rigorous
+LLM evaluation — config system, rate-limited cached inference orchestration,
+metric computation, statistical aggregation, model comparison, tracking."""
+
+from repro.core.cache import CacheEntry, CacheMiss, ResponseCache
+from repro.core.compare import Comparison, compare_results, compare_scores
+from repro.core.config import (
+    CachePolicy,
+    DataConfig,
+    EngineModelConfig,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+    cache_key,
+)
+from repro.core.engines import (
+    InferenceEngine,
+    InferenceRequest,
+    InferenceResponse,
+    LocalJaxEngine,
+    SimulatedAPIEngine,
+    api_cost,
+    create_engine,
+    get_engine,
+    retry_with_backoff,
+)
+from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
+from repro.core.runner import EvalResult, EvalRunner, MetricValue
+from repro.core.tracking import RunTracker
+
+__all__ = [
+    "AdaptiveLimiter", "CacheEntry", "CacheMiss", "CachePolicy", "Comparison",
+    "DataConfig", "EngineModelConfig", "EvalResult", "EvalRunner", "EvalTask",
+    "InferenceConfig", "InferenceEngine", "InferenceRequest",
+    "InferenceResponse", "LocalJaxEngine", "MetricConfig", "MetricValue",
+    "ResponseCache", "RunTracker", "SimulatedAPIEngine", "StatisticsConfig",
+    "TokenBucket", "api_cost", "cache_key", "compare_results",
+    "compare_scores", "create_engine", "get_engine", "retry_with_backoff",
+]

@@ -1,0 +1,84 @@
+"""Model comparison (paper §4.3-4.4): paired significance test (selected per
+Table 2) + effect size + CI of the per-example difference."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.runner import EvalResult
+from repro.stats.bootstrap import compute_ci
+from repro.stats.effect import EffectSize, cohens_d, hedges_g, odds_ratio
+from repro.stats.select import TestRecommendation, recommend_test, run_recommended
+from repro.stats.significance import TestResult
+
+
+@dataclasses.dataclass
+class Comparison:
+    metric: str
+    mean_a: float
+    mean_b: float
+    diff: float
+    diff_ci: tuple[float, float]
+    test: TestResult
+    recommendation: TestRecommendation
+    effect: EffectSize
+    n: int
+
+    def summary(self, alpha: float = 0.05) -> str:
+        sig = "SIGNIFICANT" if self.test.p_value < alpha else "not significant"
+        return (
+            f"{self.metric}: A={self.mean_a:.4f} B={self.mean_b:.4f} "
+            f"Δ={self.diff:+.4f} CI=({self.diff_ci[0]:+.4f},{self.diff_ci[1]:+.4f}) "
+            f"{self.test.test} p={self.test.p_value:.4g} [{sig}] "
+            f"{self.effect.name}={self.effect.value:.3f} ({self.effect.magnitude})"
+        )
+
+
+def compare_scores(
+    metric: str,
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    confidence: float = 0.95,
+    n_boot: int = 1000,
+    seed: int = 0,
+) -> Comparison:
+    """Paired comparison on aligned per-example score vectors."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    keep = ~(np.isnan(a) | np.isnan(b))
+    a, b = a[keep], b[keep]
+    rec = recommend_test(a, b)
+    test = run_recommended(a, b, seed=seed)
+    binary = rec.test == "mcnemar"
+    effect = odds_ratio(a, b) if binary else hedges_g(a, b)
+    diff = a - b
+    iv = compute_ci(
+        diff, method="percentile", confidence=confidence, n_boot=n_boot, seed=seed
+    )
+    return Comparison(
+        metric=metric,
+        mean_a=float(a.mean()),
+        mean_b=float(b.mean()),
+        diff=float(diff.mean()),
+        diff_ci=(iv.lo, iv.hi),
+        test=test,
+        recommendation=rec,
+        effect=effect,
+        n=len(a),
+    )
+
+
+def compare_results(
+    res_a: EvalResult, res_b: EvalResult, **kw
+) -> dict[str, Comparison]:
+    out: dict[str, Comparison] = {}
+    for metric in res_a.scores:
+        if metric not in res_b.scores:
+            continue
+        out[metric] = compare_scores(
+            metric, res_a.scores[metric], res_b.scores[metric], **kw
+        )
+    return out

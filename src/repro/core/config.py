@@ -1,0 +1,113 @@
+"""Hierarchical evaluation-task configuration (paper §3.4).
+
+The complete specification of an evaluation serializes to JSON and is stored
+alongside results — reproducibility by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+from typing import Any
+
+
+class CachePolicy(str, enum.Enum):
+    ENABLED = "enabled"      # lookup before inference, cache new responses
+    READ_ONLY = "read_only"  # lookup only
+    WRITE_ONLY = "write_only"  # cache warming: always infer, always cache
+    REPLAY = "replay"        # strict: error on cache miss (zero API calls)
+    DISABLED = "disabled"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineModelConfig:
+    """Which model answers the prompts (provider = 'local' runs on-pod)."""
+
+    provider: str = "local"          # local | openai | anthropic | google
+    model_name: str = "qwen3-4b"
+    temperature: float = 0.0
+    max_tokens: int = 64
+    # local-engine extras
+    reduced: bool = True             # serve the reduced config (CPU tests)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceConfig:
+    batch_size: int = 16
+    n_workers: int = 4
+    rate_limit_rpm: float = 10_000.0
+    rate_limit_tpm: float = 2_000_000.0
+    adaptive_rate: bool = False
+    cache_policy: CachePolicy = CachePolicy.ENABLED
+    cache_dir: str = ""
+    max_retries: int = 3
+    retry_delay: float = 1.0
+    # straggler mitigation (ft/)
+    speculative_reissue: bool = False
+    straggler_factor: float = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricConfig:
+    name: str                         # registry key, e.g. "exact_match"
+    type: str = "lexical"             # lexical | semantic | llm_judge | rag
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __hash__(self) -> int:
+        return hash((self.name, self.type, json.dumps(self.params, sort_keys=True)))
+
+
+@dataclasses.dataclass(frozen=True)
+class StatisticsConfig:
+    confidence_level: float = 0.95
+    bootstrap_iterations: int = 1000
+    ci_method: str = "bca"            # percentile | bca | analytical
+    significance_threshold: float = 0.05
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    prompt_template: str = "{question}"
+    input_columns: tuple[str, ...] = ("question",)
+    reference_column: str = "reference"
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalTask:
+    task_id: str
+    model: EngineModelConfig = EngineModelConfig()
+    inference: InferenceConfig = InferenceConfig()
+    metrics: tuple[MetricConfig, ...] = (MetricConfig("exact_match"),)
+    statistics: StatisticsConfig = StatisticsConfig()
+    data: DataConfig = DataConfig()
+
+    def to_json(self) -> str:
+        def default(o: Any):
+            if dataclasses.is_dataclass(o):
+                return dataclasses.asdict(o)
+            if isinstance(o, enum.Enum):
+                return o.value
+            raise TypeError(type(o))
+
+        return json.dumps(dataclasses.asdict(self), default=default, sort_keys=True)
+
+    def fingerprint(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+
+def cache_key(
+    prompt: str,
+    model_name: str,
+    provider: str,
+    temperature: float,
+    max_tokens: int,
+) -> str:
+    """Content-addressable key: SHA256(prompt||model||provider||T||max_tokens)."""
+    payload = "\x1f".join(
+        [prompt, model_name, provider, f"{temperature:.6g}", str(max_tokens)]
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()

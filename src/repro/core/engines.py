@@ -1,0 +1,355 @@
+"""Inference-engine abstraction (paper §3.3) and implementations.
+
+* :class:`LocalJaxEngine` — the primary engine on a pod: serves one of the
+  assigned architectures through the continuous-batching scheduler
+  (``repro/serve``).  The paper lists local model support as future work
+  #1; on a TPU pod it is the default.
+* :class:`SimulatedAPIEngine` — deterministic stand-in for the OpenAI /
+  Anthropic / Google providers: latency model + price book (Table 6) +
+  deterministic responses, so the paper's throughput/caching/cost
+  benchmarks reproduce without network access.
+
+``get_engine`` keeps one engine per serialized config per process — the
+paper's Listing-1 ``_ENGINE_CACHE`` pattern (amortize initialization across
+batches; in JAX terms: compile once, execute many).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+import json
+import math
+import re
+import time
+from typing import Any
+
+from repro.core.config import EngineModelConfig, InferenceConfig
+
+# -- request/response ---------------------------------------------------------
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    prompt: str
+    max_tokens: int = 64
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class InferenceResponse:
+    text: str
+    input_tokens: int
+    output_tokens: int
+    latency_ms: float
+    cost_usd: float = 0.0
+    error: str | None = None
+
+
+# -- price book (paper Table 6, USD per 1M tokens) -----------------------------
+
+PRICE_BOOK: dict[tuple[str, str], tuple[float, float]] = {
+    ("openai", "gpt-4o"): (2.50, 15.00),
+    ("openai", "gpt-4o-mini"): (0.15, 0.60),
+    ("openai", "gpt-4-turbo"): (10.00, 30.00),
+    ("openai", "gpt-3.5-turbo"): (0.50, 1.50),
+    ("anthropic", "claude-3-5-sonnet"): (3.00, 15.00),
+    ("anthropic", "claude-3-opus"): (15.00, 75.00),
+    ("anthropic", "claude-3-sonnet"): (3.00, 15.00),
+    ("anthropic", "claude-3-haiku"): (0.25, 1.25),
+    ("google", "gemini-1.5-pro"): (1.25, 5.00),
+    ("google", "gemini-1.5-flash"): (0.075, 0.30),
+    ("google", "gemini-1.0-pro"): (0.50, 1.50),
+}
+
+
+def api_cost(provider: str, model: str, in_tok: int, out_tok: int) -> float:
+    pin, pout = PRICE_BOOK.get((provider, model), (0.0, 0.0))
+    return (in_tok * pin + out_tok * pout) / 1e6
+
+
+#: simulated answer quality per model tier (drives benchmark comparisons)
+_MODEL_QUALITY: dict[str, float] = {
+    "gpt-4o": 0.95, "gpt-4-turbo": 0.93, "gpt-4o-mini": 0.78,
+    "gpt-3.5-turbo": 0.70, "claude-3-5-sonnet": 0.95, "claude-3-opus": 0.94,
+    "claude-3-sonnet": 0.88, "claude-3-haiku": 0.75, "gemini-1.5-pro": 0.92,
+    "gemini-1.5-flash": 0.80, "gemini-1.0-pro": 0.72,
+}
+
+
+# -- ABC ------------------------------------------------------------------------
+
+
+class InferenceEngine(abc.ABC):
+    @abc.abstractmethod
+    def initialize(self) -> None: ...
+
+    @abc.abstractmethod
+    def infer(self, request: InferenceRequest) -> InferenceResponse: ...
+
+    @abc.abstractmethod
+    def infer_batch(
+        self, requests: list[InferenceRequest]
+    ) -> list[InferenceResponse]: ...
+
+    @abc.abstractmethod
+    def shutdown(self) -> None: ...
+
+
+# -- simulated API engine ---------------------------------------------------------
+
+
+class SimulatedAPIEngine(InferenceEngine):
+    """Deterministic provider stand-in.
+
+    Latency = base + per-token * output_tokens (+ deterministic jitter from
+    the prompt hash).  Responses are a deterministic transform of the
+    prompt, so caching benchmarks observe real hit/miss behaviour.  Set
+    ``wall_clock=False`` to account latency without sleeping (fast
+    benchmarks compute throughput from accounted latency).
+    """
+
+    def __init__(
+        self,
+        model: EngineModelConfig,
+        *,
+        base_latency_ms: float = 250.0,
+        per_token_ms: float = 0.6,
+        wall_clock: bool = False,
+        fail_every: int = 0,  # inject a recoverable failure every N calls
+    ):
+        self.model = model
+        self.base_latency_ms = base_latency_ms
+        self.per_token_ms = per_token_ms
+        self.wall_clock = wall_clock
+        self.fail_every = fail_every
+        self.calls = 0
+        self.total_cost = 0.0
+        self.initialized = False
+
+    def initialize(self) -> None:
+        self.initialized = True
+
+    def shutdown(self) -> None:
+        self.initialized = False
+
+    @staticmethod
+    def _count_tokens(text: str) -> int:
+        return max(1, len(text.split()))
+
+    def _respond(self, prompt: str, max_tokens: int) -> str:
+        h = hashlib.sha256(prompt.encode()).hexdigest()
+        hv = int(h[:8], 16)
+        if prompt.startswith("[Judge]"):
+            # deterministic judge behaviour, with a rare malformed response
+            # (exercises the unparseable-logging path; paper §5.6 saw 0.12%)
+            if hv % 797 == 0:
+                return "I cannot assess this response."
+            if "Winner:" in prompt or "Response A:" in prompt:
+                return f"Winner: {'A' if hv % 2 == 0 else 'B'} — clearer answer."
+            scale = 5
+            m = re.search(r"1-(\d+) scale", prompt)
+            if m:
+                scale = int(m.group(1))
+            # content-sensitive: degraded responses ("flub" fillers from
+            # low-tier simulated models) score lower, plus mild hash noise —
+            # so judge metrics track real quality differences
+            m2 = re.search(r"Response: (.*)", prompt, re.DOTALL)
+            resp = m2.group(1) if m2 else ""
+            flubs = resp.count("flub")
+            score = max(1, min(scale, scale - flubs + (hv % 2)))
+            return f"Score: {score}. Concise and mostly accurate."
+        words = prompt.split()
+        # deterministic "answer": echo of salient words + hash suffix.
+        # Quality scales with the (simulated) model tier so model
+        # comparisons observe real, stable differences.
+        quality = _MODEL_QUALITY.get(self.model.model_name, 0.8)
+        salient = [w for w in words if len(w) > 3][: max(3, max_tokens // 4)]
+        kept = []
+        for i, w in enumerate(salient):
+            wh = int(hashlib.sha256(f"{w}{i}{h[:4]}".encode()).hexdigest()[:4], 16)
+            if (wh % 1000) / 1000.0 < quality:
+                kept.append(w)
+            else:
+                kept.append(f"flub{wh % 97}")
+        return " ".join(kept + [f"ans_{h[:8]}"])
+
+    def infer(self, request: InferenceRequest) -> InferenceResponse:
+        self.calls += 1
+        if self.fail_every and self.calls % self.fail_every == 0:
+            return InferenceResponse(
+                text="", input_tokens=0, output_tokens=0,
+                latency_ms=self.base_latency_ms, error="rate_limited_429",
+            )
+        text = self._respond(request.prompt, request.max_tokens)
+        in_tok = self._count_tokens(request.prompt)
+        out_tok = min(self._count_tokens(text), request.max_tokens)
+        jitter = int(hashlib.sha256(request.prompt.encode()).hexdigest()[:4], 16)
+        latency = self.base_latency_ms + self.per_token_ms * out_tok + jitter % 50
+        if self.wall_clock:
+            time.sleep(latency / 1000.0)
+        cost = api_cost(self.model.provider, self.model.model_name, in_tok, out_tok)
+        self.total_cost += cost
+        return InferenceResponse(
+            text=text, input_tokens=in_tok, output_tokens=out_tok,
+            latency_ms=latency, cost_usd=cost,
+        )
+
+    def infer_batch(self, requests: list[InferenceRequest]) -> list[InferenceResponse]:
+        return [self.infer(r) for r in requests]
+
+
+# -- local JAX engine ----------------------------------------------------------------
+
+
+class LocalJaxEngine(InferenceEngine):
+    """Serve an assigned architecture via the continuous-batching scheduler."""
+
+    def __init__(self, model: EngineModelConfig, *, n_slots: int = 8,
+                 max_len: int = 256):
+        self.model_cfg = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.initialized = False
+        self._scheduler = None
+        self._tokenizer = None
+        self._next_id = 0
+        # worker threads share one scheduler; it is the batching layer, so
+        # concurrent infer_batch calls serialize (slots multiplex inside)
+        self._lock = __import__("threading").Lock()
+
+    def initialize(self) -> None:
+        if self.initialized:
+            return
+        import jax
+
+        from repro.configs import get_config
+        from repro.data.tokenizer import HashTokenizer
+        from repro.models import params as pm
+        from repro.models.model import build_model
+        from repro.serve.scheduler import ContinuousBatcher
+
+        cfg = get_config(self.model_cfg.model_name)
+        if self.model_cfg.reduced:
+            cfg = cfg.reduced()
+        self._cfg = cfg
+        self._tokenizer = HashTokenizer(cfg.vocab_size)
+        model = build_model(cfg, remat="none")
+        params = pm.init_params(jax.random.key(self.model_cfg.seed), model.param_specs())
+        self._scheduler = ContinuousBatcher(
+            model, cfg, params,
+            n_slots=self.n_slots, max_len=self.max_len,
+            eos_id=self._tokenizer.eos_id,
+            temperature=self.model_cfg.temperature,
+        )
+        self.initialized = True
+
+    def shutdown(self) -> None:
+        self._scheduler = None
+        self.initialized = False
+
+    def infer(self, request: InferenceRequest) -> InferenceResponse:
+        return self.infer_batch([request])[0]
+
+    def infer_batch(self, requests: list[InferenceRequest]) -> list[InferenceResponse]:
+        with self._lock:
+            return self._infer_batch_locked(requests)
+
+    def _infer_batch_locked(
+        self, requests: list[InferenceRequest]
+    ) -> list[InferenceResponse]:
+        from repro.serve.scheduler import Request
+
+        self.initialize()
+        t0 = time.monotonic()
+        id_map: dict[int, int] = {}
+        for i, r in enumerate(requests):
+            rid = self._next_id
+            self._next_id += 1
+            id_map[rid] = i
+            toks = self._tokenizer.encode(r.prompt)[: self.max_len // 2]
+            self._scheduler.submit(
+                Request(
+                    request_id=rid,
+                    prompt_tokens=toks or [self._tokenizer.bos_id],
+                    max_new_tokens=min(
+                        r.max_tokens, self.max_len - len(toks) - 1
+                    ),
+                )
+            )
+        completions = self._scheduler.run_to_completion()
+        self._scheduler.completions = []
+        out: list[InferenceResponse | None] = [None] * len(requests)
+        for c in completions:
+            if c.request_id not in id_map:
+                continue
+            i = id_map[c.request_id]
+            text = self._tokenizer.decode(c.tokens)
+            out[i] = InferenceResponse(
+                text=text,
+                input_tokens=c.prompt_len,
+                output_tokens=len(c.tokens),
+                latency_ms=c.latency_s * 1000.0,
+            )
+        dt = time.monotonic() - t0
+        for i, r in enumerate(out):
+            if r is None:  # pragma: no cover
+                out[i] = InferenceResponse(
+                    text="", input_tokens=0, output_tokens=0,
+                    latency_ms=dt * 1000.0, error="lost",
+                )
+        return out  # type: ignore[return-value]
+
+
+# -- registry (Listing 1) ------------------------------------------------------------
+
+_ENGINE_CACHE: dict[str, InferenceEngine] = {}
+
+
+def engine_config_json(model: EngineModelConfig, inference: InferenceConfig) -> str:
+    return json.dumps(
+        {"model": dataclasses.asdict(model),
+         "inference": {k: (v.value if hasattr(v, "value") else v)
+                       for k, v in dataclasses.asdict(inference).items()}},
+        sort_keys=True,
+    )
+
+
+def create_engine(model: EngineModelConfig, **kw: Any) -> InferenceEngine:
+    if model.provider == "local":
+        return LocalJaxEngine(model, **kw)
+    return SimulatedAPIEngine(model, **kw)
+
+
+def get_engine(
+    model: EngineModelConfig, inference: InferenceConfig, **kw: Any
+) -> InferenceEngine:
+    key = engine_config_json(model, inference) + json.dumps(kw, sort_keys=True, default=str)
+    engine = _ENGINE_CACHE.get(key)
+    if engine is None:
+        engine = create_engine(model, **kw)
+        engine.initialize()
+        _ENGINE_CACHE[key] = engine
+    return engine
+
+
+def retry_with_backoff(
+    fn, *, max_retries: int = 3, base_delay: float = 1.0,
+    sleep=time.sleep,
+):
+    """Exponential backoff for recoverable errors (429/5xx; paper §A.4)."""
+    last: InferenceResponse | None = None
+    for attempt in range(max_retries + 1):
+        resp = fn()
+        if resp.error is None:
+            return resp
+        recoverable = any(
+            code in (resp.error or "") for code in ("429", "500", "502", "503")
+        )
+        if not recoverable:
+            return resp
+        last = resp
+        if attempt < max_retries:
+            sleep(base_delay * math.pow(2.0, attempt))
+    return last

@@ -1,0 +1,133 @@
+"""Token-bucket rate limiting — the paper's Algorithm 1, verbatim.
+
+Two buckets per worker: requests-per-minute and tokens-per-minute, each
+refilled continuously at ``limit/60`` per second.  The global limit is split
+evenly across ``n_workers`` (per-executor rate limiting); §6.1 of the paper
+notes this is suboptimal under skew — :class:`AdaptiveLimiter` implements
+the adaptive redistribution the paper lists as future work: every window,
+unused budget is re-granted proportionally to observed demand.
+
+For the local JAX engine the same mechanism is *admission control*: the
+"token" budget becomes the KV-residency/step quota of the continuous
+batching scheduler (DESIGN.md §2).
+
+The clock is injectable so tests run deterministically without sleeping.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+
+class TokenBucket:
+    """Algorithm 1: Acquire(estimated_tokens) blocks until budget allows."""
+
+    def __init__(
+        self,
+        rpm_limit: float,
+        tpm_limit: float,
+        n_workers: int = 1,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.r = rpm_limit / n_workers          # per-worker request limit
+        self.t = tpm_limit / n_workers          # per-worker token limit
+        self.request_tokens = self.r
+        self.token_tokens = self.t
+        self.clock = clock
+        self.sleep = sleep
+        self.last_update = clock()
+        self.total_wait = 0.0
+        self.acquires = 0
+        self._lock = threading.Lock()
+
+    def _refill(self) -> None:
+        now = self.clock()
+        elapsed = now - self.last_update
+        self.request_tokens = min(self.r, self.request_tokens + elapsed * self.r / 60.0)
+        self.token_tokens = min(self.t, self.token_tokens + elapsed * self.t / 60.0)
+        self.last_update = now
+
+    def acquire(self, estimated_tokens: float = 0.0) -> float:
+        """Blocks until one request + ``estimated_tokens`` fit; returns wait s."""
+        with self._lock:
+            self._refill()
+            wait = 0.0
+            if self.request_tokens < 1.0:
+                wait = max(wait, (1.0 - self.request_tokens) * 60.0 / self.r)
+            if self.token_tokens < estimated_tokens:
+                wait = max(
+                    wait, (estimated_tokens - self.token_tokens) * 60.0 / self.t
+                )
+            if wait > 0:
+                self.sleep(wait)
+                self.total_wait += wait
+                self._refill()
+            self.request_tokens -= 1.0
+            self.token_tokens -= estimated_tokens
+            self.acquires += 1
+            return wait
+
+
+class AdaptiveLimiter:
+    """Global-limit coordinator with windowed budget redistribution.
+
+    Workers draw from per-worker buckets; every ``window`` seconds the
+    coordinator reassigns each worker's share of the global RPM/TPM
+    proportionally to its demand (acquires) in the last window, with a
+    floor so idle workers can restart.  This removes the §6.1 skew
+    inefficiency of static even splits.
+    """
+
+    def __init__(
+        self,
+        rpm_limit: float,
+        tpm_limit: float,
+        n_workers: int,
+        *,
+        window: float = 5.0,
+        floor: float = 0.1,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.rpm, self.tpm, self.n = rpm_limit, tpm_limit, n_workers
+        self.window, self.floor = window, floor
+        self.clock = clock
+        self.buckets = [
+            TokenBucket(rpm_limit, tpm_limit, n_workers, clock=clock, sleep=sleep)
+            for _ in range(n_workers)
+        ]
+        self._last_counts = [0] * n_workers
+        self._last_rebalance = clock()
+        self._lock = threading.Lock()
+
+    def acquire(self, worker: int, estimated_tokens: float = 0.0) -> float:
+        self._maybe_rebalance()
+        return self.buckets[worker].acquire(estimated_tokens)
+
+    def shares(self) -> list[float]:
+        return [b.r * self.n / self.rpm / self.n for b in self.buckets]
+
+    def _maybe_rebalance(self) -> None:
+        with self._lock:
+            now = self.clock()
+            if now - self._last_rebalance < self.window:
+                return
+            demand = [
+                b.acquires - last
+                for b, last in zip(self.buckets, self._last_counts)
+            ]
+            total = sum(demand)
+            if total > 0:
+                weights = [
+                    self.floor / self.n + (1 - self.floor) * d / total
+                    for d in demand
+                ]
+                for b, w in zip(self.buckets, weights):
+                    b.r = self.rpm * w
+                    b.t = self.tpm * w
+            self._last_counts = [b.acquires for b in self.buckets]
+            self._last_rebalance = now

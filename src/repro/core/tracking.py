@@ -1,0 +1,93 @@
+"""MLflow-style local experiment tracking (paper §A.5).
+
+One directory per run: ``params.json`` (full task config), ``metrics.json``
+(values + CI bounds as separate entries, matching the paper's layout),
+``tags.json``, ``artifacts/`` (raw per-example scores and responses)."""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import os
+import time
+import uuid
+
+import numpy as np
+
+from repro.core.config import EvalTask
+from repro.core.runner import EvalResult
+
+
+class RunTracker:
+    def __init__(self, root: str = "experiments/runs"):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def log_run(self, task: EvalTask, result: EvalResult, **tags: str) -> str:
+        run_id = f"{time.strftime('%Y%m%d-%H%M%S')}-{uuid.uuid4().hex[:6]}"
+        rdir = os.path.join(self.root, run_id)
+        os.makedirs(os.path.join(rdir, "artifacts"), exist_ok=True)
+
+        with open(os.path.join(rdir, "params.json"), "w") as f:
+            f.write(task.to_json())
+
+        metrics_flat: dict[str, float] = {}
+        for name, mv in result.metrics.items():
+            metrics_flat[name] = mv.value
+            metrics_flat[f"{name}_ci_lower"] = mv.ci[0]
+            metrics_flat[f"{name}_ci_upper"] = mv.ci[1]
+            metrics_flat[f"{name}_n"] = mv.n
+            metrics_flat[f"{name}_unscored"] = mv.n_unscored
+        metrics_flat["throughput_per_min"] = result.throughput_per_min
+        for k, v in result.timing.items():
+            metrics_flat[f"time_{k}"] = v
+        with open(os.path.join(rdir, "metrics.json"), "w") as f:
+            json.dump(metrics_flat, f, indent=1)
+
+        all_tags = {
+            "model": task.model.model_name,
+            "provider": task.model.provider,
+            "task_id": task.task_id,
+            "fingerprint": task.fingerprint(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            **tags,
+        }
+        with open(os.path.join(rdir, "tags.json"), "w") as f:
+            json.dump(all_tags, f, indent=1)
+
+        with gzip.open(
+            os.path.join(rdir, "artifacts", "results.jsonl.gz"), "wt"
+        ) as f:
+            for i, text in enumerate(result.responses):
+                row = {"index": i, "response": text}
+                for m, vals in result.scores.items():
+                    v = float(vals[i])
+                    row[m] = None if np.isnan(v) else v
+                f.write(json.dumps(row) + "\n")
+        with open(os.path.join(rdir, "artifacts", "run_stats.json"), "w") as f:
+            json.dump(
+                {
+                    "cache": result.cache_stats,
+                    "engine": result.engine_stats,
+                    "failures": result.failures,
+                },
+                f,
+                indent=1,
+                default=str,
+            )
+        return run_id
+
+    def list_runs(self) -> list[str]:
+        return sorted(
+            d for d in os.listdir(self.root)
+            if os.path.isdir(os.path.join(self.root, d))
+        )
+
+    def load_metrics(self, run_id: str) -> dict:
+        with open(os.path.join(self.root, run_id, "metrics.json")) as f:
+            return json.load(f)
+
+    def load_tags(self, run_id: str) -> dict:
+        with open(os.path.join(self.root, run_id, "tags.json")) as f:
+            return json.load(f)

@@ -1,0 +1,22 @@
+from repro.data.datasets import (
+    instruction_examples,
+    mixed_examples,
+    qa_examples,
+    rag_examples,
+    summarization_examples,
+    token_stream,
+)
+from repro.data.templates import render, render_all
+from repro.data.tokenizer import HashTokenizer
+
+__all__ = [
+    "HashTokenizer",
+    "instruction_examples",
+    "mixed_examples",
+    "qa_examples",
+    "rag_examples",
+    "render",
+    "render_all",
+    "summarization_examples",
+    "token_stream",
+]

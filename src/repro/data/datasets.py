@@ -1,0 +1,145 @@
+"""Synthetic evaluation datasets (paper §5.1: factual QA, summarization,
+instruction-following) and a token-stream source for the training examples.
+
+Everything is deterministic in the seed: benchmarks and the caching
+workflow need identical prompts across runs to observe cache hits.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Iterator
+
+_TOPICS = [
+    "gravity", "photosynthesis", "volcanoes", "enzymes", "galaxies",
+    "antibodies", "semiconductors", "glaciers", "neurons", "polymers",
+    "currents", "isotopes", "ecosystems", "algorithms", "satellites",
+]
+_FACTS = [
+    "was discovered in {year}", "operates through {n} distinct phases",
+    "depends critically on temperature", "transfers energy between systems",
+    "exhibits periodic behavior", "varies across {n} orders of magnitude",
+]
+_INSTR = [
+    "Summarize the role of {topic} in two sentences.",
+    "List {n} key properties of {topic}.",
+    "Explain {topic} to a ten year old.",
+    "Compare {topic} with {topic2} and highlight one difference.",
+    "Write a short quiz question about {topic}.",
+]
+
+
+def qa_examples(n: int, seed: int = 0) -> list[dict]:
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        topic = rng.choice(_TOPICS)
+        fact = rng.choice(_FACTS).format(year=1800 + rng.randint(0, 220),
+                                         n=rng.randint(2, 9))
+        question = f"What is known about {topic} (case {i})?"
+        reference = f"{topic} {fact}"
+        out.append(
+            {"id": f"qa-{seed}-{i}", "question": question,
+             "reference": reference, "domain": "qa"}
+        )
+    return out
+
+
+def summarization_examples(n: int, seed: int = 0) -> list[dict]:
+    rng = random.Random(seed + 1)
+    out = []
+    for i in range(n):
+        topic = rng.choice(_TOPICS)
+        sents = [
+            f"{topic} {rng.choice(_FACTS).format(year=1900 + rng.randint(0, 120), n=rng.randint(2, 9))}."
+            for _ in range(rng.randint(4, 8))
+        ]
+        doc = " ".join(sents)
+        out.append(
+            {
+                "id": f"sum-{seed}-{i}",
+                "question": f"Summarize: {doc}",
+                "reference": sents[0],
+                "domain": "summarization",
+            }
+        )
+    return out
+
+
+def instruction_examples(n: int, seed: int = 0) -> list[dict]:
+    rng = random.Random(seed + 2)
+    out = []
+    for i in range(n):
+        topic, topic2 = rng.sample(_TOPICS, 2)
+        instr = rng.choice(_INSTR).format(topic=topic, topic2=topic2,
+                                          n=rng.randint(2, 5))
+        out.append(
+            {
+                "id": f"instr-{seed}-{i}",
+                "question": instr,
+                "reference": f"A helpful response about {topic}.",
+                "domain": "instruction",
+            }
+        )
+    return out
+
+
+def mixed_examples(n: int, seed: int = 0) -> list[dict]:
+    """The paper's multi-domain evaluation mix (§5.1)."""
+    per = n // 3
+    out = (
+        qa_examples(per, seed)
+        + summarization_examples(per, seed)
+        + instruction_examples(n - 2 * per, seed)
+    )
+    rng = random.Random(seed + 3)
+    rng.shuffle(out)
+    return out
+
+
+def rag_examples(n: int, seed: int = 0) -> list[dict]:
+    """QA with retrieved-context chunks for the RAG metric family."""
+    rng = random.Random(seed + 4)
+    out = []
+    for i, ex in enumerate(qa_examples(n, seed)):
+        relevant = ex["reference"]
+        distractors = [
+            f"{rng.choice(_TOPICS)} {rng.choice(_FACTS).format(year=1950, n=3)}"
+            for _ in range(2)
+        ]
+        chunks = distractors[:1] + [relevant] + distractors[1:]
+        ex.update(
+            {
+                "id": f"rag-{seed}-{i}",
+                "contexts": chunks,
+                "relevant_index": 1,
+                "domain": "rag",
+            }
+        )
+        out.append(ex)
+    return out
+
+
+def token_stream(
+    tokenizer, seq_len: int, batch: int, seed: int = 0
+) -> Iterator[dict]:
+    """Deterministic LM training batches: tokens + next-token labels."""
+    import numpy as np
+
+    rng = random.Random(seed)
+    while True:
+        rows = []
+        for _ in range(batch):
+            text = " ".join(
+                f"{rng.choice(_TOPICS)} {rng.choice(_FACTS).format(year=2000, n=4)}"
+                for _ in range(seq_len // 6 + 2)
+            )
+            ids = tokenizer.encode(text)[:seq_len]
+            ids = ids + [tokenizer.pad_id] * (seq_len - len(ids))
+            rows.append(ids)
+        tokens = np.asarray(rows, np.int32)
+        labels = np.concatenate(
+            [tokens[:, 1:], np.full((batch, 1), -1, np.int32)], axis=1
+        )
+        labels = np.where(tokens[:, :] == tokenizer.pad_id, -1, labels)
+        yield {"tokens": tokens, "labels": labels}

@@ -1,0 +1,25 @@
+"""Prompt templating (stage 1 of the runner: prompt preparation).
+
+The paper uses Jinja2; offline we support the ``{column}`` subset via
+``str.format_map`` with strict missing-key errors — enough for every paper
+workflow, zero dependencies.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+
+class _Strict(dict):
+    def __missing__(self, key: str) -> str:
+        raise KeyError(
+            f"prompt template references missing column {key!r}"
+        )
+
+
+def render(template: str, row: Mapping) -> str:
+    return template.format_map(_Strict(row))
+
+
+def render_all(template: str, rows: list[Mapping]) -> list[str]:
+    return [render(template, r) for r in rows]

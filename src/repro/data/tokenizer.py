@@ -1,0 +1,50 @@
+"""Deterministic hash tokenizer (no external vocab files; DESIGN.md §4.1).
+
+Word-level feature hashing into the architecture's exact vocab size, so
+embedding/unembedding *cost* is faithful to the assigned configs.  Decoding
+uses a process-local inverse memory (hash tokenizers are not invertible in
+general); round-trips hold for any word the process has encoded — which is
+all the evaluation pipeline needs.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+
+_WORD_RE = re.compile(r"\w+|[^\w\s]")
+
+PAD_ID, EOS_ID, BOS_ID, UNK_ID = 0, 1, 2, 3
+N_SPECIAL = 4
+
+
+class HashTokenizer:
+    def __init__(self, vocab_size: int):
+        assert vocab_size > N_SPECIAL + 1
+        self.vocab_size = vocab_size
+        self.pad_id, self.eos_id, self.bos_id, self.unk_id = (
+            PAD_ID, EOS_ID, BOS_ID, UNK_ID,
+        )
+        self._inverse: dict[int, str] = {}
+
+    def token_id(self, word: str) -> int:
+        h = int.from_bytes(
+            hashlib.md5(word.encode()).digest()[:8], "little"
+        )
+        tid = N_SPECIAL + h % (self.vocab_size - N_SPECIAL)
+        self._inverse.setdefault(tid, word)
+        return tid
+
+    def encode(self, text: str, *, add_bos: bool = True) -> list[int]:
+        ids = [self.token_id(w) for w in _WORD_RE.findall(text)]
+        return ([self.bos_id] + ids) if add_bos else ids
+
+    def decode(self, ids: list[int]) -> str:
+        words = []
+        for t in ids:
+            if t == self.eos_id:
+                break
+            if t < N_SPECIAL:
+                continue
+            words.append(self._inverse.get(int(t), f"<{int(t)}>"))
+        return " ".join(words)

@@ -1,0 +1,4 @@
+from repro.ft.failure_sim import Fault, FlakyFn, simulate_training
+from repro.ft.workers import PoolStats, ShardResult, WorkerPool
+
+__all__ = ["Fault", "FlakyFn", "PoolStats", "ShardResult", "WorkerPool", "simulate_training"]

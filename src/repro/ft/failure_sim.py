@@ -1,0 +1,80 @@
+"""Failure-injection harness: deterministic chaos for the worker pool and
+the training loop (node death, stragglers, transient API errors).
+
+``FlakyFn`` wraps a shard function with scheduled failures/delays keyed by
+(shard_index, attempt) so tests reproduce exactly.  ``simulate_training``
+drives a train loop with injected crashes and proves checkpoint/restart
+equivalence: the crashed-and-restarted run must produce bitwise-identical
+parameters to an uninterrupted run (the invariant the test suite asserts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class Fault:
+    shard: int
+    attempt: int            # 1-based: fail the Nth attempt of this shard
+    kind: str = "raise"     # raise | delay
+    delay_s: float = 0.0
+
+
+class FlakyFn:
+    """Wrap fn(idx, shard, worker) with deterministic fault injection."""
+
+    def __init__(self, fn: Callable, faults: list[Fault]):
+        self.fn = fn
+        self.faults = {(f.shard, f.attempt): f for f in faults}
+        self.attempt_counts: dict[int, int] = {}
+        self.injected: list[tuple[int, int, str]] = []
+
+    def __call__(self, idx: int, shard: Any, worker: int):
+        attempt = self.attempt_counts.get(idx, 0) + 1
+        self.attempt_counts[idx] = attempt
+        fault = self.faults.get((idx, attempt))
+        if fault is not None:
+            self.injected.append((idx, attempt, fault.kind))
+            if fault.kind == "raise":
+                raise RuntimeError(f"injected failure shard={idx} attempt={attempt}")
+            if fault.kind == "delay":
+                time.sleep(fault.delay_s)
+        return self.fn(idx, shard, worker)
+
+
+def simulate_training(
+    train_step: Callable,
+    init_state: Any,
+    batches: list[Any],
+    *,
+    ckpt_dir: str,
+    crash_at_step: int | None = None,
+    ckpt_every: int = 2,
+) -> Any:
+    """Run a training loop with checkpointing; optionally 'crash' (return
+    early) at ``crash_at_step``.  Call again with crash_at_step=None to
+    resume from the latest checkpoint and finish."""
+    from repro.ckpt.checkpoint import (
+        latest_step,
+        restore_checkpoint,
+        save_checkpoint,
+    )
+
+    start = 0
+    state = init_state
+    last = latest_step(ckpt_dir)
+    if last is not None:
+        state, _ = restore_checkpoint(ckpt_dir, last, template=init_state)
+        start = last
+    for step in range(start, len(batches)):
+        state = train_step(state, batches[step])
+        done = step + 1
+        if done % ckpt_every == 0:
+            if latest_step(ckpt_dir) != done:
+                save_checkpoint(ckpt_dir, done, state)
+        if crash_at_step is not None and done >= crash_at_step:
+            return None  # simulated node death
+    return state

@@ -1,0 +1,174 @@
+"""Fault-tolerant shard execution: the "executor pool" with straggler
+mitigation and failure recovery.
+
+Spark recovers skew with dynamic work stealing; a gang-scheduled SPMD step
+cannot (DESIGN.md §2), so the unit of recovery here is the *shard*: the
+evaluation runner splits examples into shards and this pool
+
+* runs shards on a thread pool ("executors"),
+* retries failed shards (recoverable errors) up to ``max_retries``,
+* **speculatively re-issues** shards that run longer than
+  ``straggler_factor`` x the median completed-shard time (first finisher
+  wins, the loser's result is discarded) — Spark/MapReduce speculative
+  execution,
+* tracks per-worker heartbeats so a simulated dead worker's shards are
+  reassigned.
+
+Deterministic failure injection hooks make all of this testable on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass
+class ShardResult:
+    index: int
+    value: Any
+    attempts: int
+    worker: int
+    duration_s: float
+    speculative: bool = False
+
+
+@dataclasses.dataclass
+class PoolStats:
+    shards: int = 0
+    retries: int = 0
+    speculative_launches: int = 0
+    speculative_wins: int = 0
+    failures: int = 0
+
+
+class WorkerPool:
+    def __init__(
+        self,
+        n_workers: int = 4,
+        *,
+        max_retries: int = 3,
+        straggler_factor: float = 0.0,  # 0 = speculative execution off
+        straggler_min_s: float = 0.05,
+        poll_s: float = 0.01,
+    ):
+        self.n_workers = n_workers
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self.poll_s = poll_s
+        self.stats = PoolStats()
+        self.heartbeats: dict[int, float] = {}
+        self._worker_ids = threading.local()
+        self._next_worker = iter(range(10**9))
+        self._lock = threading.Lock()
+
+    def _worker_id(self) -> int:
+        wid = getattr(self._worker_ids, "id", None)
+        if wid is None:
+            with self._lock:
+                wid = next(self._next_worker)
+            self._worker_ids.id = wid
+        return wid
+
+    def _run_shard(self, fn: Callable, index: int, shard: Any, attempt: int,
+                   speculative: bool) -> ShardResult:
+        wid = self._worker_id()
+        t0 = time.monotonic()
+        self.heartbeats[wid] = t0
+        value = fn(index, shard, wid)
+        dt = time.monotonic() - t0
+        self.heartbeats[wid] = time.monotonic()
+        return ShardResult(
+            index=index, value=value, attempts=attempt, worker=wid,
+            duration_s=dt, speculative=speculative,
+        )
+
+    def map_shards(
+        self, fn: Callable[[int, Any, int], Any], shards: Sequence[Any]
+    ) -> list[ShardResult]:
+        """Run ``fn(shard_index, shard, worker_id)`` over all shards."""
+        results: dict[int, ShardResult] = {}
+        completed_durations: list[float] = []
+        self.stats.shards += len(shards)
+
+        with ThreadPoolExecutor(max_workers=self.n_workers) as pool:
+            running: dict[Future, tuple[int, int, bool, float]] = {}
+            pending = list(enumerate(shards))
+            attempts = {i: 0 for i in range(len(shards))}
+            speculated: set[int] = set()
+
+            def launch(i: int, speculative: bool = False) -> None:
+                attempts[i] += 1
+                fut = pool.submit(
+                    self._run_shard, fn, i, shards[i], attempts[i], speculative
+                )
+                running[fut] = (i, attempts[i], speculative, time.monotonic())
+
+            while pending and len(running) < self.n_workers:
+                i, _ = pending.pop(0)
+                launch(i)
+
+            while running:
+                done, _ = wait(
+                    list(running), timeout=self.poll_s,
+                    return_when=FIRST_COMPLETED,
+                )
+                for fut in done:
+                    i, attempt, speculative, _t0 = running.pop(fut)
+                    try:
+                        res = fut.result()
+                    except Exception:
+                        self.stats.failures += 1
+                        if attempt <= self.max_retries and i not in results:
+                            self.stats.retries += 1
+                            launch(i, speculative)
+                        elif i not in results and not any(
+                            ri == i for ri, *_ in running.values()
+                        ):
+                            raise
+                        continue
+                    if i not in results:
+                        results[i] = res
+                        completed_durations.append(res.duration_s)
+                        if res.speculative:
+                            self.stats.speculative_wins += 1
+
+                # refill free workers
+                while pending and len(running) < self.n_workers:
+                    i, _ = pending.pop(0)
+                    launch(i)
+
+                # straggler detection: re-issue slow in-flight shards
+                if (
+                    self.straggler_factor
+                    and completed_durations
+                    and not pending
+                    and len(running) < self.n_workers
+                ):
+                    median = sorted(completed_durations)[
+                        len(completed_durations) // 2
+                    ]
+                    threshold = max(
+                        self.straggler_min_s, self.straggler_factor * median
+                    )
+                    now = time.monotonic()
+                    for fut, (i, attempt, spec, t0) in list(running.items()):
+                        if (
+                            not spec
+                            and i not in speculated
+                            and i not in results
+                            and now - t0 > threshold
+                            and len(running) < self.n_workers
+                        ):
+                            speculated.add(i)
+                            self.stats.speculative_launches += 1
+                            launch(i, speculative=True)
+
+        missing = [i for i in range(len(shards)) if i not in results]
+        if missing:
+            raise RuntimeError(f"shards never completed: {missing}")
+        return [results[i] for i in range(len(shards))]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper / path selection), ref.py (pure-jnp oracle for allclose tests).
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.bertscore.bertscore import bertscore_pr
+from repro.kernels.bertscore.ops import bertscore
+from repro.kernels.bertscore.ref import bertscore_ref
+
+__all__ = ["bertscore", "bertscore_pr", "bertscore_ref"]

@@ -1,0 +1,31 @@
+"""BERTScore wrapper with the F1 epilogue; selects kernel or jnp path."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bertscore.bertscore import bertscore_pr
+from repro.kernels.bertscore.ref import bertscore_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def bertscore(
+    cand: jax.Array,
+    ref: jax.Array,
+    cand_mask: jax.Array,
+    ref_mask: jax.Array,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(P, R, F1) per example."""
+    if use_pallas:
+        p, r = bertscore_pr(
+            cand, ref, cand_mask, ref_mask, interpret=interpret
+        )
+        f1 = 2 * p * r / jnp.maximum(p + r, 1e-9)
+        return p, r, f1
+    return bertscore_ref(cand, ref, cand_mask, ref_mask)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the BERTScore greedy-matching kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def bertscore_ref(
+    cand: jax.Array,       # (B, Lc, D) token embeddings (need not be normalized)
+    ref: jax.Array,        # (B, Lr, D)
+    cand_mask: jax.Array,  # (B, Lc) bool/0-1
+    ref_mask: jax.Array,   # (B, Lr)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(P, R, F1) per example — greedy max-cosine matching."""
+    f32 = jnp.float32
+    c = cand.astype(f32)
+    r = ref.astype(f32)
+    c = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
+    r = r / jnp.maximum(jnp.linalg.norm(r, axis=-1, keepdims=True), 1e-9)
+    sim = jnp.einsum("bcd,brd->bcr", c, r)  # (B, Lc, Lr)
+    cm = cand_mask.astype(bool)
+    rm = ref_mask.astype(bool)
+    sim = jnp.where(cm[:, :, None] & rm[:, None, :], sim, NEG_INF)
+
+    row_max = jnp.max(sim, axis=2)  # best ref per cand token
+    col_max = jnp.max(sim, axis=1)  # best cand per ref token
+    p = jnp.sum(jnp.where(cm, row_max, 0.0), axis=1) / jnp.maximum(
+        jnp.sum(cm, axis=1), 1
+    )
+    r_ = jnp.sum(jnp.where(rm, col_max, 0.0), axis=1) / jnp.maximum(
+        jnp.sum(rm, axis=1), 1
+    )
+    f1 = 2 * p * r_ / jnp.maximum(p + r_, 1e-9)
+    return p, r_, f1

@@ -1,0 +1,11 @@
+from repro.kernels.bootstrap.bootstrap import bootstrap_means
+from repro.kernels.bootstrap.ops import bootstrap_ci
+from repro.kernels.bootstrap.ref import bootstrap_means_ref, mix_bits, poisson1_weight
+
+__all__ = [
+    "bootstrap_ci",
+    "bootstrap_means",
+    "bootstrap_means_ref",
+    "mix_bits",
+    "poisson1_weight",
+]

@@ -1,0 +1,134 @@
+"""Poisson-bootstrap resample-reduce Pallas TPU kernel.
+
+The statistics stage at paper scale is B x n ~ 10^3 x 10^6 resample-reduce —
+too big to materialize resample indices in HBM (that would be 4 TB of
+int32).  TPU-native design (DESIGN.md §6):
+
+* **PRNG-on-the-fly**: resample weights are generated *inside* the kernel
+  from a counter-based mixer (murmur3-finalizer over (boot_row, position,
+  seed)) — zero HBM traffic for randomness, fully deterministic given the
+  seed, and identical across shards.
+* **Poisson bootstrap**: weights w ~ Poisson(1) i.i.d. instead of an exact
+  multinomial resample.  This is the standard streaming/distributed
+  bootstrap (resample mean = sum(w*x)/sum(w)); no gather is needed, tiles
+  stream through VMEM.  Statistical equivalence is validated empirically by
+  the coverage benchmark (paper Table 5); the exact multinomial path exists
+  in ``repro/stats/bootstrap.py`` for host-scale n.
+* grid = (n_boot/bb, n/bn), data-tile axis innermost; (bb,) running sums in
+  VMEM scratch; means emitted on the last data tile.
+
+Truncation: the inverse-CDF lookup caps w at 7 (tail mass ~8e-5) — bias is
+< 1e-4 relative and far below bootstrap Monte-Carlo noise at B = 1000.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bootstrap.ref import POISSON1_CDF
+
+
+def _kernel(
+    data_ref,   # (1, bn)
+    seed_ref,   # (1, 1) uint32
+    out_ref,    # (bb, 1) f32 — means for this bootstrap-row block
+    swx_ref,    # VMEM (bb, 1) f32
+    sw_ref,     # VMEM (bb, 1) f32
+    *,
+    bb: int,
+    bn: int,
+    n: int,
+    n_tiles: int,
+):
+    ib = pl.program_id(0)
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        swx_ref[...] = jnp.zeros_like(swx_ref)
+        sw_ref[...] = jnp.zeros_like(sw_ref)
+
+    x = data_ref[0, :].astype(jnp.float32)  # (bn,)
+
+    u32 = jnp.uint32
+    boot = (
+        ib * bb + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 0)
+    ).astype(u32)
+    pos = (
+        it * bn + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
+    ).astype(u32)
+    seed = seed_ref[0, 0]
+
+    h = boot * u32(0x9E3779B1) ^ pos * u32(0x85EBCA77) ^ seed
+    h = h ^ (h >> u32(16))
+    h = h * u32(0x85EBCA6B)
+    h = h ^ (h >> u32(13))
+    h = h * u32(0xC2B2AE35)
+    h = h ^ (h >> u32(16))
+
+    u = (h >> u32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    w = jnp.zeros((bb, bn), jnp.float32)
+    for c in POISSON1_CDF:
+        w = w + (u >= jnp.float32(c)).astype(jnp.float32)
+
+    # mask the ragged tail (n may not divide the tile size)
+    valid = (it * bn + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)) < n
+    w = jnp.where(valid, w, 0.0)
+
+    swx_ref[:, 0] += w @ x
+    sw_ref[:, 0] += jnp.sum(w, axis=1)
+
+    @pl.when(it == n_tiles - 1)
+    def _final():
+        out_ref[:, 0] = swx_ref[:, 0] / jnp.maximum(sw_ref[:, 0], 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_boot", "block_boot", "block_n", "interpret")
+)
+def bootstrap_means(
+    data: jax.Array,  # (n,) f32
+    seed: jax.Array,  # () uint32
+    *,
+    n_boot: int = 1000,
+    block_boot: int = 128,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n_boot,) Poisson-bootstrap means of ``data``."""
+    n = data.shape[0]
+    bb = min(block_boot, n_boot)
+    assert n_boot % bb == 0, (n_boot, bb)
+    bn = min(block_n, n)
+    n_tiles = (n + bn - 1) // bn
+    n_pad = n_tiles * bn
+    if n_pad != n:
+        data = jnp.pad(data, (0, n_pad - n))
+
+    kernel = functools.partial(
+        _kernel, bb=bb, bn=bn, n=n, n_tiles=n_tiles
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_boot // bb, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda ib, it: (0, it)),
+            pl.BlockSpec((1, 1), lambda ib, it: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda ib, it: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_boot, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bb, 1), jnp.float32),
+            pltpu.VMEM((bb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        data.reshape(1, n_pad).astype(jnp.float32),
+        jnp.asarray(seed, jnp.uint32).reshape(1, 1),
+    )
+    return out[:, 0]

@@ -1,0 +1,37 @@
+"""Bootstrap CI wrapper: kernel (large n) or jnp ref (host scale), plus
+percentile extraction."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bootstrap.bootstrap import bootstrap_means
+from repro.kernels.bootstrap.ref import bootstrap_means_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_boot", "confidence", "use_pallas", "interpret")
+)
+def bootstrap_ci(
+    data: jax.Array,
+    seed: int = 0,
+    *,
+    n_boot: int = 1000,
+    confidence: float = 0.95,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(mean, lo, hi) percentile CI from Poisson-bootstrap means."""
+    if use_pallas:
+        means = bootstrap_means(
+            data, jnp.uint32(seed), n_boot=n_boot, interpret=interpret
+        )
+    else:
+        means = bootstrap_means_ref(data, n_boot, seed)
+    alpha = (1.0 - confidence) / 2.0
+    lo = jnp.quantile(means, alpha)
+    hi = jnp.quantile(means, 1.0 - alpha)
+    return jnp.mean(data), lo, hi

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the Poisson-bootstrap kernel.
+
+Implements the *identical* counter-based RNG (xorshift-mix) and Poisson(1)
+inverse-CDF lookup as the kernel, in plain jnp — kernel vs ref must agree
+bit-for-bit on the weights and to float tolerance on the means.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# cumulative Poisson(1) probabilities for k = 0..6 (k=7 tail mass ~8e-5)
+POISSON1_CDF = (
+    0.36787944117144233,
+    0.7357588823428847,
+    0.9196986029286058,
+    0.9810118431238462,
+    0.9963401531726563,
+    0.9994058151824183,
+    0.9999167588507119,
+)
+
+
+def mix_bits(boot: jax.Array, pos: jax.Array, seed: jax.Array) -> jax.Array:
+    """Counter-based 32-bit mixer (murmur3-style finalizer over a seeded
+    combination of the bootstrap-row and position counters)."""
+    u32 = jnp.uint32
+    h = (
+        boot.astype(u32) * u32(0x9E3779B1)
+        ^ pos.astype(u32) * u32(0x85EBCA77)
+        ^ seed.astype(u32)
+    )
+    h = h ^ (h >> u32(16))
+    h = h * u32(0x85EBCA6B)
+    h = h ^ (h >> u32(13))
+    h = h * u32(0xC2B2AE35)
+    h = h ^ (h >> u32(16))
+    return h
+
+
+def poisson1_weight(bits: jax.Array) -> jax.Array:
+    """Map uniform u32 bits -> Poisson(1) draw via inverse CDF (k <= 7)."""
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    w = jnp.zeros_like(u)
+    for c in POISSON1_CDF:
+        w = w + (u >= jnp.float32(c)).astype(jnp.float32)
+    return w
+
+
+def bootstrap_means_ref(
+    data: jax.Array,  # (n,) f32
+    n_boot: int,
+    seed: int,
+) -> jax.Array:
+    """(n_boot,) Poisson-bootstrap resample means."""
+    n = data.shape[0]
+    boot = jnp.arange(n_boot, dtype=jnp.uint32)[:, None]
+    pos = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    bits = mix_bits(boot, pos, jnp.uint32(seed))
+    w = poisson1_weight(bits)  # (n_boot, n)
+    sum_wx = w @ data.astype(jnp.float32)
+    sum_w = jnp.sum(w, axis=1)
+    return sum_wx / jnp.maximum(sum_w, 1.0)

@@ -1,0 +1,125 @@
+"""GQA decode-attention Pallas TPU kernel.
+
+Decode is HBM-bandwidth-bound: one query token per sequence against a long
+KV cache.  TPU-native design (DESIGN.md §6):
+
+* grid = (B, K, nS) with the cache-sequence axis innermost (sequential on
+  TPU), so the online-softmax state for the whole **query-head group** lives
+  in VMEM scratch across cache tiles;
+* each KV tile is read from HBM exactly once and shared by all G query
+  heads of its group (GQA grouping in-kernel, not via head replication);
+* per-sequence valid lengths arrive as a scalar-prefetch operand so ragged
+  continuous-batching batches mask correctly;
+* f32 accumulators, bf16/f32 inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    lengths_ref,  # SMEM (B,) int32 — scalar prefetch
+    q_ref,        # (1, 1, G, d)
+    k_ref,        # (1, 1, bs, d)
+    v_ref,        # (1, 1, bs, d)
+    o_ref,        # (1, 1, G, d)
+    m_ref,        # VMEM (G, 1) f32
+    l_ref,        # VMEM (G, 1) f32
+    acc_ref,      # VMEM (G, d) f32
+    *,
+    scale: float,
+    block_s: int,
+    n_s: int,
+):
+    b = pl.program_id(0)
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bs)
+
+    length = lengths_ref[b]
+    pos = i_s * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[:, 0] = m_new
+
+    @pl.when(i_s == n_s - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-37)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_s", "interpret")
+)
+def decode_attention(
+    q: jax.Array,        # (B, K, G, d)
+    k_cache: jax.Array,  # (B, K, S, d)
+    v_cache: jax.Array,  # (B, K, S, d)
+    lengths: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kh, g, d = q.shape
+    s = k_cache.shape[2]
+    if scale is None:
+        scale = d**-0.5
+    block_s = min(block_s, s)
+    assert s % block_s == 0, (s, block_s)
+    n_s = s // block_s
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_s=block_s, n_s=n_s
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, is_, lens: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, k_, is_, lens: (b_, k_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

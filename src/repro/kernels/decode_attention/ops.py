@@ -1,0 +1,37 @@
+"""Model-facing wrapper for the decode-attention kernel.
+
+Model layout: q (B, 1, H, d), cache (B, S, K, d), positions (B,) — the
+position of the *current* token; valid length = position + 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def decode_attention_bshd(
+    q: jax.Array,        # (B, 1, H, d)
+    k_cache: jax.Array,  # (B, S, K, d)
+    v_cache: jax.Array,  # (B, S, K, d)
+    positions: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qg = q[:, 0].reshape(b, kh, g, d)
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+    out = decode_attention(
+        qg, kt, vt, (positions + 1).astype(jnp.int32),
+        scale=scale, interpret=interpret,
+    )
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the GQA decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, K, G, d) — query heads grouped per KV head
+    k_cache: jax.Array,  # (B, K, S, d)
+    v_cache: jax.Array,  # (B, K, S, d)
+    lengths: jax.Array,  # (B,) int32 — valid cache positions per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    b, kh, g, d = q.shape
+    s = k_cache.shape[2]
+    if scale is None:
+        scale = d**-0.5
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,148 @@
+"""Flash-attention Pallas TPU kernel (prefill / train path).
+
+TPU-native tiling (DESIGN.md §6): the grid is (B, H, nq, nk) with the
+k-block axis innermost — TPU grids execute sequentially over the trailing
+dimension, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch and carries across k-blocks.  GQA is expressed *in the BlockSpec
+index maps*: k/v blocks are fetched from head ``h // group`` so a KV head's
+tiles are read once per query-head group, never duplicated in HBM.
+
+Block shapes default to (block_q x d) and (block_k x d) tiles sized for
+~1-2 MB of VMEM with d=128 MXU-aligned lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    q_ref,  # (1, 1, bq, d)
+    k_ref,  # (1, 1, bk, d)
+    v_ref,  # (1, 1, bk, d)
+    o_ref,  # (1, 1, bq, d)
+    m_ref,  # VMEM scratch (bq, 1) f32
+    l_ref,  # VMEM scratch (bq, 1) f32
+    acc_ref,  # VMEM scratch (bq, d) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        ) + q_offset
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]  # (bq,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])  # (bq, bk)
+    correction = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * correction + jnp.sum(p, axis=1)
+    acc = acc_ref[...] * correction[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-37)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "scale", "block_q", "block_k", "q_offset", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, d)
+    k: jax.Array,  # (B, K, Sk, d)
+    v: jax.Array,  # (B, K, Sk, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kheads, sk = k.shape[1], k.shape[2]
+    g = h // kheads
+    if scale is None:
+        scale = d**-0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_q, n_k = sq // block_q, sk // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

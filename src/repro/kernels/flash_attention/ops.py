@@ -1,0 +1,54 @@
+"""Model-facing wrapper for the flash-attention kernel.
+
+Accepts the model layout (B, S, H, d) and handles transposition, GQA head
+mapping and block-size selection.  ``interpret=True`` runs the kernel body
+in Python on CPU (how the test suite validates against ``ref.py``); on a
+real TPU the same call lowers through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _pick_block(s: int, target: int) -> int:
+    target = min(target, s)
+    for b in range(target, 0, -1):
+        if s % b == 0:
+            return b
+    return s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "q_offset", "interpret")
+)
+def flash_attention_bshd(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Sk, K, d)
+    v: jax.Array,  # (B, Sk, K, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_attention(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        scale=scale,
+        block_q=_pick_block(q.shape[1], 256),
+        block_k=_pick_block(k.shape[1], 512),
+        q_offset=q_offset,
+        interpret=interpret,
+    )
+    return jnp.transpose(out, (0, 2, 1, 3))

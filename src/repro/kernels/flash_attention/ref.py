@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout: q (B, H, Sq, d), k/v (B, K, Sk, d) with H = K * G (GQA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, d)
+    k: jax.Array,  # (B, K, Sk, d)
+    v: jax.Array,  # (B, K, Sk, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kheads, sk = k.shape[1], k.shape[2]
+    g = h // kheads
+    if scale is None:
+        scale = d**-0.5
+    qg = q.reshape(b, kheads, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * scale
+    if causal:
+        q_pos = jnp.arange(sq) + q_offset
+        k_pos = jnp.arange(sk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

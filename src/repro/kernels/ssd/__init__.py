@@ -1,0 +1,5 @@
+from repro.kernels.ssd.ops import ssd_apply
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd.ssd import ssd
+
+__all__ = ["ssd", "ssd_apply", "ssd_ref"]

@@ -1,0 +1,34 @@
+"""Wrapper selecting the SSD execution path.
+
+``use_pallas=False`` (default on CPU) routes to the chunked jnp
+implementation in ``models/ssm.py``; ``use_pallas=True`` calls the Mosaic
+kernel (``interpret=True`` for CPU validation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd as ssd_pallas
+from repro.models.ssm import ssd_chunked
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "use_pallas", "interpret")
+)
+def ssd_apply(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int = 256,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    if use_pallas:
+        return ssd_pallas(x, dt, a, b_mat, c_mat, chunk=chunk, interpret=interpret)
+    return ssd_chunked(x, dt, a, b_mat, c_mat, chunk)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the SSD (Mamba2) kernel: sequential recurrence.
+
+y_t = C_t^T h_t,   h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t B_t^T
+
+This is the O(L) literal recurrence — slow but unambiguous; both the
+chunked jnp path (models/ssm.py) and the Pallas kernel must match it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,   # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    a: jax.Array,   # (H,) negative
+    b_mat: jax.Array,  # (B, L, H, N)
+    c_mat: jax.Array,  # (B, L, H, N)
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dt_t * a)  # (B,H)
+        update = jnp.einsum("bhp,bhn->bhpn", dt_t[..., None] * x_t, b_t)
+        state = state * decay[..., None, None] + update
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    init = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), f32)
+    )
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(b_mat.astype(f32), 1, 0),
+        jnp.moveaxis(c_mat.astype(f32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    return y.astype(x.dtype), final

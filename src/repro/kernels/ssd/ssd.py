@@ -1,0 +1,130 @@
+"""Mamba2 SSD Pallas TPU kernel (chunked state-space-dual form).
+
+TPU-native design (DESIGN.md §6): grid = (B, H, nc) with the chunk axis
+innermost/sequential.  Each program holds one (chunk x P) x-tile and one
+(chunk x N) B/C-tile in VMEM, computes the intra-chunk quadratic form on
+the MXU (segsum-decayed "attention" matrix), and carries the running
+(P x N) state in VMEM scratch across chunks — the inter-chunk linear
+recurrence never touches HBM.
+
+Inputs are pre-projected per head; dt is post-softplus.  Outputs both the
+sequence y and the final state (for prefill -> decode handoff).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    x_ref,    # (1, bc, 1, P)
+    dt_ref,   # (1, bc, 1)
+    a_ref,    # (1, 1) — per-head decay rate (SMEM-ish tiny block)
+    b_ref,    # (1, bc, 1, N)
+    c_ref,    # (1, bc, 1, N)
+    y_ref,    # (1, bc, 1, P) out
+    fs_ref,   # (1, 1, P, N) out — final state
+    state_ref,  # VMEM scratch (P, N) f32
+    *,
+    n_chunks: int,
+    chunk: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (bc, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (bc,)
+    a = a_ref[0, 0]                                 # ()
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (bc, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (bc, N)
+
+    da = dt * a                                     # (bc,)
+    cum = jnp.cumsum(da)                            # (bc,)
+    xdt = x * dt[:, None]                           # (bc, P)
+
+    # intra-chunk quadratic form: L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(tri, jnp.exp(diff), 0.0)       # (bc, bc)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (bc, bc)
+    y_diag = jax.lax.dot_general(
+        scores * lmat, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (bc, P)
+
+    # cross-chunk: contribution of the entering state
+    state = state_ref[...]                          # (P, N)
+    y_off = jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]                       # (bc, P)
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: decay whole chunk + inject chunk contributions
+    decay_states = jnp.exp(cum[-1] - cum)           # (bc,)
+    contrib = jax.lax.dot_general(
+        xdt * decay_states[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (P, N)
+    state_ref[...] = state * jnp.exp(cum[-1]) + contrib
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        fs_ref[0, 0, :, :] = state_ref[...].astype(fs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,   # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H)
+    a: jax.Array,   # (H,)
+    b_mat: jax.Array,  # (B, L, H, N)
+    c_mat: jax.Array,  # (B, L, H, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
+    a2d = a.reshape(h, 1).astype(jnp.float32)
+
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c_: (b_, c_, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2d, b_mat, c_mat)
+    return y, final_state

@@ -1,0 +1,272 @@
+"""Dry-run cell builders: (architecture x input-shape x mesh) -> lowerable fn.
+
+``input_specs`` produces weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input — nothing is ever allocated; a 236B-parameter cell lowers
+on a laptop.  ``build_cell`` assembles the jit-able step function plus its
+in/out shardings from the logical-axis rule tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import params as pm
+from repro.models.model import build_model
+from repro.serve.steps import make_serve_step
+from repro.train import (
+    AdamWState,
+    OptimizerConfig,
+    TrainConfig,
+    make_train_step,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct trees
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+    donate: tuple = ()  # argnums whose buffers alias outputs (params/opt/cache)
+
+
+def _batch_spec(rules: sh.ShardingRules, shape: tuple[int, ...]) -> NamedSharding:
+    spec = rules.spec_for_axes(("batch",) + (None,) * (len(shape) - 1), shape)
+    return NamedSharding(rules.mesh, spec)
+
+
+def _replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def input_specs(
+    arch: str, shape: str, scfg: ShapeConfig | None = None
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    cfg = get_config(arch)
+    scfg = scfg or SHAPES[shape]
+    b, s = scfg.global_batch, scfg.seq_len
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if scfg.kind == "train" or scfg.kind == "prefill":
+        s_text = s - cfg.n_vision_tokens if cfg.family == "vlm" else s
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        if scfg.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out["positions"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    if cfg.family == "encdec" and scfg.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm" and scfg.kind != "decode":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def default_microbatches(cfg: ModelConfig, scfg: ShapeConfig, mesh: Mesh) -> int:
+    """Pick grad-accum microbatches so a microbatch is ~1 sequence/device."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    m = max(1, scfg.global_batch // dp)
+    while scfg.global_batch % m:
+        m -= 1
+    return m
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    *,
+    scfg: ShapeConfig | None = None,
+    cfg: ModelConfig | None = None,
+    microbatches: int | None = None,
+    remat: str = "full",
+    attn_impl: str = "chunked",
+    rules_variant: str = "",          # "" = default per kind; or "prefill_cp"
+    weights_dtype: Any = None,        # e.g. jnp.int8 storage (serve variants)
+    cache_dtype: Any = None,
+) -> Cell:
+    cfg = cfg or get_config(arch)
+    scfg = scfg or SHAPES[shape]
+    if scfg.name == "long_500k" and not cfg.is_subquadratic:
+        raise ValueError(
+            f"{arch} is pure full-attention; long_500k is skipped (DESIGN.md §4.2)"
+        )
+    if scfg.kind == "train":
+        return _build_train_cell(cfg, scfg, mesh, microbatches, remat, attn_impl)
+    if scfg.kind == "prefill":
+        return _build_prefill_cell(
+            cfg, scfg, mesh, attn_impl,
+            rules_variant=rules_variant, weights_dtype=weights_dtype,
+            cache_dtype=cache_dtype,
+        )
+    return _build_decode_cell(
+        cfg, scfg, mesh, rules_variant=rules_variant,
+        weights_dtype=weights_dtype, cache_dtype=cache_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def _build_train_cell(cfg, scfg, mesh, microbatches, remat, attn_impl) -> Cell:
+    rules = sh.ShardingRules(sh.TRAIN_RULES, mesh)
+    model = build_model(cfg, remat=remat, attn_impl=attn_impl) \
+        if cfg.family != "ssm" else build_model(cfg, remat=remat)
+    specs = model.param_specs()
+    m = microbatches or default_microbatches(cfg, scfg, mesh)
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(), microbatches=m, compute_dtype=jnp.bfloat16
+    )
+    raw_step = make_train_step(model, cfg, tcfg)
+
+    def train_step(params, opt_state, batch):
+        with sh.use_rules(rules):
+            return raw_step(params, opt_state, batch)
+
+    param_structs = pm.shape_structs(specs)
+    param_sh = rules.param_shardings(specs)
+    mu_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_structs
+    )
+    opt_structs = AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=mu_structs, nu=mu_structs
+    )
+    opt_sh = AdamWState(step=_replicated(mesh), mu=param_sh, nu=param_sh)
+
+    inputs = input_specs(cfg.name, scfg.name, scfg)
+    batch_sh = {k: _batch_spec(rules, v.shape) for k, v in inputs.items()}
+
+    return Cell(
+        arch=cfg.name,
+        shape=scfg.name,
+        kind="train",
+        fn=train_step,
+        args=(param_structs, opt_structs, inputs),
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate=(0, 1),
+        meta={
+            "microbatches": m,
+            "remat": remat,
+            "params": pm.param_count(specs),
+            "param_bytes": pm.param_bytes(specs),
+            "tokens_per_step": scfg.tokens
+            - (cfg.n_vision_tokens * scfg.global_batch if cfg.family == "vlm" else 0),
+        },
+    )
+
+
+def _build_prefill_cell(
+    cfg, scfg, mesh, attn_impl, *, rules_variant="", weights_dtype=None,
+    cache_dtype=None,
+) -> Cell:
+    table = sh.RULE_TABLES.get(rules_variant or "serve", sh.SERVE_RULES)
+    rules = sh.ShardingRules(table, mesh)
+    model = build_model(cfg, remat="none", attn_impl=attn_impl) \
+        if cfg.family != "ssm" else build_model(cfg, remat="none")
+    specs = pm.cast_specs(model.param_specs(), weights_dtype or jnp.bfloat16)
+    if cache_dtype is not None:
+        cache_specs = model.cache_specs(scfg.global_batch, scfg.seq_len, cache_dtype)
+    else:
+        cache_specs = model.cache_specs(scfg.global_batch, scfg.seq_len)
+
+    def prefill_step(params, batch, cache):
+        with sh.use_rules(rules):
+            return model.prefill(params, batch, cache)
+
+    inputs = input_specs(cfg.name, scfg.name, scfg)
+    batch_sh = {k: _batch_spec(rules, v.shape) for k, v in inputs.items()}
+    cache_sh = rules.param_shardings(cache_specs)
+
+    return Cell(
+        arch=cfg.name,
+        shape=scfg.name,
+        kind="prefill",
+        fn=prefill_step,
+        args=(pm.shape_structs(specs), inputs, pm.shape_structs(cache_specs)),
+        in_shardings=(rules.param_shardings(specs), batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate=(2,),
+        meta={
+            "params": pm.param_count(specs),
+            "param_bytes": pm.param_bytes(specs),
+            "cache_bytes": pm.param_bytes(cache_specs),
+            "tokens_per_step": scfg.tokens
+            - (cfg.n_vision_tokens * scfg.global_batch if cfg.family == "vlm" else 0),
+        },
+    )
+
+
+def _build_decode_cell(
+    cfg, scfg, mesh, *, rules_variant="", weights_dtype=None, cache_dtype=None
+) -> Cell:
+    table = sh.RULE_TABLES.get(rules_variant or "serve", sh.SERVE_RULES)
+    dispatch = "weight_stationary" if rules_variant == "serve_ep2d" else "token"
+    rules = sh.ShardingRules(table, mesh, moe_dispatch=dispatch)
+    model = build_model(cfg, remat="none")
+    specs = pm.cast_specs(model.param_specs(), weights_dtype or jnp.bfloat16)
+    if cache_dtype is not None:
+        cache_specs = model.cache_specs(scfg.global_batch, scfg.seq_len, cache_dtype)
+    else:
+        cache_specs = model.cache_specs(scfg.global_batch, scfg.seq_len)
+    raw_step = make_serve_step(model, cfg)
+
+    def serve_step(params, cache, tokens, positions):
+        with sh.use_rules(rules):
+            return raw_step(params, cache, tokens, positions)
+
+    inputs = input_specs(cfg.name, scfg.name, scfg)
+    tok_sh = _batch_spec(rules, inputs["tokens"].shape)
+    pos_sh = _batch_spec(rules, inputs["positions"].shape)
+    cache_sh = rules.param_shardings(cache_specs)
+
+    return Cell(
+        arch=cfg.name,
+        shape=scfg.name,
+        kind="decode",
+        fn=serve_step,
+        args=(
+            pm.shape_structs(specs),
+            pm.shape_structs(cache_specs),
+            inputs["tokens"],
+            inputs["positions"],
+        ),
+        in_shardings=(rules.param_shardings(specs), cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate=(1,),
+        meta={
+            "params": pm.param_count(specs),
+            "param_bytes": pm.param_bytes(specs),
+            "cache_bytes": pm.param_bytes(cache_specs),
+            "tokens_per_step": scfg.global_batch,
+        },
+    )
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The assigned (arch x shape) grid (32 cells; DESIGN.md §4.2)."""
+    from repro.configs import ARCHS, applicable_shapes
+
+    out = []
+    for arch, cfg in ARCHS.items():
+        for shape in applicable_shapes(cfg):
+            out.append((arch, shape))
+    return out

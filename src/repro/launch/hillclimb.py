@@ -1,0 +1,221 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb: hypothesis -> change -> measure -> verdict on the three
+selected cells (see EXPERIMENTS.md §Perf for the full log):
+
+  1. qwen2.5-32b x prefill_32k   — most collective-bound cell
+  2. deepseek-v2-236b x decode_32k — worst memory cell (96 GB/dev, unfit)
+  3. paligemma-3b x prefill_32k  — worst useful-compute ratio
+
+Each iteration lowers a real variant (sharding-rule table / storage dtype)
+and re-derives the roofline terms with the unrolled accounting pass.  The
+"kernelized attention" iteration swaps the measured jnp-path attention HBM
+traffic (quadratic coefficient of the bytes fit) for the Pallas flash
+kernel's analytic traffic — the kernel exists (repro/kernels) but Mosaic
+cannot lower on CPU, so its memory behaviour enters analytically.
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.launch.accounting import account_cell
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline
+from repro.models.model import active_param_count, build_model
+
+PREFILL_PTS = (2048, 4096, 6144)
+
+
+def memory_pass(arch, shape, mesh, **cell_kw):
+    cell = build_cell(arch, shape, mesh, **cell_kw)
+    with mesh:
+        compiled = (
+            jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate,
+            )
+            .lower(*cell.args)
+            .compile()
+        )
+        m = compiled.memory_analysis()
+    return (
+        m.argument_size_in_bytes + m.output_size_in_bytes + m.temp_size_in_bytes
+        - m.alias_size_in_bytes
+    )
+
+
+def flash_ratio(cfg, block_q: int = 512) -> float:
+    """analytic quadratic-bytes ratio: flash kernel vs jnp chunked path.
+
+    jnp path writes the (bq x bk) f32 score block + ~3 elementwise copies
+    per (q-head, block pair): ~16 B/elem x H.  The flash kernel's only
+    quadratic HBM traffic is re-reading K,V (bf16) once per q block:
+    4 x Kv x dh / bq bytes per (row, position^2)."""
+    jnp_quad = 16.0 * cfg.n_heads
+    kv = cfg.n_kv_heads if not cfg.use_mla else 1
+    dh = cfg.head_dim if not cfg.use_mla else (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    flash_quad = 4.0 * kv * dh / block_q
+    return flash_quad / jnp_quad
+
+
+_ACCT_CACHE: dict = {}
+_PEAK_CACHE: dict = {}
+
+
+def run_iteration(
+    name, hypothesis, arch, shape, mesh, *, kernelized=False, fit_points=None,
+    **cell_kw,
+):
+    cfg = get_config(arch)
+    scfg = SHAPES[shape]
+    print(f"\n--- {name} ---")
+    print(f"hypothesis: {hypothesis}")
+    key = (arch, shape, fit_points, tuple(sorted(map(str, cell_kw.items()))))
+    acct = _ACCT_CACHE.get(key)
+    if acct is None:
+        acct = account_cell(
+            arch, shape, mesh,
+            fit_points=fit_points
+            or (PREFILL_PTS if scfg.kind == "prefill" else None),
+            **cell_kw,
+        )
+        _ACCT_CACHE[key] = acct
+    bytes_dev = acct.bytes_per_device
+    kern_note = ""
+    if kernelized and len(acct.fit_points) >= 3:
+        xs = [p["seq_len"] for p in acct.fit_points]
+        ys = [p["bytes"] for p in acct.fit_points]
+        a, b, c = np.polyfit(xs, ys, 2)[::-1]
+        ratio = flash_ratio(cfg)
+        s = scfg.seq_len
+        bytes_dev = max(a + b * s + c * ratio * s * s, 0.0)
+        kern_note = (
+            f" [kernelized: quad coeff x{ratio:.4f} "
+            f"(jnp {c:.3e} -> flash {c*ratio:.3e})]"
+        )
+    peak = _PEAK_CACHE.get(key)
+    if peak is None:
+        peak = memory_pass(arch, shape, mesh, **cell_kw)
+        _PEAK_CACHE[key] = peak
+    active = active_param_count(cfg, build_model(cfg).param_specs())
+    rl = roofline(
+        cfg=cfg, scfg=scfg, chips=mesh.size,
+        hlo_flops_per_device=acct.flops_per_device,
+        hlo_bytes_per_device=bytes_dev,
+        wire_bytes_per_device=acct.wire_bytes_per_device,
+        active_params=active,
+    )
+    rec = {
+        "iteration": name, "hypothesis": hypothesis, "arch": arch,
+        "shape": shape, "kernelized": kernelized,
+        "cell_kw": {k: str(v) for k, v in cell_kw.items()},
+        "peak_bytes": peak,
+        "flops_per_device": acct.flops_per_device,
+        "bytes_per_device": bytes_dev,
+        "wire_per_device": acct.wire_bytes_per_device,
+        "roofline": {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dominant": rl.dominant,
+            "bound_s": rl.bound_s, "mfu_bound": rl.mfu_bound,
+        },
+        "fit_points": acct.fit_points,
+    }
+    print(
+        f"measured: peak={peak/1e9:.1f}GB/dev  compute={rl.compute_s:.3f}s  "
+        f"memory={rl.memory_s:.3f}s{kern_note}  collective={rl.collective_s:.3f}s"
+    )
+    print(
+        f"  -> dominant={rl.dominant}  bound={rl.bound_s*1e3:.1f}ms  "
+        f"mfu_bound={rl.mfu_bound:.3f}"
+    )
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--cell", choices=["qwen25", "deepseek", "pali", "all"],
+                   default="all")
+    p.add_argument("--out", default="experiments/perf")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh()
+    records = []
+
+    if args.cell in ("deepseek", "all"):
+        arch, shape = "deepseek-v2-236b", "decode_32k"
+        records.append(run_iteration(
+            "deepseek-decode/0-baseline",
+            "serve rules shard expert weights only over model(16): 472GB bf16 "
+            "/16 = ~30GB experts/dev -> memory term and HBM blow up",
+            arch, shape, mesh,
+        ))
+        records.append(run_iteration(
+            "deepseek-decode/1-ep2d",
+            "2D expert sharding (expert x d_model over model x data) cuts "
+            "expert bytes 16x; dispatch contraction adds only a tiny "
+            "partial-sum all-reduce (napkin: E_loc x B x C x ff bytes/step)",
+            arch, shape, mesh, rules_variant="serve_ep2d",
+        ))
+        records.append(run_iteration(
+            "deepseek-decode/2-ep2d+int8",
+            "int8 weight+cache storage halves remaining HBM reads; decode is "
+            "pure memory-bound so the bound should halve again",
+            arch, shape, mesh, rules_variant="serve_ep2d",
+            weights_dtype=jnp.int8, cache_dtype=jnp.int8,
+        ))
+
+    if args.cell in ("qwen25", "all"):
+        arch, shape = "qwen2.5-32b", "prefill_32k"
+        records.append(run_iteration(
+            "qwen25-prefill/0-baseline",
+            "TP-16 prefill pays 2 all-reduces of full activations per layer: "
+            "napkin 2 x 2 x (2x32768x5120x2B) x 64L x 15/16 = ~160GB/dev wire",
+            arch, shape, mesh,
+        ))
+        records.append(run_iteration(
+            "qwen25-prefill/1-kernelized",
+            "flash kernel removes score-matrix HBM traffic (quadratic bytes "
+            "coeff drops ~80x analytically); collective stays dominant",
+            arch, shape, mesh, kernelized=True,
+        ))
+        records.append(run_iteration(
+            "qwen25-prefill/2-context-parallel",
+            "shard activations (batch x seq) over (data x model), fully shard "
+            "weight storage and let XLA gather weights per layer: wire becomes "
+            "~one weight gather (65GB bf16) + KV gathers (~9GB) instead of "
+            "160GB of activation all-reduces",
+            arch, shape, mesh, kernelized=True, rules_variant="prefill_cp",
+        ))
+
+    if args.cell in ("pali", "all"):
+        arch, shape = "paligemma-3b", "prefill_32k"
+        records.append(run_iteration(
+            "pali-prefill/0-baseline",
+            "re-account with larger fit points (2k/4k/6k): the old 512-1536 "
+            "quadratic fit extrapolated x445 and amplified XLA fusion noise",
+            arch, shape, mesh,
+        ))
+        records.append(run_iteration(
+            "pali-prefill/1-kernelized",
+            "MQA kv=1: flash quadratic traffic is 4x1x256/512 = 2B/elem vs "
+            "jnp 16x8=128B/elem -> memory term drops ~64x on the attention "
+            "share; compute should become dominant",
+            arch, shape, mesh, kernelized=True,
+        ))
+
+    with open(os.path.join(args.out, f"hillclimb_{args.cell}.json"), "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"\nwrote {len(records)} iteration records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Render the §Dry-run / §Roofline tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(d: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/1e9:.2f}GB"
+
+
+def dryrun_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile | peak HBM/dev | params | notes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        fits = "✓ fits" if r["memory"]["peak_bytes_est"] < 16e9 else "✗ >16GB"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['timing']['compile_s']:.0f}s "
+            f"| {fmt_bytes(r['memory']['peak_bytes_est'])} "
+            f"| {r['meta']['params']/1e9:.1f}B | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| bound | MODEL_FLOPS | useful | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f} | **{rl['dominant']}** "
+            f"| {rl['bound_s']*1e3:.1f}ms | {rl['model_flops']:.2e} "
+            f"| {rl['useful_ratio']:.2f} | {rl['mfu_bound']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def worst_cells(records: list[dict], k: int = 5) -> list[tuple]:
+    single = [r for r in records if r["mesh"] == "16x16"]
+    ranked = sorted(single, key=lambda r: r["roofline"]["mfu_bound"])
+    out = []
+    for r in ranked[:k]:
+        out.append(
+            (r["arch"], r["shape"], r["roofline"]["dominant"],
+             round(r["roofline"]["mfu_bound"], 4))
+        )
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    args = p.parse_args()
+    records = load_records(args.dir)
+    print(f"## Dry-run ({len(records)} cells)\n")
+    print(dryrun_table(records))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(records))
+    print("\n## Worst cells (hillclimb candidates)\n")
+    for row in worst_cells(records):
+        print("  ", row)
+
+
+if __name__ == "__main__":
+    main()

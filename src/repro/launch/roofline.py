@@ -1,0 +1,119 @@
+"""Roofline model for the TPU v5e target.
+
+Three terms, all in seconds-per-step, derived from the compiled dry-run
+artifact (per-device numbers — ``cost_analysis()`` reports the SPMD-
+partitioned module of one participant):
+
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes / HBM_bw
+  collective = wire_bytes / ICI_bw
+
+The step cannot run faster than ``max`` of the three (no overlap) and the
+*dominant* term is the optimization target for §Perf.  MODEL_FLOPS is the
+napkin 6·N·D (train) / 2·N·D (inference) estimate with an explicit attention
+term; ``MODEL_FLOPS / (HLO_FLOPs * chips)`` measures how much compiled
+compute is useful (catching remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link; DESIGN assumption: one link
+                             # is the bottleneck direction per collective
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    #: max(three terms) — the roofline-optimal step time lower bound
+    bound_s: float
+    #: MODEL_FLOPS / (chips * PEAK * bound) — "roofline MFU" of the step
+    mfu_bound: float
+
+
+def model_flops(cfg: ModelConfig, scfg: ShapeConfig, active_params: int) -> float:
+    """Napkin useful-FLOPs per step: matmul params + attention."""
+    if scfg.kind == "train":
+        tokens = scfg.tokens
+        base = 6.0 * active_params * tokens
+        attn_mult = 3.0  # fwd + 2x bwd
+    elif scfg.kind == "prefill":
+        tokens = scfg.tokens
+        base = 2.0 * active_params * tokens
+        attn_mult = 1.0
+    else:  # decode: one token per sequence
+        tokens = scfg.global_batch
+        base = 2.0 * active_params * tokens
+        attn_mult = 1.0
+
+    # attention scores+values: 4 * S_ctx * width per token per layer
+    if cfg.n_heads and cfg.family != "ssm":
+        if cfg.use_mla:
+            width = cfg.n_heads * (
+                cfg.qk_nope_head_dim + cfg.qk_rope_head_dim + cfg.v_head_dim
+            ) / 2
+        else:
+            width = cfg.n_heads * cfg.head_dim
+        ctx = scfg.seq_len
+        causal = 0.5 if scfg.kind != "decode" else 1.0
+        n_attn_layers = cfg.n_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        attn = 4.0 * ctx * width * causal * tokens * n_attn_layers * attn_mult
+        base += attn
+    if cfg.family == "ssm":
+        # SSD: chunk-quadratic + state updates ~ 6 * d_inner * N per token
+        base += (
+            (6.0 if scfg.kind == "train" else 2.0)
+            * 2.0 * cfg.d_inner * cfg.ssm_state
+            * (scfg.tokens if scfg.kind != "decode" else scfg.global_batch)
+            * cfg.n_layers
+        )
+    return base
+
+
+def roofline(
+    *,
+    cfg: ModelConfig,
+    scfg: ShapeConfig,
+    chips: int,
+    hlo_flops_per_device: float,
+    hlo_bytes_per_device: float,
+    wire_bytes_per_device: float,
+    active_params: int,
+) -> Roofline:
+    compute_s = hlo_flops_per_device / PEAK_FLOPS
+    memory_s = hlo_bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, scfg, active_params)
+    hlo_total = hlo_flops_per_device * chips
+    bound = max(terms.values())
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        bound_s=bound,
+        mfu_bound=mf / (chips * PEAK_FLOPS * bound) if bound else 0.0,
+    )

@@ -1,0 +1,94 @@
+"""Training driver: train any assigned arch (reduced or full) end-to-end.
+
+CPU-scale example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \\
+      --steps 50 --batch 8 --seq 64
+
+On a pod the same driver runs the full config under the production mesh
+(sharding comes from the TRAIN_RULES table; data parallel over pod x data).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import HashTokenizer, token_stream
+from repro.models import params as pm
+from repro.models.model import build_model
+from repro.train import OptimizerConfig, TrainConfig, init_opt_state, make_train_step
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-4b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=20)
+    p.add_argument("--log-every", type=int, default=5)
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, remat="none" if args.reduced else "full")
+    tok = HashTokenizer(cfg.vocab_size)
+
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(
+            learning_rate=args.lr, warmup_steps=max(2, args.steps // 20),
+            total_steps=args.steps,
+        ),
+        microbatches=args.microbatches,
+        compute_dtype=jnp.float32 if args.reduced else jnp.bfloat16,
+    )
+    step_fn = jax.jit(make_train_step(model, cfg, tcfg))
+
+    params = pm.init_params(jax.random.key(0), model.param_specs())
+    opt = init_opt_state(params)
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None
+    if mgr and args.resume:
+        from repro.ckpt import latest_step, restore_checkpoint
+
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt), _ = restore_checkpoint(
+                args.ckpt_dir, last, template=(params, opt)
+            )
+            start = last
+            print(f"resumed from step {start}")
+
+    stream = token_stream(tok, args.seq, args.batch, seed=0)
+    n_params = pm.param_count(model.param_specs())
+    print(f"training {cfg.name}: {n_params:,} params, {args.steps} steps")
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            toks_s = args.batch * args.seq * (step + 1 - start) / (time.time() - t0)
+            print(
+                f"step {step+1:5d}  loss={float(metrics['loss']):.4f}  "
+                f"nll={float(metrics['nll']):.4f}  "
+                f"gnorm={float(metrics['grad_norm']):.3f}  "
+                f"lr={float(metrics['lr']):.2e}  tok/s={toks_s:.0f}"
+            )
+        if mgr:
+            mgr.maybe_save(step + 1, (params, opt))
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+from repro.metrics.judge import JudgeOutcome, pairwise_judge, pointwise_judge
+from repro.metrics.lexical import (
+    bleu,
+    contains,
+    exact_match,
+    normalize,
+    rouge_l,
+    token_f1,
+)
+from repro.metrics.registry import (
+    BINARY_METRICS,
+    MetricContext,
+    available_metrics,
+    get_metric,
+)
+from repro.metrics.semantic import HashEmbedder, bertscore_f1, embedding_similarity
+
+__all__ = [
+    "BINARY_METRICS", "HashEmbedder", "JudgeOutcome", "MetricContext",
+    "available_metrics", "bertscore_f1", "bleu", "contains",
+    "embedding_similarity", "exact_match", "get_metric", "normalize",
+    "pairwise_judge", "pointwise_judge", "rouge_l", "token_f1",
+]

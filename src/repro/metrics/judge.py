@@ -1,0 +1,136 @@
+"""LLM-as-judge metrics (paper §4.1): pointwise grading and pairwise
+comparison via a judge engine, with regex score extraction and unparseable
+logging (§A.3).
+
+Judge prompts follow the MT-Bench structure (Zheng et al., 2023): rubric,
+the material to grade, and an explicit "Score: <int>" answer format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.core.engines import InferenceEngine, InferenceRequest
+
+POINTWISE_TEMPLATE = (
+    "[Judge] Rate the following response on a 1-{scale} scale.\n"
+    "Rubric: {rubric}\n"
+    "Question: {question}\n"
+    "Response: {response}\n"
+    "Answer with 'Score: <number>' then a one-sentence explanation."
+)
+
+PAIRWISE_TEMPLATE = (
+    "[Judge] Compare two responses to the question below.\n"
+    "Rubric: {rubric}\n"
+    "Question: {question}\n"
+    "Response A: {response_a}\n"
+    "Response B: {response_b}\n"
+    "Answer with 'Winner: A' or 'Winner: B' then one sentence."
+)
+
+_SCORE_RE = re.compile(r"score\s*[:=]?\s*(\d+(?:\.\d+)?)", re.IGNORECASE)
+_WINNER_RE = re.compile(r"winner\s*[:=]?\s*([AB])", re.IGNORECASE)
+
+
+@dataclasses.dataclass
+class JudgeOutcome:
+    scores: np.ndarray           # (n,) float, NaN where unparseable
+    unparseable: list[dict]      # logged for review (paper §5.6)
+
+    @property
+    def unparseable_rate(self) -> float:
+        return len(self.unparseable) / max(len(self.scores), 1)
+
+
+def extract_score(text: str, scale: int) -> float | None:
+    m = _SCORE_RE.search(text)
+    if m is None:
+        return None
+    val = float(m.group(1))
+    if not 1.0 <= val <= scale:
+        return None
+    return val
+
+
+def pointwise_judge(
+    engine: InferenceEngine,
+    questions: list[str],
+    responses: list[str],
+    *,
+    rubric: str = "helpfulness and accuracy",
+    scale: int = 5,
+    max_tokens: int = 48,
+) -> JudgeOutcome:
+    prompts = [
+        POINTWISE_TEMPLATE.format(
+            scale=scale, rubric=rubric, question=q, response=r
+        )
+        for q, r in zip(questions, responses)
+    ]
+    outs = engine.infer_batch(
+        [InferenceRequest(p, max_tokens=max_tokens) for p in prompts]
+    )
+    scores = np.full(len(prompts), np.nan)
+    bad: list[dict] = []
+    for i, o in enumerate(outs):
+        val = extract_score(o.text, scale) if o.error is None else None
+        if val is None:
+            bad.append({"index": i, "raw": o.text[:200], "error": o.error})
+        else:
+            scores[i] = val
+    return JudgeOutcome(scores=scores, unparseable=bad)
+
+
+def pairwise_judge(
+    engine: InferenceEngine,
+    questions: list[str],
+    responses_a: list[str],
+    responses_b: list[str],
+    *,
+    rubric: str = "helpfulness and accuracy",
+    max_tokens: int = 32,
+    debias_position: bool = True,
+) -> JudgeOutcome:
+    """Returns 1.0 where A wins, 0.0 where B wins, NaN unparseable.
+
+    ``debias_position`` runs each comparison in both orders and averages —
+    the standard mitigation for position bias (paper §6.1 limitation).
+    """
+
+    def run(order_ab: bool) -> list[float | None]:
+        prompts = [
+            PAIRWISE_TEMPLATE.format(
+                rubric=rubric, question=q,
+                response_a=a if order_ab else b,
+                response_b=b if order_ab else a,
+            )
+            for q, a, b in zip(questions, responses_a, responses_b)
+        ]
+        outs = engine.infer_batch(
+            [InferenceRequest(p, max_tokens=max_tokens) for p in prompts]
+        )
+        vals: list[float | None] = []
+        for o in outs:
+            m = _WINNER_RE.search(o.text) if o.error is None else None
+            if m is None:
+                vals.append(None)
+                continue
+            a_won = m.group(1).upper() == "A"
+            vals.append(float(a_won if order_ab else not a_won))
+        return vals
+
+    first = run(True)
+    second = run(False) if debias_position else first
+    scores = np.full(len(questions), np.nan)
+    bad: list[dict] = []
+    for i, (x, y) in enumerate(zip(first, second)):
+        if x is None and y is None:
+            bad.append({"index": i, "raw": "", "error": "unparseable"})
+        else:
+            vals = [v for v in (x, y) if v is not None]
+            scores[i] = float(np.mean(vals))
+    return JudgeOutcome(scores=scores, unparseable=bad)

@@ -1,0 +1,136 @@
+"""Metric registry: MetricConfig.name -> batch scorer.
+
+A metric is ``fn(rows, responses, ctx) -> np.ndarray`` of per-example
+scores (NaN = unscorable, excluded from aggregation with counts reported).
+``ctx`` carries shared resources (judge engine, embedder) so engines are
+constructed once per evaluation, not per metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol
+
+import numpy as np
+
+from repro.core.config import MetricConfig
+from repro.metrics import lexical, rag, semantic
+from repro.metrics.judge import pointwise_judge
+
+
+@dataclasses.dataclass
+class MetricContext:
+    judge_engine: Any = None
+    embedder: semantic.HashEmbedder | None = None
+    logs: dict = dataclasses.field(default_factory=dict)
+
+
+Scorer = Callable[[list[dict], list[str], MetricContext], np.ndarray]
+_REGISTRY: dict[str, Scorer] = {}
+#: metrics whose scores are 0/1 (drives Wilson CIs + McNemar selection)
+BINARY_METRICS = {"exact_match", "contains"}
+
+
+def register(name: str):
+    def deco(fn: Scorer) -> Scorer:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_metric(cfg: MetricConfig) -> Scorer:
+    if cfg.name not in _REGISTRY:
+        raise KeyError(
+            f"unknown metric {cfg.name!r}; available: {sorted(_REGISTRY)}"
+        )
+    base = _REGISTRY[cfg.name]
+    if cfg.params:
+        return lambda rows, resp, ctx: base(rows, resp, ctx, **cfg.params)
+    return base
+
+
+def _refs(rows: list[dict]) -> list[str]:
+    return [str(r.get("reference", "")) for r in rows]
+
+
+def _questions(rows: list[dict]) -> list[str]:
+    return [str(r.get("question", "")) for r in rows]
+
+
+# -- lexical ------------------------------------------------------------------
+
+for _name in ("exact_match", "contains", "token_f1", "bleu", "rouge_l"):
+    def _make(name: str) -> Scorer:
+        def scorer(rows, responses, ctx, **kw):
+            return lexical.batch_lexical(name, responses, _refs(rows), **kw)
+
+        return scorer
+
+    _REGISTRY[_name] = _make(_name)
+
+
+# -- semantic ------------------------------------------------------------------
+
+
+@register("embedding_similarity")
+def _embed_sim(rows, responses, ctx, **kw):
+    return semantic.embedding_similarity(responses, _refs(rows), ctx.embedder)
+
+
+@register("bertscore")
+def _bertscore(rows, responses, ctx, **kw):
+    return semantic.bertscore_f1(responses, _refs(rows), ctx.embedder, **kw)
+
+
+# -- LLM judge ------------------------------------------------------------------
+
+
+@register("llm_judge")
+def _judge(rows, responses, ctx, *, rubric: str = "helpfulness", scale: int = 5):
+    assert ctx.judge_engine is not None, "llm_judge needs a judge engine"
+    outcome = pointwise_judge(
+        ctx.judge_engine, _questions(rows), responses, rubric=rubric, scale=scale
+    )
+    ctx.logs.setdefault("judge_unparseable", []).extend(outcome.unparseable)
+    return outcome.scores
+
+
+# -- RAG -------------------------------------------------------------------------
+
+
+def _contexts(rows: list[dict]) -> list[list[str]]:
+    return [list(r.get("contexts", [])) for r in rows]
+
+
+@register("faithfulness")
+def _faith(rows, responses, ctx, **kw):
+    assert ctx.judge_engine is not None
+    return rag.faithfulness(ctx.judge_engine, responses, _contexts(rows), **kw)
+
+
+@register("context_relevance")
+def _ctx_rel(rows, responses, ctx, **kw):
+    assert ctx.judge_engine is not None
+    return rag.context_relevance(
+        ctx.judge_engine, _questions(rows), _contexts(rows), **kw
+    )
+
+
+@register("answer_relevance")
+def _ans_rel(rows, responses, ctx, **kw):
+    return rag.answer_relevance(_questions(rows), responses, ctx.embedder)
+
+
+@register("context_precision")
+def _ctx_prec(rows, responses, ctx, **kw):
+    return rag.context_precision(_contexts(rows), _refs(rows), **kw)
+
+
+@register("context_recall")
+def _ctx_rec(rows, responses, ctx, **kw):
+    return rag.context_recall(_contexts(rows), _refs(rows))
+
+
+def available_metrics() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,167 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over explicit parameter pytrees declared via
+:class:`repro.models.params.ParamSpec`.  Logical sharding axes ride on the
+specs; activation constraints go through :func:`repro.sharding.constrain`.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models.params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_spec(dim: int, axis: str | None = "embed") -> dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), jnp.float32, (axis,), init="ones")}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm_spec(dim: int, axis: str | None = "embed") -> dict[str, ParamSpec]:
+    return {
+        "scale": ParamSpec((dim,), jnp.float32, (axis,), init="ones"),
+        "bias": ParamSpec((dim,), jnp.float32, (axis,), init="zeros"),
+    }
+
+
+def layer_norm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate((x1 * cos - x2 * sin, x2 * cos + x1 * sin), axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(
+    d_in: int,
+    d_out: int,
+    axes: tuple[str | None, str | None],
+    bias: bool = False,
+    bias_axis: str | None = None,
+    scale: float = 1.0,
+) -> dict[str, ParamSpec]:
+    spec = {"kernel": ParamSpec((d_in, d_out), jnp.float32, axes, scale=scale)}
+    if bias:
+        spec["bias"] = ParamSpec((d_out,), jnp.float32, (bias_axis,), init="zeros")
+    return spec
+
+
+def dense(params: dict, x: jax.Array, compute_dtype: Any = None) -> jax.Array:
+    dtype = compute_dtype or x.dtype
+    y = jnp.einsum(
+        "...d,df->...f", x.astype(dtype), params["kernel"].astype(dtype)
+    )
+    if "bias" in params:
+        y = y + params["bias"].astype(dtype)
+    return y
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def gated_mlp_spec(d_model: int, d_ff: int) -> dict:
+    """SwiGLU/GeGLU MLP (llama/qwen/gemma style)."""
+    return {
+        "wi": dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "wg": dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "wo": dense_spec(d_ff, d_model, ("mlp", "embed")),
+    }
+
+
+def gated_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    h = activation(act, dense(params["wg"], x)) * dense(params["wi"], x)
+    h = sharding.constrain(h, ("batch", "seq", "mlp"))
+    return dense(params["wo"], h)
+
+
+def mlp_spec(d_model: int, d_ff: int, bias: bool = False) -> dict:
+    """Plain 2-layer MLP (whisper style)."""
+    return {
+        "wi": dense_spec(d_model, d_ff, ("embed", "mlp"), bias=bias, bias_axis="mlp"),
+        "wo": dense_spec(d_ff, d_model, ("mlp", "embed"), bias=bias, bias_axis="embed"),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    h = activation(act, dense(params["wi"], x))
+    h = sharding.constrain(h, ("batch", "seq", "mlp"))
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d_model: int) -> dict[str, ParamSpec]:
+    return {
+        "table": ParamSpec((vocab, d_model), jnp.float32, ("vocab", "embed"), scale=1.0)
+    }
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype: Any) -> jax.Array:
+    table = params["table"].astype(compute_dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array, compute_dtype: Any) -> jax.Array:
+    """Project to (padded) vocab logits; returns f32 for a stable softmax."""
+    table = params["table"].astype(compute_dtype)
+    logits = jnp.einsum("...d,vd->...v", x.astype(compute_dtype), table)
+    return sharding.constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+
+def learned_pos_spec(max_len: int, d_model: int) -> dict[str, ParamSpec]:
+    return {"table": ParamSpec((max_len, d_model), jnp.float32, (None, "embed"))}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer (token-choice top-k, GShard/MaxText style).
+
+TPU-native design notes (DESIGN.md §5):
+
+* **Dense-dispatch einsum formulation** — dispatch/combine are one-hot
+  ``(B, S, E, C)`` tensors contracted on the MXU.  Experts shard over the
+  ``model`` mesh axis (expert parallelism), tokens over ``(pod, data)``;
+  XLA SPMD inserts the all-to-all equivalent collectives automatically.
+  This is the GShard formulation that MaxText ships as its "dropping"
+  strategy — no scatter/gather, fully static shapes, scan-compatible.
+* **Capacity-factor dropping** — each expert accepts at most
+  ``C = round_up(k * S * capacity_factor / E, 4)`` tokens per batch row.
+  Overflowing tokens fall through on the residual path (standard GShard
+  behaviour).
+* **Aux load-balancing loss** (Switch-style) is returned alongside the
+  output so the training loss can add ``router_aux_weight * aux``.
+* **Shared experts** (DeepSeek-V2) are plain always-on MLPs added to the
+  routed output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """Per-expert, per-batch-row token capacity (multiple of 4 for layout)."""
+    cap = cfg.n_experts_per_token * seq_len * cfg.capacity_factor / cfg.n_experts
+    cap = int(cap + 0.999)
+    return max(4, ((cap + 3) // 4) * 4)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    spec: dict = {
+        "router": ParamSpec((d, e), jnp.float32, ("embed", "expert")),
+        # stacked expert weights: leading expert axis shards over "model"
+        "wi": ParamSpec((e, d, ff), jnp.float32, ("expert", "expert_data", None)),
+        "wg": ParamSpec((e, d, ff), jnp.float32, ("expert", "expert_data", None)),
+        "wo": ParamSpec((e, ff, d), jnp.float32, ("expert", None, "expert_data")),
+    }
+    if cfg.n_shared_experts:
+        # shared experts = one fused MLP with n_shared * moe_d_ff hidden
+        spec["shared"] = layers.gated_mlp_spec(d, cfg.n_shared_experts * ff)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def _top_k_mask(
+    probs: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Return (weights, mask) of shape (..., E): top-k gate values, 0 elsewhere."""
+    top_vals, _ = jax.lax.top_k(probs, k)
+    thresh = top_vals[..., -1:]
+    mask = probs >= thresh
+    # guard against ties admitting >k experts: keep weights but renormalize
+    weights = jnp.where(mask, probs, 0.0)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9
+    )
+    return weights, mask
+
+
+def moe_block(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Routed-experts forward.  ``x`` is (B, S, D); returns (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    cap = expert_capacity(cfg, s)
+    f32 = jnp.float32
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(f32), params["router"].astype(f32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    weights, mask = _top_k_mask(probs, k)
+
+    # --- Switch-style aux load-balancing loss ------------------------------
+    # fraction of tokens routed to each expert x mean router prob per expert
+    frac_tokens = jnp.mean(mask.astype(f32), axis=(0, 1))  # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # --- capacity assignment -------------------------------------------------
+    # position of each token within its expert's queue (per batch row)
+    pos_in_expert = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (B,S,E)
+    keep = mask & (pos_in_expert < cap)
+    # one-hot over capacity slots: (B,S,E,C)
+    slot_oh = jax.nn.one_hot(
+        jnp.where(keep, pos_in_expert, -1), cap, dtype=x.dtype
+    )
+    dispatch = slot_oh  # (B,S,E,C), 1 where token -> (expert, slot)
+    combine = slot_oh.astype(f32) * weights[..., None].astype(f32)
+
+    # --- dispatch -> expert MLP -> combine ----------------------------------
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    rules = sharding.current_rules()
+    if rules is not None and rules.moe_dispatch == "weight_stationary":
+        # decode-time 2D expert sharding: keep weights still, reshard the
+        # (tiny) dispatched token block to match the weights' d_model shards
+        expert_in = sharding.constrain(
+            expert_in, ("expert", None, None, "expert_data")
+        )
+    else:
+        expert_in = sharding.constrain(expert_in, ("expert", "batch", None, None))
+    h_g = jnp.einsum("ebcd,edf->ebcf", expert_in, params["wg"].astype(x.dtype))
+    h_i = jnp.einsum("ebcd,edf->ebcf", expert_in, params["wi"].astype(x.dtype))
+    h = layers.activation(cfg.act, h_g) * h_i
+    h = sharding.constrain(h, ("expert", "batch", None, None))
+    expert_out = jnp.einsum("ebcf,efd->ebcd", h, params["wo"].astype(x.dtype))
+
+    out = jnp.einsum(
+        "bsec,ebcd->bsd", combine.astype(f32), expert_out.astype(f32)
+    ).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + layers.gated_mlp(params["shared"], x, cfg.act)
+    out = sharding.constrain(out, ("batch", None, "embed"))
+    return out, aux.astype(f32)

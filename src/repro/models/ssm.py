@@ -1,0 +1,312 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Train/prefill use the chunked SSD form: intra-chunk quadratic (attention-like,
+MXU-friendly) + inter-chunk linear state recurrence — the TPU-native
+adaptation of the paper's algorithm (chunk size sized so the quadratic tile
+lives in VMEM; see ``repro/kernels/ssd`` for the Pallas version).
+Decode is the O(1) recurrent step on a (B, H, P, N) state.
+
+Reference: Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060), minimal SSD.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.params import ParamSpec
+from repro.models.unroll import maybe_scan
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    h = cfg.ssm_nheads
+    conv_dim = d_inner + 2 * g * n
+    return {
+        # fused in_proj of the reference is split per component for clean TP
+        "wz": layers.dense_spec(d, d_inner, ("embed", "ssm_inner")),
+        "wxBC": layers.dense_spec(d, conv_dim, ("embed", "ssm_inner")),
+        "wdt": layers.dense_spec(d, h, ("embed", "ssm_heads")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), jnp.float32, (None, "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), jnp.float32, ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((h,), jnp.float32, ("ssm_heads",), init="ones"),
+        "D": ParamSpec((h,), jnp.float32, ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "norm": layers.rms_norm_spec(d_inner, "ssm_inner"),
+        "out_proj": layers.dense_spec(d_inner, d, ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_init_cache(
+    cfg: ModelConfig, batch: int, dtype: Any = jnp.float32
+) -> dict:
+    d_inner = cfg.d_inner
+    g, n, h, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": ParamSpec(
+            (batch, cfg.ssm_conv - 1, conv_dim),
+            dtype,
+            ("batch", None, "ssm_inner"),
+            init="zeros",
+        ),
+        "state": ParamSpec(
+            (batch, h, p, n), dtype, ("batch", "ssm_heads", None, None), init="zeros"
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{k=j+1..i} x_k for i >= j, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, L, H, P) — conv output, pre-dt
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    a: jax.Array,   # (H,) — negative
+    b_mat: jax.Array,  # (B, L, H, N) — already broadcast to heads
+    c_mat: jax.Array,  # (B, L, H, N)
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked state-space-dual scan. Returns (y, final_state)."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    f32 = jnp.float32
+    xd = (x * dt[..., None]).astype(f32)  # dt folded into x
+    da = (dt.astype(f32) * a.astype(f32))  # (B,L,H)
+
+    xc = xd.reshape(bsz, nc, chunk, h, p)
+    bc = b_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+    cc = c_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+    dac = da.reshape(bsz, nc, chunk, h)
+    dacs = jnp.cumsum(dac, axis=2)  # (B,nc,q,H)
+
+    # --- intra-chunk (quadratic, attention-like — the MXU part) ------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(dac, 3, 2)))  # (B,nc,H,q,s)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", cc, bc)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores * lmat, xc)
+
+    # --- per-chunk final states --------------------------------------------
+    decay_states = jnp.exp(dacs[:, :, -1:, :] - dacs)  # (B,nc,q,H)
+    chunk_states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bc, decay_states, xc)
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])  # (B,nc,H)
+
+    def step(state, inp):
+        s_c, d_c = inp
+        entering = state
+        state = state * d_c[:, :, None, None] + s_c
+        return state, entering
+
+    init = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), f32)
+    )
+    final_state, entering_states = maybe_scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    entering_states = jnp.moveaxis(entering_states, 0, 1)  # (B,nc,H,P,N)
+
+    # --- off-diagonal (cross-chunk) contribution ----------------------------
+    state_decay = jnp.exp(dacs)  # (B,nc,q,H)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", cc, entering_states, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full-sequence and decode)
+# ---------------------------------------------------------------------------
+
+
+def _depthwise_causal_conv(
+    x: jax.Array, w: jax.Array, b: jax.Array
+) -> jax.Array:
+    """x (B, L, C), w (K, C): left-padded depthwise conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),  # (K, 1, C) HIO depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    d_inner = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    x_ssm, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    return x_ssm, b_mat, c_mat
+
+
+def _to_heads(cfg: ModelConfig, x_ssm, b_mat, c_mat):
+    bsz, l = x_ssm.shape[:2]
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    x_h = x_ssm.reshape(bsz, l, h, p)
+    rep = h // g
+    b_h = jnp.repeat(b_mat.reshape(bsz, l, g, n), rep, axis=2)
+    c_h = jnp.repeat(c_mat.reshape(bsz, l, g, n), rep, axis=2)
+    return x_h, b_h, c_h
+
+
+def mamba2_full(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> jax.Array:
+    """Full-sequence Mamba2 block (train / prefill)."""
+    bsz, l, _ = x.shape
+    z = layers.dense(params["wz"], x)
+    xbc = layers.dense(params["wxBC"], x)
+    dt_raw = layers.dense(params["wdt"], x)  # (B,L,H)
+
+    xbc = jax.nn.silu(_depthwise_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xbc = sharding.constrain(xbc, ("batch", "seq", "ssm_inner"))
+    x_ssm, b_mat, c_mat = _split_xbc(cfg, xbc)
+    x_h, b_h, c_h = _to_heads(cfg, x_ssm, b_mat, c_mat)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, _ = ssd_chunked(x_h, dt, a, b_h, c_h, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x_h
+    y = y.reshape(bsz, l, cfg.d_inner)
+
+    y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = sharding.constrain(y, ("batch", "seq", "ssm_inner"))
+    return layers.dense(params["out_proj"], y)
+
+
+def mamba2_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, L, D)
+    cache: dict,  # {"conv": (B, K-1, C), "state": (B, H, P, N)}
+) -> tuple[jax.Array, dict]:
+    """Full-sequence pass that also produces the decode cache.
+
+    Identical math to :func:`mamba2_full`, but returns the final SSD state and
+    the trailing conv window so decoding can continue from position L.
+    """
+    bsz, l, _ = x.shape
+    z = layers.dense(params["wz"], x)
+    xbc_raw = layers.dense(params["wxBC"], x)
+    dt_raw = layers.dense(params["wdt"], x)
+
+    xbc = jax.nn.silu(
+        _depthwise_causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    )
+    x_ssm, b_mat, c_mat = _split_xbc(cfg, xbc)
+    x_h, b_h, c_h = _to_heads(cfg, x_ssm, b_mat, c_mat)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, final_state = ssd_chunked(x_h, dt, a, b_h, c_h, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x_h
+    y = y.reshape(bsz, l, cfg.d_inner)
+    y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = layers.dense(params["out_proj"], y)
+
+    k = cfg.ssm_conv
+    window = xbc_raw[:, -(k - 1):, :] if l >= k - 1 else jnp.concatenate(
+        [cache["conv"].astype(xbc_raw.dtype)[:, l:], xbc_raw], axis=1
+    )
+    new_cache = {
+        "conv": window.astype(cache["conv"].dtype),
+        "state": final_state.astype(cache["state"].dtype),
+    }
+    return out, new_cache
+
+
+def mamba2_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # {"conv": (B, K-1, C), "state": (B, H, P, N)}
+) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step."""
+    bsz = x.shape[0]
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_ngroups
+
+    z = layers.dense(params["wz"], x)[:, 0]  # (B, d_inner)
+    xbc_new = layers.dense(params["wxBC"], x)[:, 0]  # (B, C)
+    dt_raw = layers.dense(params["wdt"], x)[:, 0]  # (B, H)
+
+    # rolling conv buffer: window = [cache, new]
+    window = jnp.concatenate(
+        [cache["conv"].astype(xbc_new.dtype), xbc_new[:, None, :]], axis=1
+    )  # (B, K, C)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+    ) + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    conv_cache = window[:, 1:, :].astype(cache["conv"].dtype)
+
+    x_ssm, b_mat, c_mat = _split_xbc(cfg, xbc)
+    x_h = x_ssm.reshape(bsz, h, p)
+    rep = h // g
+    b_h = jnp.repeat(b_mat.reshape(bsz, g, n), rep, axis=1)  # (B,H,N)
+    c_h = jnp.repeat(c_mat.reshape(bsz, g, n), rep, axis=1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,H)
+
+    state = cache["state"].astype(jnp.float32)
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", (dt[..., None] * x_h.astype(jnp.float32)), b_h.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * x_h.astype(jnp.float32)
+    y = y.reshape(bsz, cfg.d_inner).astype(x.dtype)
+
+    y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = layers.dense(params["out_proj"], y[:, None, :])
+    return out, {"conv": conv_cache, "state": state.astype(cache["state"].dtype)}

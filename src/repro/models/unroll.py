@@ -1,0 +1,43 @@
+"""Scan/unroll switch for the dry-run accounting pass.
+
+XLA's ``HloCostAnalysis`` counts a while-loop body ONCE regardless of trip
+count, so FLOPs / bytes / collective traffic inside ``jax.lax.scan`` are
+invisible to ``compiled.cost_analysis()``.  The dry-run therefore lowers an
+*accounting* variant with every scan fully unrolled (at reduced sequence
+lengths — see ``repro.launch.accounting``).  Model code routes every scan
+through :func:`maybe_scan`, which unrolls when the context flag is active.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+_UNROLL: list[bool] = [False]
+
+
+class unroll_scans:
+    """Context manager: fully unroll every ``maybe_scan`` inside."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._prev = False
+
+    def __enter__(self) -> None:
+        self._prev = _UNROLL[0]
+        _UNROLL[0] = self.enabled
+
+    def __exit__(self, *exc: Any) -> None:
+        _UNROLL[0] = self._prev
+
+
+def unrolling() -> bool:
+    return _UNROLL[0]
+
+
+def maybe_scan(body, init, xs, *, length: int | None = None):
+    """``jax.lax.scan`` that fully unrolls under :class:`unroll_scans`."""
+    return jax.lax.scan(
+        body, init, xs, length=length, unroll=True if _UNROLL[0] else 1
+    )

@@ -1,0 +1,19 @@
+from repro.serve.scheduler import Completion, ContinuousBatcher, Request
+from repro.serve.steps import (
+    greedy_sample,
+    make_decode_fn,
+    make_prefill_fn,
+    make_serve_step,
+    temperature_sample,
+)
+
+__all__ = [
+    "Completion",
+    "ContinuousBatcher",
+    "Request",
+    "greedy_sample",
+    "make_decode_fn",
+    "make_prefill_fn",
+    "make_serve_step",
+    "temperature_sample",
+]

@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation axis in the model code carries a *logical* name
+("embed", "heads", "mlp", "vocab", "batch", ...).  A rule table maps logical
+names to physical mesh axes; :func:`spec_for_axes` resolves a tuple of logical
+names into a ``PartitionSpec``, skipping any mapping that does not divide
+evenly (e.g. whisper's 20 heads on a 16-way model axis fall back to
+replication rather than failing).
+
+Two rule sets ship by default:
+
+* ``TRAIN_RULES``  — TP over ``model``, batch over ``(pod, data)``, FSDP
+  (weight sharding) over ``data``.
+* ``SERVE_RULES``  — TP over ``model``, batch over ``(pod, data)``, decode KV
+  cache *sequence*-sharded over ``data`` (flash-decode style) so that a
+  batch-1, 500k-token cache still uses the whole pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import params as pm
+
+# ---------------------------------------------------------------------------
+# Rule tables: logical axis -> mesh axis (or tuple of mesh axes).
+# Order matters: first rule whose mesh axes are all present in the mesh and
+# divide the dimension evenly wins.
+# ---------------------------------------------------------------------------
+
+Rules = tuple[tuple[str, Any], ...]
+
+TRAIN_RULES: Rules = (
+    ("batch", ("pod", "data")),   # examples across the "executor pool"
+    ("batch", "data"),
+    ("expert", "model"),          # expert parallelism
+    ("heads", "model"),           # TP: attention heads
+    ("kv_heads", "model"),
+    ("mlp", "model"),             # TP: FFN hidden
+    ("vocab", "model"),           # TP: embedding/unembedding
+    ("ssm_heads", "model"),
+    ("ssm_inner", "model"),
+    ("kv_lora", None),
+    ("embed", ("pod", "data")),   # FSDP: shard the d_model axis of weights
+    ("embed", "data"),
+    ("expert_data", ("pod", "data")),  # FSDP axis for expert weights
+    ("expert_data", "data"),
+    ("seq", None),
+    ("cache_seq", None),
+    ("layers", None),
+    ("conv", None),
+    ("state", None),
+)
+
+SERVE_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("batch", "data"),
+    ("expert", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("ssm_heads", "model"),
+    ("ssm_inner", "model"),
+    ("kv_lora", None),
+    ("embed", None),              # serving: weights replicated along data
+    ("expert_data", None),
+    ("seq", None),
+    # decode KV cache: sequence sharding over "model" (flash-decode style);
+    # works for every arch/shape (32k and 512k divide 16) including batch=1
+    # long-context, and keeps per-device KV bytes at 1/(data*model).
+    ("cache_seq", "model"),
+    ("layers", None),
+    ("conv", None),
+    ("state", None),
+)
+
+
+#: context-parallel prefill (§Perf hillclimb): activations shard over
+#: (batch x SEQUENCE) instead of TP — weights are fully sharded for storage
+#: and gathered per layer (XLA-inserted), so per-step wire is one weight
+#: gather (~param_bytes) instead of 2 full-activation all-reduces per layer.
+PREFILL_CP_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("batch", "data"),
+    ("seq", "model"),             # context parallelism
+    ("cache_seq", "model"),
+    # weight storage sharding (gathered on use)
+    ("embed", "data"),
+    ("expert_data", "data"),
+    ("expert", "model"),
+    ("heads", None),
+    ("kv_heads", None),
+    ("mlp", None),
+    ("vocab", None),
+    ("ssm_heads", None),
+    ("ssm_inner", None),
+    ("kv_lora", None),
+    ("layers", None),
+    ("conv", None),
+    ("state", None),
+)
+
+#: serve with 2D expert sharding (§Perf): routed-expert weights shard over
+#: (model x data) so a 236B MoE fits per-device HBM at serve time; the
+#: dispatch einsum's d_model contraction turns into a cheap partial-sum
+#: all-reduce of the (tiny) per-expert token blocks.
+SERVE_EP2D_RULES: Rules = tuple(
+    (name, "data") if name == "expert_data" else (name, target)
+    for name, target in SERVE_RULES
+)
+
+RULE_TABLES = {
+    "train": TRAIN_RULES,
+    "serve": SERVE_RULES,
+    "serve_ep2d": SERVE_EP2D_RULES,
+    "prefill_cp": PREFILL_CP_RULES,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Rules
+    mesh: Mesh
+    #: "token" (default): dispatched tokens stay batch-sharded, expert
+    #: weights are gathered (right for training: weights << activations).
+    #: "weight_stationary": dispatched tokens reshard to d_model-sharded so
+    #: 2D-sharded expert weights never move (right for decode: capacity is
+    #: tiny, weights are huge).
+    moe_dispatch: str = "token"
+
+    def mesh_axes_for(self, logical: str | None) -> tuple[str, ...] | None:
+        """First rule for ``logical`` whose mesh axes all exist wins; rules
+        whose axes are absent (e.g. ``pod`` on a single-pod mesh) fall through
+        to the next rule for the same name."""
+        if logical is None:
+            return None
+        for name, target in self.rules:
+            if name != logical:
+                continue
+            if target is None:
+                return None
+            axes = (target,) if isinstance(target, str) else tuple(target)
+            if all(a in self.mesh.axis_names for a in axes):
+                return axes
+        return None
+
+    def candidates_for(self, logical: str | None) -> list[tuple[str, ...]]:
+        """All viable mesh-axis tuples for ``logical``, in rule order."""
+        if logical is None:
+            return []
+        out: list[tuple[str, ...]] = []
+        for name, target in self.rules:
+            if name != logical:
+                continue
+            if target is None:
+                break
+            axes = (target,) if isinstance(target, str) else tuple(target)
+            if all(a in self.mesh.axis_names for a in axes):
+                out.append(axes)
+        return out
+
+    def spec_for_axes(
+        self, axes: Sequence[str | None], shape: Sequence[int] | None = None
+    ) -> P:
+        """Resolve logical axes into a PartitionSpec.
+
+        If ``shape`` is given, a mapping that does not divide the dimension
+        evenly falls through to the next rule for the same logical name, and
+        finally to replication — never a lowering error.  A mesh axis may be
+        consumed at most once per spec.
+        """
+        used: set[str] = set()
+        out: list[Any] = []
+        for i, logical in enumerate(axes):
+            chosen: tuple[str, ...] | None = None
+            for mesh_axes in self.candidates_for(logical):
+                if any(a in used for a in mesh_axes):
+                    continue
+                size = 1
+                for a in mesh_axes:
+                    size *= self.mesh.shape[a]
+                if shape is not None and shape[i] % size != 0:
+                    continue
+                chosen = mesh_axes
+                break
+            if chosen is None:
+                out.append(None)
+                continue
+            used.update(chosen)
+            out.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_pspecs(self, specs: Any) -> Any:
+        """PartitionSpec tree for a ParamSpec tree."""
+        return jax.tree.map(
+            lambda s: self.spec_for_axes(s.axes, s.shape),
+            specs,
+            is_leaf=pm.is_spec,
+        )
+
+    def param_shardings(self, specs: Any) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, self.spec_for_axes(s.axes, s.shape)),
+            specs,
+            is_leaf=pm.is_spec,
+        )
+
+    # -- activations --------------------------------------------------------
+
+    def constrain(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+        """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+        spec = self.spec_for_axes(axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+# A process-global "current rules" so model code can annotate activations
+# without threading the rules object through every function signature.
+_CURRENT: list[ShardingRules | None] = [None]
+
+
+class use_rules:
+    """Context manager installing the active sharding rules."""
+
+    def __init__(self, rules: ShardingRules | None):
+        self.rules = rules
+        self._prev: ShardingRules | None = None
+
+    def __enter__(self) -> ShardingRules | None:
+        self._prev = _CURRENT[0]
+        _CURRENT[0] = self.rules
+        return self.rules
+
+    def __exit__(self, *exc: Any) -> None:
+        _CURRENT[0] = self._prev
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """Annotate activation sharding if rules are active, else pass through."""
+    rules = _CURRENT[0]
+    if rules is None:
+        return x
+    return rules.constrain(x, axes)
+
+
+def current_rules() -> ShardingRules | None:
+    return _CURRENT[0]

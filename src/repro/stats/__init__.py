@@ -1,0 +1,31 @@
+from repro.stats.bootstrap import (
+    Interval,
+    bca_bootstrap,
+    compute_ci,
+    percentile_bootstrap,
+    t_interval,
+    wilson_interval,
+)
+from repro.stats.effect import EffectSize, cohens_d, hedges_g, odds_ratio
+from repro.stats.select import (
+    TestRecommendation,
+    is_binary,
+    recommend_test,
+    run_recommended,
+    shapiro_wilk,
+)
+from repro.stats.significance import (
+    TestResult,
+    mcnemar_test,
+    paired_t_test,
+    permutation_test,
+    wilcoxon_signed_rank,
+)
+
+__all__ = [
+    "EffectSize", "Interval", "TestRecommendation", "TestResult",
+    "bca_bootstrap", "cohens_d", "compute_ci", "hedges_g", "is_binary",
+    "mcnemar_test", "odds_ratio", "paired_t_test", "percentile_bootstrap",
+    "permutation_test", "recommend_test", "run_recommended", "shapiro_wilk",
+    "t_interval", "wilcoxon_signed_rank", "wilson_interval",
+]

@@ -1,0 +1,172 @@
+"""Confidence intervals: percentile bootstrap, BCa bootstrap, analytical
+(t-interval, Wilson score) — paper §4.2.
+
+The resampling engine is JAX (threefry: bit-for-bit deterministic given the
+seed, identical on one host or across a pod — DESIGN.md §8) with exact
+multinomial resampling via ``jax.random.randint`` index draws; the large-n
+Poisson-bootstrap Pallas kernel lives in ``repro/kernels/bootstrap``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.stats.special import norm_cdf, norm_ppf, t_ppf
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    value: float
+    lo: float
+    hi: float
+    method: str
+    n: int
+
+    def as_tuple(self) -> tuple[float, float]:
+        return (self.lo, self.hi)
+
+
+@functools.partial(jax.jit, static_argnames=("n_boot", "stat_fn"))
+def _resample_jit(data, seed, *, n_boot: int, stat_fn):
+    n = data.shape[0]
+    keys = jax.random.split(jax.random.key(seed), n_boot)
+
+    def one(key):
+        idx = jax.random.randint(key, (n,), 0, n)
+        return stat_fn(jnp.take(data, idx, axis=0))
+
+    return jax.lax.map(one, keys, batch_size=min(n_boot, 128))
+
+
+def _resample_stats(
+    data: jnp.ndarray,
+    stat_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    n_boot: int,
+    seed: int,
+) -> np.ndarray:
+    """(n_boot,) statistic over exact multinomial resamples (jit-cached
+    per (n, n_boot, stat_fn) so repeated CI calls don't retrace)."""
+    return np.asarray(
+        _resample_jit(
+            jnp.asarray(data, jnp.float32), seed, n_boot=n_boot, stat_fn=stat_fn
+        )
+    )
+
+
+def percentile_bootstrap(
+    data,
+    stat_fn: Callable = jnp.mean,
+    *,
+    n_boot: int = 1000,
+    confidence: float = 0.95,
+    seed: int = 0,
+) -> Interval:
+    data = jnp.asarray(data, jnp.float32)
+    stats = _resample_stats(data, stat_fn, n_boot, seed)
+    alpha = (1 - confidence) / 2
+    lo, hi = np.quantile(stats, [alpha, 1 - alpha])
+    return Interval(
+        float(stat_fn(data)), float(lo), float(hi), "percentile", data.shape[0]
+    )
+
+
+def bca_bootstrap(
+    data,
+    stat_fn: Callable = jnp.mean,
+    *,
+    n_boot: int = 1000,
+    confidence: float = 0.95,
+    seed: int = 0,
+) -> Interval:
+    """Bias-corrected and accelerated bootstrap (Efron & Tibshirani, ch. 14)."""
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    theta_hat = float(stat_fn(data))
+    stats = _resample_stats(data, stat_fn, n_boot, seed)
+
+    # bias correction z0: proportion of bootstrap stats below the estimate
+    prop = np.clip(
+        np.mean(stats < theta_hat) + 0.5 * np.mean(stats == theta_hat),
+        1.0 / (2 * n_boot),
+        1.0 - 1.0 / (2 * n_boot),
+    )
+    z0 = norm_ppf(float(prop))
+
+    # acceleration a from jackknife values (closed form for the mean:
+    # jack_i = (sum - x_i) / (n-1); general statistics fall back to the
+    # O(n) leave-one-out loop)
+    data_np = np.asarray(data, np.float64)
+    if stat_fn is jnp.mean or stat_fn is np.mean:
+        jack = (data_np.sum() - data_np) / (n - 1)
+    else:
+        jack = np.empty(n, np.float64)
+        for i in range(n):
+            jack[i] = float(stat_fn(jnp.asarray(np.delete(data_np, i, axis=0))))
+    jmean = jack.mean()
+    num = np.sum((jmean - jack) ** 3)
+    den = 6.0 * (np.sum((jmean - jack) ** 2) ** 1.5)
+    a = float(num / den) if den > 0 else 0.0
+
+    alpha = (1 - confidence) / 2
+    z_lo, z_hi = norm_ppf(alpha), norm_ppf(1 - alpha)
+
+    def adj(z: float) -> float:
+        w = z0 + (z0 + z) / (1 - a * (z0 + z))
+        return norm_cdf(w)
+
+    lo, hi = np.quantile(stats, [adj(z_lo), adj(z_hi)])
+    return Interval(theta_hat, float(lo), float(hi), "bca", n)
+
+
+def t_interval(data, *, confidence: float = 0.95) -> Interval:
+    data = np.asarray(data, np.float64)
+    n = data.shape[0]
+    mean = float(data.mean())
+    se = float(data.std(ddof=1) / math.sqrt(n)) if n > 1 else 0.0
+    tcrit = t_ppf(1 - (1 - confidence) / 2, n - 1) if n > 1 else 0.0
+    return Interval(mean, mean - tcrit * se, mean + tcrit * se, "t", n)
+
+
+def wilson_interval(successes: int, n: int, *, confidence: float = 0.95) -> Interval:
+    """Wilson score interval for proportions (robust near 0/1)."""
+    if n == 0:
+        return Interval(0.0, 0.0, 1.0, "wilson", 0)
+    z = norm_ppf(1 - (1 - confidence) / 2)
+    p = successes / n
+    denom = 1 + z * z / n
+    center = (p + z * z / (2 * n)) / denom
+    half = z * math.sqrt(p * (1 - p) / n + z * z / (4 * n * n)) / denom
+    lo = min(max(0.0, center - half), p)   # clamp numerical dust at the edges
+    hi = max(min(1.0, center + half), p)
+    return Interval(p, lo, hi, "wilson", n)
+
+
+def compute_ci(
+    data,
+    *,
+    method: str = "bca",
+    confidence: float = 0.95,
+    n_boot: int = 1000,
+    seed: int = 0,
+    binary: bool = False,
+) -> Interval:
+    """Dispatch per StatisticsConfig.ci_method (+ Wilson for binary metrics)."""
+    if method == "analytical":
+        if binary:
+            arr = np.asarray(data)
+            return wilson_interval(int(arr.sum()), len(arr), confidence=confidence)
+        return t_interval(data, confidence=confidence)
+    if method == "percentile":
+        return percentile_bootstrap(
+            data, n_boot=n_boot, confidence=confidence, seed=seed
+        )
+    if method == "bca":
+        return bca_bootstrap(data, n_boot=n_boot, confidence=confidence, seed=seed)
+    raise ValueError(f"unknown ci method {method!r}")

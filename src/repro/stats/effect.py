@@ -1,0 +1,59 @@
+"""Effect sizes (paper §4.4): Cohen's d, Hedges' g, odds ratio."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EffectSize:
+    name: str
+    value: float
+    magnitude: str  # negligible | small | medium | large
+
+
+def _magnitude(d: float) -> str:
+    ad = abs(d)
+    if ad < 0.2:
+        return "negligible"
+    if ad < 0.5:
+        return "small"
+    if ad < 0.8:
+        return "medium"
+    return "large"
+
+
+def cohens_d(a, b) -> EffectSize:
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    na, nb = len(a), len(b)
+    va = a.var(ddof=1) if na > 1 else 0.0
+    vb = b.var(ddof=1) if nb > 1 else 0.0
+    pooled = math.sqrt(((na - 1) * va + (nb - 1) * vb) / max(na + nb - 2, 1))
+    d = (a.mean() - b.mean()) / pooled if pooled > 0 else 0.0
+    return EffectSize("cohens_d", float(d), _magnitude(d))
+
+
+def hedges_g(a, b) -> EffectSize:
+    d = cohens_d(a, b).value
+    n = len(a) + len(b)
+    j = 1.0 - 3.0 / (4.0 * (n - 2) - 1.0) if n > 2 else 1.0
+    g = d * j
+    return EffectSize("hedges_g", float(g), _magnitude(g))
+
+
+def odds_ratio(a, b, *, haldane: bool = True) -> EffectSize:
+    """Binary outcomes; Haldane-Anscombe 0.5 correction for zero cells."""
+    a = np.asarray(a).astype(bool)
+    b = np.asarray(b).astype(bool)
+    sa, fa = float(a.sum()), float((~a).sum())
+    sb, fb = float(b.sum()), float((~b).sum())
+    if haldane and 0.0 in (sa, fa, sb, fb):
+        sa, fa, sb, fb = sa + 0.5, fa + 0.5, sb + 0.5, fb + 0.5
+    oratio = (sa / fa) / (sb / fb)
+    # magnitude buckets via log-odds ~ d conversion (Chinn 2000: d = ln(OR)/1.81)
+    d_equiv = math.log(oratio) / 1.81 if oratio > 0 else 0.0
+    return EffectSize("odds_ratio", float(oratio), _magnitude(d_equiv))

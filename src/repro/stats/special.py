@@ -1,0 +1,220 @@
+"""Distribution functions from first principles, in float64.
+
+No scipy at runtime (scipy is only a test oracle) and no jax here either —
+jax defaults to f32 which is not enough for tail p-values.  The incomplete
+beta/gamma functions use the standard continued-fraction / series forms
+(Numerical Recipes 6.2-6.4); the normal PPF is Acklam's rational
+approximation refined with one Halley step.
+"""
+
+from __future__ import annotations
+
+import math
+
+_EPS = 3e-16
+_FPMIN = 1e-300
+
+
+def norm_cdf(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def norm_sf(x: float) -> float:
+    return 0.5 * math.erfc(x / math.sqrt(2.0))
+
+
+_ACKLAM_A = (-3.969683028665376e+01, 2.209460984245205e+02,
+             -2.759285104469687e+02, 1.383577518672690e+02,
+             -3.066479806614716e+01, 2.506628277459239e+00)
+_ACKLAM_B = (-5.447609879822406e+01, 1.615858368580409e+02,
+             -1.556989798598866e+02, 6.680131188771972e+01,
+             -1.328068155288572e+01)
+_ACKLAM_C = (-7.784894002430293e-03, -3.223964580411365e-01,
+             -2.400758277161838e+00, -2.549732539343734e+00,
+             4.374664141464968e+00, 2.938163982698783e+00)
+_ACKLAM_D = (7.784695709041462e-03, 3.224671290700398e-01,
+             2.445134137142996e+00, 3.754408661907416e+00)
+
+
+def norm_ppf(p: float) -> float:
+    if not 0.0 < p < 1.0:
+        if p == 0.0:
+            return -math.inf
+        if p == 1.0:
+            return math.inf
+        raise ValueError(p)
+    a, b, c, d = _ACKLAM_A, _ACKLAM_B, _ACKLAM_C, _ACKLAM_D
+    p_low, p_high = 0.02425, 1 - 0.02425
+    if p < p_low:
+        q = math.sqrt(-2 * math.log(p))
+        x = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1
+        )
+    elif p <= p_high:
+        q = p - 0.5
+        r = q * q
+        x = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / (
+            ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1
+        )
+    else:
+        q = math.sqrt(-2 * math.log(1 - p))
+        x = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1
+        )
+    # one Halley refinement
+    e = norm_cdf(x) - p
+    u = e * math.sqrt(2 * math.pi) * math.exp(x * x / 2.0)
+    x = x - u / (1 + x * u / 2)
+    return x
+
+
+# -- incomplete beta (NR betacf / betai) ---------------------------------------
+
+
+def _betacf(a: float, b: float, x: float) -> float:
+    qab, qap, qam = a + b, a + 1.0, a - 1.0
+    c = 1.0
+    d = 1.0 - qab * x / qap
+    if abs(d) < _FPMIN:
+        d = _FPMIN
+    d = 1.0 / d
+    h = d
+    for m in range(1, 400):
+        m2 = 2 * m
+        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+        d = 1.0 + aa * d
+        if abs(d) < _FPMIN:
+            d = _FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < _FPMIN:
+            c = _FPMIN
+        d = 1.0 / d
+        h *= d * c
+        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+        d = 1.0 + aa * d
+        if abs(d) < _FPMIN:
+            d = _FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < _FPMIN:
+            c = _FPMIN
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < _EPS:
+            break
+    return h
+
+
+def betainc(a: float, b: float, x: float) -> float:
+    """Regularized incomplete beta I_x(a, b)."""
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    ln_bt = (
+        math.lgamma(a + b) - math.lgamma(a) - math.lgamma(b)
+        + a * math.log(x) + b * math.log1p(-x)
+    )
+    bt = math.exp(ln_bt)
+    if x < (a + 1.0) / (a + b + 2.0):
+        return bt * _betacf(a, b, x) / a
+    return 1.0 - bt * _betacf(b, a, 1.0 - x) / b
+
+
+# -- incomplete gamma (NR gser / gcf) --------------------------------------------
+
+
+def _gser(a: float, x: float) -> float:
+    ap = a
+    summ = 1.0 / a
+    delta = summ
+    for _ in range(500):
+        ap += 1.0
+        delta *= x / ap
+        summ += delta
+        if abs(delta) < abs(summ) * _EPS:
+            break
+    return summ * math.exp(-x + a * math.log(x) - math.lgamma(a))
+
+
+def _gcf(a: float, x: float) -> float:
+    b = x + 1.0 - a
+    c = 1.0 / _FPMIN
+    d = 1.0 / b
+    h = d
+    for i in range(1, 500):
+        an = -i * (i - a)
+        b += 2.0
+        d = an * d + b
+        if abs(d) < _FPMIN:
+            d = _FPMIN
+        c = b + an / c
+        if abs(c) < _FPMIN:
+            c = _FPMIN
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < _EPS:
+            break
+    return math.exp(-x + a * math.log(x) - math.lgamma(a)) * h
+
+
+def gammainc(a: float, x: float) -> float:
+    """Regularized lower incomplete gamma P(a, x)."""
+    if x < 0 or a <= 0:
+        raise ValueError((a, x))
+    if x == 0:
+        return 0.0
+    if x < a + 1.0:
+        return _gser(a, x)
+    return 1.0 - _gcf(a, x)
+
+
+# -- distributions ------------------------------------------------------------------
+
+
+def t_cdf(x: float, df: float) -> float:
+    if df <= 0:
+        raise ValueError("df must be positive")
+    ib = betainc(df / 2.0, 0.5, df / (df + x * x))
+    return 1.0 - 0.5 * ib if x >= 0 else 0.5 * ib
+
+
+def t_sf(x: float, df: float) -> float:
+    return 1.0 - t_cdf(x, df)
+
+
+def t_ppf(p: float, df: float, *, tol: float = 1e-12) -> float:
+    if not 0.0 < p < 1.0:
+        raise ValueError(p)
+    lo, hi = -1e8, 1e8
+    for _ in range(400):
+        mid = 0.5 * (lo + hi)
+        if t_cdf(mid, df) < p:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo < tol * max(1.0, abs(mid)):
+            break
+    return 0.5 * (lo + hi)
+
+
+def chi2_sf(x: float, df: float) -> float:
+    if x < 0:
+        return 1.0
+    return 1.0 - gammainc(df / 2.0, x / 2.0)
+
+
+def binom_pmf(k: int, n: int, p: float) -> float:
+    return math.comb(n, k) * p**k * (1 - p) ** (n - k)
+
+
+def binom_test_two_sided(k: int, n: int, p: float = 0.5) -> float:
+    """Exact two-sided binomial test (sum of outcomes as or less likely)."""
+    pk = binom_pmf(k, n, p)
+    total = sum(
+        binom_pmf(i, n, p)
+        for i in range(n + 1)
+        if binom_pmf(i, n, p) <= pk * (1 + 1e-12)
+    )
+    return min(1.0, total)

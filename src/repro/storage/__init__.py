@@ -1,0 +1,3 @@
+from repro.storage.deltalite import CommitConflict, DeltaLite
+
+__all__ = ["CommitConflict", "DeltaLite"]

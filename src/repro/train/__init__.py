@@ -1,0 +1,25 @@
+from repro.train.loss import cross_entropy
+from repro.train.optimizer import (
+    AdamWState,
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+from repro.train.step import TrainConfig, make_loss_fn, make_train_step
+
+__all__ = [
+    "AdamWState",
+    "OptimizerConfig",
+    "TrainConfig",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cross_entropy",
+    "global_norm",
+    "init_opt_state",
+    "lr_at",
+    "make_loss_fn",
+    "make_train_step",
+]

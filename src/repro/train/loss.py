@@ -1,0 +1,47 @@
+"""Next-token cross-entropy with vocab-padding masking and z-loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, Vp) f32, possibly vocab-padded
+    labels: jax.Array,  # (B, S) int32, -1 = ignore
+    vocab_size: int,
+    z_loss_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    """Mean masked token NLL (+ z-loss).  Padded vocab ids get -inf logits.
+
+    Uses ``take_along_axis`` for the label logit (XLA partitions the gather
+    with a masked local gather + all-reduce when vocab is TP-sharded — this
+    avoids materializing a (B, S, V) one-hot; see DESIGN.md §5).
+    """
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        pad_mask = jnp.arange(vp) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e9)
+
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B, S)
+    label_ids = jnp.maximum(labels, 0)
+    label_logit = jnp.take_along_axis(logits, label_ids[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+
+    z = jnp.sum(jnp.square(lse) * mask) / denom
+    total = loss + z_loss_weight * z
+
+    metrics = {
+        "nll": loss,
+        "z_loss": z,
+        "tokens": jnp.sum(mask),
+        "accuracy": jnp.sum(
+            (jnp.argmax(logits, axis=-1) == label_ids).astype(jnp.float32) * mask
+        )
+        / denom,
+    }
+    return total, metrics

@@ -1,0 +1,110 @@
+"""``train_step`` factory: loss → grad → (optional microbatch accumulation) →
+AdamW update.  This is the function the dry-run lowers for ``train_4k``.
+
+Gradient accumulation scans over microbatches (sequential, f32 accumulator),
+trading step latency for activation memory — the standard large-batch recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.train import loss as loss_lib
+from repro.train import optimizer as opt_lib
+from repro.models.unroll import maybe_scan
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+    microbatches: int = 1
+    z_loss_weight: float = 1e-4
+    compute_dtype: Any = jnp.bfloat16
+
+
+def make_loss_fn(
+    model: Any, cfg: ModelConfig, tcfg: TrainConfig
+) -> Callable[[PyTree, dict], tuple[jax.Array, dict]]:
+    def loss_fn(params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+        logits, aux = model.forward(params, batch, dtype=tcfg.compute_dtype)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # logits cover [vision prefix | text]; align to text labels
+            logits = logits[:, cfg.n_vision_tokens :]
+        total, metrics = loss_lib.cross_entropy(
+            logits, labels, cfg.padded_vocab, tcfg.z_loss_weight
+        )
+        if cfg.n_experts:
+            total = total + cfg.router_aux_weight * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = total
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Any, cfg: ModelConfig, tcfg: TrainConfig
+) -> Callable[[PyTree, opt_lib.AdamWState, dict], tuple[PyTree, Any, dict]]:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``batch`` arrays have a leading global-batch axis; with
+    ``tcfg.microbatches > 1`` they are reshaped to (M, B/M, ...) and
+    accumulated with a sequential scan.
+    """
+    loss_fn = make_loss_fn(model, cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (_, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulated(params, batch):
+        m = tcfg.microbatches
+
+        def reshape(x):
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(carry, mb):
+            acc, met_acc = carry
+            grads, metrics = single(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / m, acc, grads
+            )
+            met_acc = jax.tree.map(lambda a, x: a + x / m, met_acc, metrics)
+            return (acc, met_acc), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        g0, met0 = single(params, jax.tree.map(lambda x: x[0], micro))
+        init = (
+            jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / m, zero_g, g0),
+            jax.tree.map(lambda x: x / m, met0),
+        )
+        (grads, metrics), _ = maybe_scan(
+            body, init, jax.tree.map(lambda x: x[1:], micro)
+        )
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            grads, metrics = accumulated(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        params, opt_state, opt_metrics = opt_lib.adamw_update(
+            tcfg.optimizer, params, grads, opt_state
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

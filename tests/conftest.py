@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must see
+# the real single CPU device; only launch/dryrun.py forces 512 placeholders.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

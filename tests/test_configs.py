@@ -1,0 +1,76 @@
+"""Assigned-architecture configs: exact numbers, plausible parameter counts."""
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.models import params as pm
+from repro.models.model import active_param_count, build_model
+
+# (arch, expected total params, rel tolerance).  Expectations are the
+# published sizes; hash-tokenizer vocab padding and stubbed frontends keep
+# us within tolerance.
+EXPECTED_PARAMS = {
+    "whisper-large-v3": (1.5e9, 0.35),   # decoder+encoder backbone only
+    "qwen1.5-110b": (111e9, 0.10),
+    "qwen3-4b": (4.0e9, 0.15),
+    "minicpm3-4b": (4.0e9, 0.25),
+    "qwen2.5-32b": (32.5e9, 0.10),
+    "zamba2-7b": (7.2e9, 0.25),
+    "paligemma-3b": (2.9e9, 0.30),       # vision tower stubbed
+    "mamba2-2.7b": (2.7e9, 0.15),
+    "qwen3-moe-30b-a3b": (30.5e9, 0.15),
+    "deepseek-v2-236b": (236e9, 0.15),
+}
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    n = pm.param_count(model.param_specs())
+    expect, tol = EXPECTED_PARAMS[arch]
+    assert abs(n - expect) / expect < tol, (
+        f"{arch}: {n:,} params vs expected {expect:,.0f}"
+    )
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    model = build_model(cfg)
+    specs = model.param_specs()
+    total = pm.param_count(specs)
+    active = active_param_count(cfg, specs)
+    assert active < total * 0.35
+    assert abs(active - 3.3e9) / 3.3e9 < 0.4  # "a3b" = ~3B active
+
+    ds = get_config("deepseek-v2-236b")
+    dspecs = build_model(ds).param_specs()
+    dactive = active_param_count(ds, dspecs)
+    assert abs(dactive - 21e9) / 21e9 < 0.35  # paper: 21B active
+
+
+def test_shape_grid():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    cells = [(a, s) for a in ARCHS for s in applicable_shapes(get_config(a))]
+    # 10 archs x 3 shapes + long_500k for the two sub-quadratic archs
+    assert len(cells) == 32
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"mamba2-2.7b", "zamba2-7b"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_configs_are_small(arch):
+    r = get_config(arch).reduced()
+    n = pm.param_count(build_model(r).param_specs())
+    assert n < 5e6, f"{arch} reduced config too big for CPU smoke: {n:,}"
+
+
+def test_padded_vocab_divides_tp16():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size

@@ -1,0 +1,60 @@
+"""Dry-run integration: the production-mesh lowering pipeline end-to-end.
+
+Runs in a subprocess because the dry-run forces 512 placeholder devices via
+XLA_FLAGS, which must never leak into this (single-device) test process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    out_dir = tmp_path / "dryrun"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "mamba2-2.7b", "--shape", "decode_32k",
+            "--skip-accounting", "--out-dir", str(out_dir),
+        ],
+        cwd=REPO,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec_path = out_dir / "mamba2-2.7b_decode_32k_16x16.json"
+    assert rec_path.exists()
+    rec = json.loads(rec_path.read_text())
+    assert rec["ok"] and rec["chips"] == 256
+    assert rec["memory"]["peak_bytes_est"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    # a 2.7B bf16 model on 256 chips must comfortably fit v5e HBM
+    assert rec["memory"]["peak_bytes_est"] < 16e9
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_cell(tmp_path):
+    out_dir = tmp_path / "dryrun"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "qwen3-4b", "--shape", "decode_32k",
+            "--multi-pod", "--out-dir", str(out_dir),
+        ],
+        cwd=REPO,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads((out_dir / "qwen3-4b_decode_32k_2x16x16.json").read_text())
+    assert rec["chips"] == 512  # proves the "pod" axis shards

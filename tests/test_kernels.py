@@ -1,0 +1,140 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bertscore import bertscore_pr, bertscore_ref
+from repro.kernels.bootstrap import bootstrap_means, bootstrap_means_ref
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_bshd,
+    flash_attention_ref,
+)
+from repro.kernels.ssd import ssd, ssd_ref
+from repro.models.ssm import ssd_chunked
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 3e-2
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize(
+    "b,h,kh,sq,sk,d,causal",
+    [
+        (2, 4, 2, 128, 128, 32, True),
+        (1, 8, 8, 256, 256, 64, True),
+        (2, 4, 1, 128, 256, 32, False),
+        (1, 2, 2, 64, 192, 128, True),
+    ],
+)
+def test_flash_attention(b, h, kh, sq, sk, d, causal, dtype, rng):
+    q = jnp.asarray(rng.randn(b, h, sq, d), dtype)
+    k = jnp.asarray(rng.randn(b, kh, sk, d), dtype)
+    v = jnp.asarray(rng.randn(b, kh, sk, d), dtype)
+    off = sk - sq if causal else 0
+    out = flash_attention(
+        q, k, v, causal=causal, block_q=64, block_k=64, q_offset=off,
+        interpret=True,
+    )
+    ref = flash_attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_flash_attention_bshd_layout(rng):
+    b, s, h, kh, d = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
+    out = flash_attention_bshd(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize(
+    "b,kh,g,s,d", [(2, 2, 4, 256, 32), (3, 1, 8, 512, 64), (2, 4, 1, 128, 32)]
+)
+def test_decode_attention(b, kh, g, s, d, dtype, rng):
+    q = jnp.asarray(rng.randn(b, kh, g, d), dtype)
+    k = jnp.asarray(rng.randn(b, kh, s, d), dtype)
+    v = jnp.asarray(rng.randn(b, kh, s, d), dtype)
+    lens = jnp.asarray(rng.randint(1, s, (b,)), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=64, interpret=True)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize(
+    "b,l,h,p,n,chunk",
+    [(2, 64, 2, 16, 8, 16), (1, 128, 4, 32, 16, 32), (2, 32, 1, 8, 128, 32)],
+)
+def test_ssd_kernel_and_chunked(b, l, h, p, n, chunk, rng):
+    x = jnp.asarray(rng.randn(b, l, h, p) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(b, l, h)) * 0.5 + 0.1, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.randn(h)) - 0.2, jnp.float32)
+    bm = jnp.asarray(rng.randn(b, l, h, n) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.randn(b, l, h, n) * 0.5, jnp.float32)
+    y_ref, fs_ref = ssd_ref(x, dt, a, bm, cm)
+    y_k, fs_k = ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    y_c, fs_c = ssd_chunked(x, dt, a, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(fs_k), np.asarray(fs_ref), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(fs_c), np.asarray(fs_ref), atol=5e-5)
+
+
+@pytest.mark.parametrize("n,nb", [(1000, 128), (513, 256), (4096, 64)])
+def test_bootstrap_kernel_matches_ref(n, nb, rng):
+    data = jnp.asarray(rng.randn(n) * 2 + 5, jnp.float32)
+    km = bootstrap_means(
+        data, jnp.uint32(42), n_boot=nb, block_boot=64, block_n=256, interpret=True
+    )
+    rm = bootstrap_means_ref(data, nb, 42)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(rm), atol=1e-5)
+
+
+def test_bootstrap_statistics(rng):
+    data = jnp.asarray(rng.randn(2000) * 3 + 10, jnp.float32)
+    means = bootstrap_means_ref(data, 512, 7)
+    sd = float(jnp.std(means))
+    expected_se = 3 / np.sqrt(2000)
+    assert abs(float(jnp.mean(means)) - 10.0) < 0.3
+    assert 0.5 * expected_se < sd < 2.0 * expected_se
+
+
+@pytest.mark.parametrize(
+    "b,lc,lr,d", [(3, 16, 24, 32), (2, 8, 40, 64), (4, 32, 8, 16)]
+)
+def test_bertscore_kernel(b, lc, lr, d, rng):
+    cand = jnp.asarray(rng.randn(b, lc, d), jnp.float32)
+    ref = jnp.asarray(rng.randn(b, lr, d), jnp.float32)
+    cmask = jnp.asarray(rng.rand(b, lc) > 0.2)
+    rmask = jnp.asarray(rng.rand(b, lr) > 0.2)
+    p, r = bertscore_pr(cand, ref, cmask, rmask, block_r=16, interpret=True)
+    pr, rr, _ = bertscore_ref(cand, ref, cmask, rmask)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(pr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(rr), atol=1e-5)
+
+
+def test_bertscore_identity(rng):
+    """Identical sequences score P = R = 1."""
+    emb = jnp.asarray(rng.randn(2, 12, 32), jnp.float32)
+    mask = jnp.ones((2, 12))
+    p, r = bertscore_pr(emb, emb, mask, mask, block_r=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(p), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), 1.0, atol=1e-5)

