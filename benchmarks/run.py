@@ -25,6 +25,7 @@ def main() -> None:
         coverage,
         kernels_bench,
         scaling,
+        suite_overhead,
         throughput,
         type1,
     )
@@ -37,6 +38,7 @@ def main() -> None:
         "type1_error": lambda: type1.run(full=args.full),
         "table6_cost": lambda: cost.run(),
         "kernels": lambda: kernels_bench.run(),
+        "suite_overhead": lambda: suite_overhead.run(),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 

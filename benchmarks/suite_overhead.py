@@ -1,0 +1,157 @@
+"""Per-task setup overhead: N sequential ``EvalRunner.evaluate`` calls
+(fresh engine + cache handle + limiter + pool each time) vs one
+``EvalSession.run_suite`` (shared resources, initialize once).
+
+Emits ``BENCH_suite.json`` with wall times, per-task setup cost, and
+engine initialization counts for both paths.
+
+  PYTHONPATH=src python -m benchmarks.suite_overhead [--local]
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+from repro.core import (
+    EngineModelConfig,
+    EvalRunner,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    SimulatedAPIEngine,
+    StatisticsConfig,
+)
+from repro.core.engines import LocalJaxEngine
+from repro.data import mixed_examples
+
+MODELS = {
+    "api": [
+        EngineModelConfig(provider="openai", model_name="gpt-4o-mini"),
+        EngineModelConfig(provider="anthropic", model_name="claude-3-haiku"),
+    ],
+    "local": [
+        EngineModelConfig(provider="local", model_name="qwen3-4b", reduced=True),
+    ],
+}
+
+
+class _InitCounter:
+    """Count engine initializations without changing behaviour."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self._origs = {}
+
+    def __enter__(self) -> "_InitCounter":
+        for cls in (SimulatedAPIEngine, LocalJaxEngine):
+            orig = cls.initialize
+            self._origs[cls] = orig
+
+            def counting(engine, _orig=orig):
+                self.count += 1
+                _orig(engine)
+
+            cls.initialize = counting
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for cls, orig in self._origs.items():
+            cls.initialize = orig
+
+
+def _tasks(models, root: str, n_tasks: int) -> list[tuple[EvalTask, list[dict]]]:
+    out = []
+    for t in range(n_tasks):
+        rows = mixed_examples(40, seed=t)
+        out.append(
+            (
+                EvalTask(
+                    task_id=f"bench-task-{t}",
+                    model=models[0],
+                    inference=InferenceConfig(
+                        batch_size=10, n_workers=4,
+                        cache_dir=f"{root}/task{t}",
+                    ),
+                    metrics=(MetricConfig("token_f1"), MetricConfig("exact_match")),
+                    statistics=StatisticsConfig(
+                        bootstrap_iterations=100, ci_method="percentile"
+                    ),
+                ),
+                rows,
+            )
+        )
+    return out
+
+
+def run(*, local: bool = False, n_tasks: int = 3) -> list[str]:
+    models = MODELS["local" if local else "api"]
+    n_jobs = len(models) * n_tasks
+
+    # -- legacy path: fresh runner resources per (model, task) ----------------
+    root = tempfile.mkdtemp()
+    tasks = _tasks(models, root, n_tasks)
+    with _InitCounter() as runner_inits:
+        t0 = time.perf_counter()
+        runner = EvalRunner()
+        for model in models:
+            for task, rows in tasks:
+                runner.evaluate(rows, task.with_model(model))
+        runner_s = time.perf_counter() - t0
+
+    # -- session path: one suite over the same (model, task) grid -------------
+    root = tempfile.mkdtemp()
+    tasks = _tasks(models, root, n_tasks)
+    suite = EvalSuite("overhead")
+    for task, rows in tasks:
+        suite.add_task(task, rows)
+    suite.sweep_models(models)
+    with _InitCounter() as session_inits:
+        t0 = time.perf_counter()
+        with EvalSession() as session:
+            session.run_suite(suite)
+        session_s = time.perf_counter() - t0
+
+    payload = {
+        "mode": "local" if local else "api",
+        "n_models": len(models),
+        "n_tasks": n_tasks,
+        "runner_sequential_s": runner_s,
+        "session_suite_s": session_s,
+        "runner_per_task_s": runner_s / n_jobs,
+        "session_per_task_s": session_s / n_jobs,
+        "speedup": runner_s / session_s if session_s > 0 else float("inf"),
+        "engine_inits_runner": runner_inits.count,
+        "engine_inits_session": session_inits.count,
+    }
+    with open("BENCH_suite.json", "w") as f:
+        json.dump(payload, f, indent=1)
+
+    return [
+        f"suite_overhead_runner,{runner_s * 1e6 / n_jobs:.0f},"
+        f"inits={runner_inits.count} total={runner_s:.2f}s",
+        f"suite_overhead_session,{session_s * 1e6 / n_jobs:.0f},"
+        f"inits={session_inits.count} total={session_s:.2f}s "
+        f"speedup={payload['speedup']:.2f}x",
+    ]
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--local", action="store_true",
+                   help="use the LocalJaxEngine (real init cost) instead of "
+                        "the simulated API engines")
+    p.add_argument("--n-tasks", type=int, default=3)
+    args = p.parse_args()
+    for line in run(local=args.local, n_tasks=args.n_tasks):
+        print(line)
+    print("wrote BENCH_suite.json")
+
+
+if __name__ == "__main__":
+    main()

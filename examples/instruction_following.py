@@ -2,6 +2,11 @@
 models with lexical, semantic and LLM-judge metrics, bootstrap CIs and the
 full significance-test pipeline.
 
+This example intentionally stays on the legacy ``EvalRunner`` shim to
+document backward compatibility: it delegates to a fresh single-task
+``EvalSession`` per call, so pre-session code keeps working unchanged
+(see examples/quickstart.py for the session/suite API).
+
   PYTHONPATH=src python examples/instruction_following.py
 """
 

@@ -1,5 +1,10 @@
-"""Quickstart: evaluate a model on a synthetic QA set with full statistical
-accounting — the paper's minimal workflow.
+"""Quickstart: evaluate models on a synthetic QA set with full statistical
+accounting — the paper's minimal workflow, on the EvalSession API.
+
+A session owns the shared resources (engine registry, response caches,
+rate limiters, worker pools), so evaluating several tasks or models pays
+setup cost once.  ``run_suite`` adds cross-model pairwise significance
+testing on top.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +13,8 @@ import tempfile
 
 from repro.core import (
     EngineModelConfig,
-    EvalRunner,
+    EvalSession,
+    EvalSuite,
     EvalTask,
     InferenceConfig,
     MetricConfig,
@@ -38,15 +44,30 @@ def main() -> None:
         ),
     )
 
-    result = EvalRunner().evaluate(rows, task)
+    with EvalSession() as session:
+        # -- single task ------------------------------------------------------
+        result = session.run_task(rows, task)
+        print(f"evaluated {len(rows)} examples "
+              f"({result.throughput_per_min:.0f} examples/min)\n")
+        for name, mv in result.metrics.items():
+            print(f"  {name:24s} {mv}")
+        print(f"\ncache: {result.cache_stats}")
+        print(f"engine cost: ${result.engine_stats['total_cost']:.4f}")
+        print(f"stage timing: "
+              f"{ {k: round(v, 3) for k, v in result.timing.items()} }")
 
-    print(f"evaluated {len(rows)} examples "
-          f"({result.throughput_per_min:.0f} examples/min)\n")
-    for name, mv in result.metrics.items():
-        print(f"  {name:24s} {mv}")
-    print(f"\ncache: {result.cache_stats}")
-    print(f"engine cost: ${result.engine_stats['total_cost']:.4f}")
-    print(f"stage timing: { {k: round(v, 3) for k, v in result.timing.items()} }")
+        # -- model sweep with pairwise significance ---------------------------
+        suite = (
+            EvalSuite("quickstart-sweep")
+            .add_task(task, rows)
+            .sweep_models([
+                EngineModelConfig(provider="openai", model_name="gpt-4o-mini"),
+                EngineModelConfig(provider="openai", model_name="gpt-4o"),
+            ])
+        )
+        suite_res = session.run_suite(suite)
+        print("\n" + suite_res.summary())
+        print(f"\nsession accounting: {session.accounting.as_dict()}")
 
 
 if __name__ == "__main__":

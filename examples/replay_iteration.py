@@ -1,6 +1,9 @@
-"""The paper's replay workflow (Table 4): one paid inference run, then
-iterate on metric definitions against the cache at zero engine cost —
-including time-travel back to the exact table version of the first run.
+"""The paper's replay workflow (Table 4) on the stage-pipeline API: one
+paid inference run, then iterate on metric definitions at zero engine
+cost — first via strict REPLAY cache mode, then via a stage swap
+(``rescore_stages``) that re-scores the captured responses without
+touching the engine at all — plus time-travel back to the exact table
+version of the first run.
 
   PYTHONPATH=src python examples/replay_iteration.py
 """
@@ -11,11 +14,12 @@ import tempfile
 from repro.core import (
     CachePolicy,
     EngineModelConfig,
-    EvalRunner,
+    EvalSession,
     EvalTask,
     InferenceConfig,
     MetricConfig,
     StatisticsConfig,
+    rescore_stages,
 )
 from repro.data import mixed_examples
 from repro.storage import DeltaLite
@@ -31,29 +35,43 @@ def main() -> None:
         metrics=(MetricConfig("token_f1"),),
         statistics=StatisticsConfig(bootstrap_iterations=500, ci_method="percentile"),
     )
-    runner = EvalRunner()
 
-    r0 = runner.evaluate(rows, base)
-    print(f"initial run: {len(rows)} inferences, "
-          f"cost=${r0.engine_stats['total_cost']:.4f}, "
-          f"token_f1={r0.metrics['token_f1']}")
+    with EvalSession() as session:
+        r0 = session.run_task(rows, base)
+        print(f"initial run: {len(rows)} inferences, "
+              f"cost=${r0.engine_stats['total_cost']:.4f}, "
+              f"token_f1={r0.metrics['token_f1']}")
 
-    # --- metric iteration in strict replay: zero API calls -------------------
-    for i, metrics in enumerate(
-        [
-            (MetricConfig("token_f1"), MetricConfig("bleu")),
-            (MetricConfig("rouge_l"), MetricConfig("embedding_similarity")),
-            (MetricConfig("exact_match"), MetricConfig("contains")),
-        ],
-        1,
-    ):
-        task = dc.replace(
-            base, metrics=metrics,
-            inference=dc.replace(base.inference, cache_policy=CachePolicy.REPLAY),
+        # --- metric iteration in strict replay: zero API calls ----------------
+        for i, metrics in enumerate(
+            [
+                (MetricConfig("token_f1"), MetricConfig("bleu")),
+                (MetricConfig("rouge_l"), MetricConfig("embedding_similarity")),
+            ],
+            1,
+        ):
+            task = dc.replace(
+                base, metrics=metrics,
+                inference=dc.replace(
+                    base.inference, cache_policy=CachePolicy.REPLAY
+                ),
+            )
+            r = session.run_task(rows, task)
+            names = ", ".join(f"{n}={mv.value:.3f}" for n, mv in r.metrics.items())
+            print(f"iteration {i} (replay, 100% cache hits): {names}")
+
+        # --- stage swap: re-score captured responses, no engine, no cache ------
+        re_task = base.with_metrics(
+            MetricConfig("exact_match"), MetricConfig("contains")
         )
-        r = runner.evaluate(rows, task)
+        r = session.run_task(
+            rows, re_task, stages=rescore_stages(r0.responses)
+        )
         names = ", ".join(f"{n}={mv.value:.3f}" for n, mv in r.metrics.items())
-        print(f"iteration {i} (replay, 100% cache hits): {names}")
+        print(f"iteration 3 (stage swap, {r.engine_stats['calls']} engine "
+              f"calls): {names}")
+
+        print(f"\nsession totals: {session.accounting.as_dict()}")
 
     # --- Delta-style table inspection ----------------------------------------
     table = DeltaLite(cache_dir, key_column="prompt_hash")

@@ -1,6 +1,7 @@
 """The paper's primary contribution: distributed, statistically rigorous
-LLM evaluation — config system, rate-limited cached inference orchestration,
-metric computation, statistical aggregation, model comparison, tracking."""
+LLM evaluation — config system, session-owned shared resources, the
+composable stage pipeline, metric computation, statistical aggregation,
+multi-model suite comparison, tracking."""
 
 from repro.core.cache import CacheEntry, CacheMiss, ResponseCache
 from repro.core.compare import Comparison, compare_results, compare_scores
@@ -15,6 +16,7 @@ from repro.core.config import (
     cache_key,
 )
 from repro.core.engines import (
+    EngineRegistry,
     InferenceEngine,
     InferenceRequest,
     InferenceResponse,
@@ -26,15 +28,40 @@ from repro.core.engines import (
     retry_with_backoff,
 )
 from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
-from repro.core.runner import EvalResult, EvalRunner, MetricValue
+from repro.core.runner import EvalRunner
+from repro.core.session import EvalSession, SessionAccounting
+from repro.core.stages import (
+    AggregateStage,
+    CostBudgetExceeded,
+    CostBudgetMiddleware,
+    EvalArtifact,
+    EvalResult,
+    InferStage,
+    MetricValue,
+    Middleware,
+    PrepareStage,
+    ProgressMiddleware,
+    ScoreStage,
+    Stage,
+    StaticResponsesStage,
+    TrackingMiddleware,
+    default_stages,
+    rescore_stages,
+)
+from repro.core.suite import EvalSuite, SuiteJob, SuiteResult
 from repro.core.tracking import RunTracker
 
 __all__ = [
-    "AdaptiveLimiter", "CacheEntry", "CacheMiss", "CachePolicy", "Comparison",
-    "DataConfig", "EngineModelConfig", "EvalResult", "EvalRunner", "EvalTask",
-    "InferenceConfig", "InferenceEngine", "InferenceRequest",
+    "AdaptiveLimiter", "AggregateStage", "CacheEntry", "CacheMiss",
+    "CachePolicy", "Comparison", "CostBudgetExceeded", "CostBudgetMiddleware",
+    "DataConfig", "EngineModelConfig", "EngineRegistry", "EvalArtifact",
+    "EvalResult", "EvalRunner", "EvalSession", "EvalSuite", "EvalTask",
+    "InferStage", "InferenceConfig", "InferenceEngine", "InferenceRequest",
     "InferenceResponse", "LocalJaxEngine", "MetricConfig", "MetricValue",
-    "ResponseCache", "RunTracker", "SimulatedAPIEngine", "StatisticsConfig",
-    "TokenBucket", "api_cost", "cache_key", "compare_results",
-    "compare_scores", "create_engine", "get_engine", "retry_with_backoff",
+    "Middleware", "PrepareStage", "ProgressMiddleware", "ResponseCache",
+    "RunTracker", "ScoreStage", "SessionAccounting", "SimulatedAPIEngine",
+    "Stage", "StaticResponsesStage", "StatisticsConfig", "SuiteJob",
+    "SuiteResult", "TokenBucket", "TrackingMiddleware", "api_cost",
+    "cache_key", "compare_results", "compare_scores", "create_engine",
+    "default_stages", "get_engine", "rescore_stages", "retry_with_backoff",
 ]

@@ -85,6 +85,14 @@ class EvalTask:
     statistics: StatisticsConfig = StatisticsConfig()
     data: DataConfig = DataConfig()
 
+    def with_model(self, model: "EngineModelConfig") -> "EvalTask":
+        """Rebind the task to another model (used by suite model sweeps)."""
+        return dataclasses.replace(self, model=model)
+
+    def with_metrics(self, *metrics: "MetricConfig") -> "EvalTask":
+        """Rebind the metric set (used by cache-replay metric iteration)."""
+        return dataclasses.replace(self, metrics=tuple(metrics))
+
     def to_json(self) -> str:
         def default(o: Any):
             if dataclasses.is_dataclass(o):

@@ -304,17 +304,6 @@ class LocalJaxEngine(InferenceEngine):
 
 # -- registry (Listing 1) ------------------------------------------------------------
 
-_ENGINE_CACHE: dict[str, InferenceEngine] = {}
-
-
-def engine_config_json(model: EngineModelConfig, inference: InferenceConfig) -> str:
-    return json.dumps(
-        {"model": dataclasses.asdict(model),
-         "inference": {k: (v.value if hasattr(v, "value") else v)
-                       for k, v in dataclasses.asdict(inference).items()}},
-        sort_keys=True,
-    )
-
 
 def create_engine(model: EngineModelConfig, **kw: Any) -> InferenceEngine:
     if model.provider == "local":
@@ -322,16 +311,53 @@ def create_engine(model: EngineModelConfig, **kw: Any) -> InferenceEngine:
     return SimulatedAPIEngine(model, **kw)
 
 
+class EngineRegistry:
+    """One initialized engine per :class:`EngineModelConfig` (+ extra
+    constructor kwargs).  The paper's Listing-1 ``_ENGINE_CACHE`` pattern,
+    made an owned object so an :class:`~repro.core.session.EvalSession`
+    amortizes initialization across every task it runs — in JAX terms:
+    compile once, execute many.
+    """
+
+    def __init__(self) -> None:
+        self._engines: dict[tuple[EngineModelConfig, str], InferenceEngine] = {}
+        self.initializations = 0
+
+    def get(self, model: EngineModelConfig, **kw: Any) -> InferenceEngine:
+        key = (model, json.dumps(kw, sort_keys=True, default=str))
+        engine = self._engines.get(key)
+        if engine is None:
+            engine = create_engine(model, **kw)
+            engine.initialize()
+            self.initializations += 1
+            self._engines[key] = engine
+        return engine
+
+    def shutdown(self) -> None:
+        for engine in self._engines.values():
+            engine.shutdown()
+        self._engines.clear()
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def __contains__(self, model: EngineModelConfig) -> bool:
+        return any(k[0] == model for k in self._engines)
+
+    def engines(self) -> list[InferenceEngine]:
+        return list(self._engines.values())
+
+
+_PROCESS_REGISTRY = EngineRegistry()
+
+
 def get_engine(
     model: EngineModelConfig, inference: InferenceConfig, **kw: Any
 ) -> InferenceEngine:
-    key = engine_config_json(model, inference) + json.dumps(kw, sort_keys=True, default=str)
-    engine = _ENGINE_CACHE.get(key)
-    if engine is None:
-        engine = create_engine(model, **kw)
-        engine.initialize()
-        _ENGINE_CACHE[key] = engine
-    return engine
+    """Process-global engine lookup (legacy); sessions own their own
+    :class:`EngineRegistry` instead."""
+    del inference  # engines depend only on the model config + kwargs
+    return _PROCESS_REGISTRY.get(model, **kw)
 
 
 def retry_with_backoff(

@@ -1,73 +1,41 @@
-"""EvalRunner: the paper's four-stage evaluation pipeline (§3, Figure 1).
+"""EvalRunner: legacy single-task facade over the stage-pipeline API.
 
-  1. prompt preparation  — template rendering,
-  2. distributed inference — sharded across the worker pool with
-     per-worker token-bucket rate limiting, caching, retries and
-     speculative re-issue,
-  3. metric computation   — vectorized per-example scoring,
-  4. statistical aggregation — CIs for every metric (Wilson for binary,
-     bootstrap/BCa otherwise), unscored counts reported.
+The paper's four-stage evaluation (§3, Figure 1) now lives in
+:mod:`repro.core.stages` as composable stage objects —
 
-A killed evaluation resumes for free: re-running the same task in ENABLED
-(or REPLAY) cache mode skips every already-answered prompt — the response
-cache doubles as the fault-tolerance journal (DESIGN.md §5).
+  1. ``PrepareStage``   — template rendering,
+  2. ``InferStage``     — sharded inference with per-worker token-bucket
+     rate limiting, caching, retries and speculative re-issue,
+  3. ``ScoreStage``     — vectorized per-example metric computation,
+  4. ``AggregateStage`` — CIs for every metric (Wilson for binary,
+     bootstrap/BCa otherwise), unscored counts reported —
+
+executed by a long-lived :class:`repro.core.session.EvalSession` that
+owns the shared engine registry, response caches, limiters and worker
+pools, and by ``EvalSession.run_suite`` for multi-task × multi-model
+suites with pairwise significance testing
+(:mod:`repro.core.suite`).
+
+``EvalRunner`` is kept as a thin backward-compatible shim: each
+``evaluate`` call opens a fresh single-task session, so its results are
+identical to the historical monolithic runner (fresh engine, fresh
+cache handle, per-call stats).  New code should hold an ``EvalSession``
+instead and amortize setup across tasks.
+
+A killed evaluation still resumes for free: re-running the same task in
+ENABLED (or REPLAY) cache mode skips every already-answered prompt — the
+response cache doubles as the fault-tolerance journal (DESIGN.md §5).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Any
 
-import numpy as np
+from repro.core.config import EvalTask
+from repro.core.session import EvalSession
+from repro.core.stages import EvalResult, MetricValue
 
-from repro.core.cache import CacheEntry, ResponseCache
-from repro.core.config import CachePolicy, EvalTask
-from repro.core.engines import (
-    InferenceRequest,
-    InferenceResponse,
-    create_engine,
-    retry_with_backoff,
-)
-from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
-from repro.data.templates import render
-from repro.ft.workers import WorkerPool
-from repro.metrics.registry import BINARY_METRICS, MetricContext, get_metric
-from repro.stats.bootstrap import Interval, compute_ci
-
-
-@dataclasses.dataclass
-class MetricValue:
-    name: str
-    value: float
-    ci: tuple[float, float]
-    ci_method: str
-    n: int
-    n_unscored: int = 0
-
-    def __repr__(self) -> str:  # paper §5.6 display format
-        return (
-            f"MetricValue(value={self.value:.3f}, "
-            f"ci=({self.ci[0]:.3f}, {self.ci[1]:.3f}), n={self.n})"
-        )
-
-
-@dataclasses.dataclass
-class EvalResult:
-    task_id: str
-    metrics: dict[str, MetricValue]
-    scores: dict[str, np.ndarray]
-    responses: list[str]
-    failures: list[dict]
-    cache_stats: dict
-    engine_stats: dict
-    timing: dict
-    logs: dict
-
-    @property
-    def throughput_per_min(self) -> float:
-        dt = self.timing.get("infer_s", 0.0)
-        return len(self.responses) / dt * 60.0 if dt > 0 else float("inf")
+__all__ = ["EvalResult", "EvalRunner", "MetricValue"]
 
 
 class EvalRunner:
@@ -75,177 +43,9 @@ class EvalRunner:
         self._judge_engine = judge_engine
         self._wall_clock = wall_clock_rate_limit
 
-    # -- stage 2 helpers ---------------------------------------------------------
-
-    def _make_limiter(self, task: EvalTask):
-        inf = task.inference
-        sleep = time.sleep if self._wall_clock else (lambda s: None)
-        if inf.adaptive_rate:
-            return AdaptiveLimiter(
-                inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers, sleep=sleep
-            )
-        return [
-            TokenBucket(
-                inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers, sleep=sleep
-            )
-            for _ in range(inf.n_workers)
-        ]
-
     def evaluate(self, rows: list[dict], task: EvalTask) -> EvalResult:
-        timing: dict[str, float] = {}
-        logs: dict[str, Any] = {}
-
-        # ---- stage 1: prompt preparation -----------------------------------
-        t0 = time.monotonic()
-        prompts = [render(task.data.prompt_template, r) for r in rows]
-        timing["prepare_s"] = time.monotonic() - t0
-
-        # ---- stage 2: distributed inference ---------------------------------
-        t0 = time.monotonic()
-        inf = task.inference
-        cache = (
-            ResponseCache(inf.cache_dir, inf.cache_policy)
-            if inf.cache_dir and inf.cache_policy != CachePolicy.DISABLED
-            else None
-        )
-        engine = create_engine(task.model)
-        engine.initialize()
-        limiter = self._make_limiter(task)
-        pool = WorkerPool(
-            n_workers=inf.n_workers,
-            max_retries=inf.max_retries,
-            straggler_factor=inf.straggler_factor if inf.speculative_reissue else 0.0,
-        )
-
-        shards = [
-            list(range(i, min(i + inf.batch_size, len(prompts))))
-            for i in range(0, len(prompts), inf.batch_size)
-        ]
-        responses: list[InferenceResponse | None] = [None] * len(prompts)
-        failures: list[dict] = []
-
-        def run_shard(shard_idx: int, idxs: list[int], worker: int):
-            out: list[tuple[int, InferenceResponse, bool]] = []
-            to_infer: list[int] = []
-            for i in idxs:
-                key = None
-                if cache is not None:
-                    key = cache.key_for(
-                        prompts[i], task.model.model_name, task.model.provider,
-                        task.model.temperature, task.model.max_tokens,
-                    )
-                    hit = cache.lookup(key)
-                    if hit is not None:
-                        out.append(
-                            (
-                                i,
-                                InferenceResponse(
-                                    text=hit.response_text,
-                                    input_tokens=hit.input_tokens or 0,
-                                    output_tokens=hit.output_tokens or 0,
-                                    latency_ms=0.0,
-                                ),
-                                True,
-                            )
-                        )
-                        continue
-                to_infer.append(i)
-            w = worker % inf.n_workers
-            new_entries: list[CacheEntry] = []
-            for i in to_infer:
-                est_tokens = len(prompts[i].split()) + task.model.max_tokens
-                if isinstance(limiter, AdaptiveLimiter):
-                    limiter.acquire(w, est_tokens)
-                else:
-                    limiter[w].acquire(est_tokens)
-                req = InferenceRequest(
-                    prompts[i], task.model.max_tokens, task.model.temperature
-                )
-                resp = retry_with_backoff(
-                    lambda req=req: engine.infer(req),
-                    max_retries=inf.max_retries,
-                    base_delay=inf.retry_delay,
-                    sleep=time.sleep if self._wall_clock else (lambda s: None),
-                )
-                out.append((i, resp, False))
-                if cache is not None and resp.error is None:
-                    new_entries.append(
-                        CacheEntry(
-                            prompt_hash=cache.key_for(
-                                prompts[i], task.model.model_name,
-                                task.model.provider, task.model.temperature,
-                                task.model.max_tokens,
-                            ),
-                            model_name=task.model.model_name,
-                            provider=task.model.provider,
-                            prompt_text=prompts[i],
-                            response_text=resp.text,
-                            input_tokens=resp.input_tokens,
-                            output_tokens=resp.output_tokens,
-                            latency_ms=resp.latency_ms,
-                            created_at=time.time(),
-                        )
-                    )
-            if new_entries:
-                cache.put(new_entries)
-            return out
-
-        shard_results = pool.map_shards(run_shard, shards)
-        for sr in shard_results:
-            for i, resp, _cached in sr.value:
-                responses[i] = resp
-                if resp.error is not None:
-                    failures.append({"index": i, "error": resp.error})
-        timing["infer_s"] = time.monotonic() - t0
-
-        # ---- stage 3: metric computation -------------------------------------
-        t0 = time.monotonic()
-        texts = [r.text if r is not None and r.error is None else "" for r in responses]
-        ctx = MetricContext(judge_engine=self._judge_engine or engine, logs=logs)
-        scores: dict[str, np.ndarray] = {}
-        for mcfg in task.metrics:
-            scores[mcfg.name] = np.asarray(
-                get_metric(mcfg)(rows, texts, ctx), np.float64
-            )
-        timing["metrics_s"] = time.monotonic() - t0
-
-        # ---- stage 4: statistical aggregation ---------------------------------
-        t0 = time.monotonic()
-        stats_cfg = task.statistics
-        metric_values: dict[str, MetricValue] = {}
-        for name, vals in scores.items():
-            ok = vals[~np.isnan(vals)]
-            n_unscored = int(np.isnan(vals).sum())
-            if len(ok) == 0:
-                metric_values[name] = MetricValue(
-                    name, float("nan"), (float("nan"),) * 2, "none", 0, n_unscored
-                )
-                continue
-            iv: Interval = compute_ci(
-                ok,
-                method=stats_cfg.ci_method,
-                confidence=stats_cfg.confidence_level,
-                n_boot=stats_cfg.bootstrap_iterations,
-                seed=stats_cfg.seed,
-                binary=name in BINARY_METRICS,
-            )
-            metric_values[name] = MetricValue(
-                name, iv.value, (iv.lo, iv.hi), iv.method, iv.n, n_unscored
-            )
-        timing["stats_s"] = time.monotonic() - t0
-
-        return EvalResult(
-            task_id=task.task_id,
-            metrics=metric_values,
-            scores=scores,
-            responses=texts,
-            failures=failures,
-            cache_stats=cache.stats() if cache is not None else {},
-            engine_stats={
-                "calls": getattr(engine, "calls", None),
-                "total_cost": getattr(engine, "total_cost", 0.0),
-                "pool": dataclasses.asdict(pool.stats),
-            },
-            timing=timing,
-            logs=logs,
-        )
+        with EvalSession(
+            judge_engine=self._judge_engine,
+            wall_clock_rate_limit=self._wall_clock,
+        ) as session:
+            return session.run_task(rows, task)

@@ -1,0 +1,222 @@
+"""EvalSession: long-lived owner of the shared evaluation resources.
+
+The legacy ``EvalRunner.evaluate`` rebuilt the engine, response cache,
+rate limiter and worker pool on every call, so an M-model × N-task
+regression suite paid setup cost M×N times.  A session initializes each
+resource once and reuses it across tasks:
+
+* **engine registry** — one initialized :class:`InferenceEngine` per
+  :class:`EngineModelConfig` (``session.engines``),
+* **response caches** — one :class:`ResponseCache` handle per
+  ``(cache_dir, policy)``,
+* **limiters / worker pools** — one per inference configuration,
+* **accounting** — session-level totals (engine calls, tokens, cost,
+  cache traffic) across every task run.
+
+Lifecycle is a context manager::
+
+    with EvalSession() as session:
+        r1 = session.run_task(rows, task_a)
+        r2 = session.run_task(rows, task_b)       # same engine, warm cache
+        suite_res = session.run_suite(suite)      # M models × N tasks
+
+``run_task`` executes the stage pipeline from :mod:`repro.core.stages`;
+pass ``stages=`` to swap stages (e.g. ``rescore_stages(texts)`` for the
+paper's cache-replay iteration loop).  ``run_suite`` executes an
+:class:`~repro.core.suite.EvalSuite` and wires the per-model score
+vectors into the pairwise significance machinery of
+:mod:`repro.core.compare`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable, Sequence
+
+from repro.core.cache import ResponseCache
+from repro.core.config import CachePolicy, EngineModelConfig, EvalTask, InferenceConfig
+from repro.core.engines import EngineRegistry, InferenceEngine
+from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
+from repro.core.stages import (
+    EvalArtifact,
+    EvalResult,
+    Middleware,
+    Stage,
+    default_stages,
+)
+from repro.core.suite import EvalSuite, SuiteResult, build_comparisons
+from repro.ft.workers import WorkerPool
+
+
+@dataclasses.dataclass
+class SessionAccounting:
+    """Cost/token totals across every task the session has run."""
+
+    tasks: int = 0
+    engine_calls: int = 0
+    input_tokens: int = 0
+    output_tokens: int = 0
+    cost_usd: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    wall_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class EvalSession:
+    def __init__(
+        self,
+        *,
+        judge_engine: Any = None,
+        wall_clock_rate_limit: bool = False,
+        middleware: Iterable[Middleware] = (),
+        cost_budget_usd: float | None = None,
+        engine_kwargs: dict | None = None,
+    ):
+        self.judge_engine = judge_engine
+        self.wall_clock = wall_clock_rate_limit
+        self.middleware: list[Middleware] = list(middleware)
+        if cost_budget_usd is not None:
+            from repro.core.stages import CostBudgetMiddleware
+
+            self.middleware.append(CostBudgetMiddleware(cost_budget_usd))
+        self.engines = EngineRegistry()
+        self.accounting = SessionAccounting()
+        self._engine_kwargs = dict(engine_kwargs or {})
+        self._caches: dict[tuple[str, CachePolicy], ResponseCache] = {}
+        self._limiters: dict[tuple, Any] = {}
+        self._pools: dict[tuple, WorkerPool] = {}
+        self._closed = False
+
+    # -- shared resources ------------------------------------------------------
+
+    @property
+    def sleep(self):
+        return time.sleep if self.wall_clock else (lambda s: None)
+
+    def engine_for(self, model: EngineModelConfig) -> InferenceEngine:
+        self._check_open()
+        return self.engines.get(model, **self._engine_kwargs)
+
+    def cache_for(self, inf: InferenceConfig) -> ResponseCache | None:
+        if not inf.cache_dir or inf.cache_policy == CachePolicy.DISABLED:
+            return None
+        key = (inf.cache_dir, inf.cache_policy)
+        cache = self._caches.get(key)
+        if cache is None:
+            cache = ResponseCache(inf.cache_dir, inf.cache_policy)
+            self._caches[key] = cache
+        return cache
+
+    def limiter_for(self, inf: InferenceConfig):
+        key = (
+            inf.adaptive_rate, inf.rate_limit_rpm, inf.rate_limit_tpm,
+            inf.n_workers,
+        )
+        limiter = self._limiters.get(key)
+        if limiter is None:
+            if inf.adaptive_rate:
+                limiter = AdaptiveLimiter(
+                    inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers,
+                    sleep=self.sleep,
+                )
+            else:
+                limiter = [
+                    TokenBucket(
+                        inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers,
+                        sleep=self.sleep,
+                    )
+                    for _ in range(inf.n_workers)
+                ]
+            self._limiters[key] = limiter
+        return limiter
+
+    def pool_for(self, inf: InferenceConfig) -> WorkerPool:
+        straggler = inf.straggler_factor if inf.speculative_reissue else 0.0
+        key = (inf.n_workers, inf.max_retries, straggler)
+        pool = self._pools.get(key)
+        if pool is None:
+            pool = WorkerPool(
+                n_workers=inf.n_workers,
+                max_retries=inf.max_retries,
+                straggler_factor=straggler,
+            )
+            self._pools[key] = pool
+        return pool
+
+    # -- pipeline execution -----------------------------------------------------
+
+    def run_task(
+        self,
+        rows: Sequence[dict],
+        task: EvalTask,
+        *,
+        stages: Sequence[Stage] | None = None,
+    ) -> EvalResult:
+        self._check_open()
+        pipeline = list(stages) if stages is not None else default_stages()
+        art = EvalArtifact(rows=list(rows), task=task)
+        t_task = time.monotonic()
+        for mw in self.middleware:
+            mw.on_task_start(task, art.rows, self)
+        for stage in pipeline:
+            for mw in self.middleware:
+                mw.on_stage_start(stage, art, self)
+            t0 = time.monotonic()
+            art = stage.run(art, self)
+            art.timing[f"{stage.name}_s"] = time.monotonic() - t0
+            for mw in self.middleware:
+                mw.on_stage_end(stage, art, self)
+        result = art.to_result()
+        self.accounting.tasks += 1
+        self.accounting.wall_s += time.monotonic() - t_task
+        for mw in self.middleware:
+            mw.on_task_end(task, result, self)
+        return result
+
+    def run_suite(
+        self, suite: EvalSuite, *, stages: Sequence[Stage] | None = None
+    ) -> SuiteResult:
+        """Run every (model, task) job of the suite, reusing session
+        resources, and compute the pairwise significance matrix for every
+        metric shared across models."""
+        self._check_open()
+        results: dict[tuple[str, str], EvalResult] = {}
+        jobs = suite.jobs()
+        for job in jobs:
+            results[(job.model_label, job.task.task_id)] = self.run_task(
+                job.rows, job.task, stages=stages
+            )
+        comparisons = build_comparisons(suite, results)
+        return SuiteResult(
+            name=suite.name,
+            models=suite.model_labels(),
+            tasks=suite.task_ids(),
+            results=results,
+            comparisons=comparisons,
+            accounting=self.accounting.as_dict(),
+        )
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("EvalSession is closed")
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self.engines.shutdown()
+        self._caches.clear()
+        self._limiters.clear()
+        self._pools.clear()
+        self._closed = True
+
+    def __enter__(self) -> "EvalSession":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

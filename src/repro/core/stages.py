@@ -1,0 +1,481 @@
+"""Composable stage pipeline for the paper's four-stage evaluation (§3).
+
+Each stage conforms to the :class:`Stage` protocol — ``run(artifact,
+session) -> artifact`` — and a single typed :class:`EvalArtifact` flows
+through the pipeline, accumulating prompts, responses, scores and
+aggregates.  The default pipeline is
+
+    PrepareStage -> InferStage -> ScoreStage -> AggregateStage
+
+but new scenarios are a stage swap, not a fork of the runner: the paper's
+cache-replay iteration loop re-scores cached responses by replacing
+``InferStage`` with :class:`StaticResponsesStage` (zero engine calls), and
+custom stages can be inserted anywhere in the list passed to
+``EvalSession.run_task``.
+
+Middleware objects observe the pipeline (``on_task_start``,
+``on_stage_start``, ``on_stage_end``, ``on_task_end``) and implement
+cross-cutting concerns: progress reporting, experiment tracking, and the
+session cost-budget abort (:class:`CostBudgetMiddleware`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.cache import CacheEntry
+from repro.core.config import EvalTask
+from repro.core.engines import (
+    InferenceRequest,
+    InferenceResponse,
+    retry_with_backoff,
+)
+from repro.core.ratelimit import AdaptiveLimiter
+from repro.data.templates import render
+from repro.metrics.registry import (
+    BINARY_METRICS,
+    JUDGE_METRICS,
+    MetricContext,
+    resolve_metrics,
+)
+from repro.stats.bootstrap import Interval, compute_ci
+
+# -- results -------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MetricValue:
+    name: str
+    value: float
+    ci: tuple[float, float]
+    ci_method: str
+    n: int
+    n_unscored: int = 0
+
+    def __repr__(self) -> str:  # paper §5.6 display format
+        return (
+            f"MetricValue(value={self.value:.3f}, "
+            f"ci=({self.ci[0]:.3f}, {self.ci[1]:.3f}), n={self.n})"
+        )
+
+
+@dataclasses.dataclass
+class EvalResult:
+    task_id: str
+    metrics: dict[str, MetricValue]
+    scores: dict[str, np.ndarray]
+    responses: list[str]
+    failures: list[dict]
+    cache_stats: dict
+    engine_stats: dict
+    timing: dict
+    logs: dict
+
+    @property
+    def throughput_per_min(self) -> float:
+        dt = self.timing.get("infer_s", 0.0)
+        return len(self.responses) / dt * 60.0 if dt > 0 else float("inf")
+
+
+# -- artifact ------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EvalArtifact:
+    """The typed value flowing between stages.
+
+    ``PrepareStage`` fills ``prompts``; ``InferStage`` (or a replacement)
+    fills ``texts``/``responses``/``failures``; ``ScoreStage`` fills
+    ``scores``; ``AggregateStage`` fills ``metrics``.  Timing is recorded
+    by the pipeline loop under ``{stage.name}_s``.
+    """
+
+    rows: list[dict]
+    task: EvalTask
+    prompts: list[str] = dataclasses.field(default_factory=list)
+    responses: list[InferenceResponse | None] = dataclasses.field(
+        default_factory=list
+    )
+    texts: list[str] = dataclasses.field(default_factory=list)
+    failures: list[dict] = dataclasses.field(default_factory=list)
+    scores: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    metrics: dict[str, MetricValue] = dataclasses.field(default_factory=dict)
+    cache_stats: dict = dataclasses.field(default_factory=dict)
+    engine_stats: dict = dataclasses.field(default_factory=dict)
+    timing: dict = dataclasses.field(default_factory=dict)
+    logs: dict = dataclasses.field(default_factory=dict)
+
+    def to_result(self) -> EvalResult:
+        return EvalResult(
+            task_id=self.task.task_id,
+            metrics=self.metrics,
+            scores=self.scores,
+            responses=self.texts,
+            failures=self.failures,
+            cache_stats=self.cache_stats,
+            engine_stats=self.engine_stats,
+            timing=self.timing,
+            logs=self.logs,
+        )
+
+
+@runtime_checkable
+class Stage(Protocol):
+    name: str
+
+    def run(self, artifact: EvalArtifact, session: Any) -> EvalArtifact: ...
+
+
+# -- stage 1: prompt preparation ------------------------------------------------
+
+
+class PrepareStage:
+    name = "prepare"
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        # fail fast on unknown metrics before any paid inference happens
+        resolve_metrics(art.task.metrics)
+        art.prompts = [
+            render(art.task.data.prompt_template, r) for r in art.rows
+        ]
+        return art
+
+
+# -- stage 2: distributed inference ---------------------------------------------
+
+
+class InferStage:
+    """Sharded inference over the session worker pool: per-worker rate
+    limiting, content-addressable caching, retries and speculative re-issue.
+
+    Engine / cache / limiter / pool are session-owned and reused across
+    tasks; per-task ``engine_stats`` and ``cache_stats`` are deltas over
+    the session-cumulative counters, so a fresh session reproduces the
+    legacy per-call numbers exactly.
+    """
+
+    name = "infer"
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        task = art.task
+        inf = task.inference
+        prompts = art.prompts
+        engine = session.engine_for(task.model)
+        cache = session.cache_for(inf)
+        limiter = session.limiter_for(inf)
+        pool = session.pool_for(inf)
+
+        calls0 = getattr(engine, "calls", None)
+        cost0 = getattr(engine, "total_cost", 0.0)
+        cache0 = (cache.hits, cache.misses, cache.writes) if cache else None
+        pool0 = dataclasses.asdict(pool.stats)
+
+        shards = [
+            list(range(i, min(i + inf.batch_size, len(prompts))))
+            for i in range(0, len(prompts), inf.batch_size)
+        ]
+        responses: list[InferenceResponse | None] = [None] * len(prompts)
+        failures: list[dict] = []
+        sleep = session.sleep
+
+        def run_shard(shard_idx: int, idxs: list[int], worker: int):
+            out: list[tuple[int, InferenceResponse, bool]] = []
+            to_infer: list[int] = []
+            for i in idxs:
+                if cache is not None:
+                    key = cache.key_for(
+                        prompts[i], task.model.model_name, task.model.provider,
+                        task.model.temperature, task.model.max_tokens,
+                    )
+                    hit = cache.lookup(key)
+                    if hit is not None:
+                        out.append(
+                            (
+                                i,
+                                InferenceResponse(
+                                    text=hit.response_text,
+                                    input_tokens=hit.input_tokens or 0,
+                                    output_tokens=hit.output_tokens or 0,
+                                    latency_ms=0.0,
+                                ),
+                                True,
+                            )
+                        )
+                        continue
+                to_infer.append(i)
+            w = worker % inf.n_workers
+            new_entries: list[CacheEntry] = []
+            for i in to_infer:
+                est_tokens = len(prompts[i].split()) + task.model.max_tokens
+                if isinstance(limiter, AdaptiveLimiter):
+                    limiter.acquire(w, est_tokens)
+                else:
+                    limiter[w].acquire(est_tokens)
+                req = InferenceRequest(
+                    prompts[i], task.model.max_tokens, task.model.temperature
+                )
+                resp = retry_with_backoff(
+                    lambda req=req: engine.infer(req),
+                    max_retries=inf.max_retries,
+                    base_delay=inf.retry_delay,
+                    sleep=sleep,
+                )
+                out.append((i, resp, False))
+                if cache is not None and resp.error is None:
+                    new_entries.append(
+                        CacheEntry(
+                            prompt_hash=cache.key_for(
+                                prompts[i], task.model.model_name,
+                                task.model.provider, task.model.temperature,
+                                task.model.max_tokens,
+                            ),
+                            model_name=task.model.model_name,
+                            provider=task.model.provider,
+                            prompt_text=prompts[i],
+                            response_text=resp.text,
+                            input_tokens=resp.input_tokens,
+                            output_tokens=resp.output_tokens,
+                            latency_ms=resp.latency_ms,
+                            created_at=time.time(),
+                        )
+                    )
+            if new_entries:
+                cache.put(new_entries)
+            return out
+
+        n_cached = 0
+        in_tok = out_tok = 0
+        shard_results = pool.map_shards(run_shard, shards)
+        for sr in shard_results:
+            for i, resp, cached in sr.value:
+                responses[i] = resp
+                if resp.error is not None:
+                    failures.append({"index": i, "error": resp.error})
+                elif cached:
+                    n_cached += 1
+                else:
+                    in_tok += resp.input_tokens
+                    out_tok += resp.output_tokens
+
+        art.responses = responses
+        art.texts = [
+            r.text if r is not None and r.error is None else "" for r in responses
+        ]
+        art.failures = failures
+        art.cache_stats = (
+            _cache_stats_delta(cache, cache0) if cache is not None else {}
+        )
+        calls = (
+            getattr(engine, "calls", 0) - calls0 if calls0 is not None else None
+        )
+        art.engine_stats = {
+            "calls": calls,
+            "total_cost": getattr(engine, "total_cost", 0.0) - cost0,
+            "pool": _pool_stats_delta(pool.stats, pool0),
+        }
+
+        acct = session.accounting
+        acct.engine_calls += calls or 0
+        acct.cost_usd += art.engine_stats["total_cost"]
+        acct.input_tokens += in_tok
+        acct.output_tokens += out_tok
+        if cache is not None:
+            acct.cache_hits += n_cached
+            acct.cache_misses += len(prompts) - n_cached
+        return art
+
+
+def _cache_stats_delta(cache, before: tuple[int, int, int]) -> dict:
+    h = cache.hits - before[0]
+    m = cache.misses - before[1]
+    stats = cache.stats()  # entries/version stay session-absolute
+    stats.update(
+        hits=h,
+        misses=m,
+        writes=cache.writes - before[2],
+        hit_rate=h / (h + m) if h + m else 0.0,
+    )
+    return stats
+
+
+def _pool_stats_delta(after, before: dict) -> dict:
+    return {k: v - before[k] for k, v in dataclasses.asdict(after).items()}
+
+
+class StaticResponsesStage:
+    """Stage-swap replacement for :class:`InferStage`: inject precomputed
+    response texts (e.g. from a prior :class:`EvalResult`) and re-score
+    them with different metrics at zero engine cost."""
+
+    name = "infer"
+
+    def __init__(self, texts: list[str]):
+        self._texts = list(texts)
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        if len(self._texts) != len(art.rows):
+            raise ValueError(
+                f"{len(self._texts)} responses for {len(art.rows)} rows"
+            )
+        art.texts = list(self._texts)
+        art.responses = [None] * len(art.rows)
+        art.cache_stats = {}
+        art.engine_stats = {"calls": 0, "total_cost": 0.0, "pool": {}}
+        return art
+
+
+# -- stage 3: metric computation -------------------------------------------------
+
+
+class ScoreStage:
+    """Vectorized per-example scoring.  Metric resolution (registry lookup +
+    params binding) lives behind this stage via
+    :func:`repro.metrics.registry.resolve_metrics`."""
+
+    name = "metrics"
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        task = art.task
+        judge = session.judge_engine
+        if judge is None and any(
+            m.type == "llm_judge" or m.name in JUDGE_METRICS
+            for m in task.metrics
+        ):
+            # only judge-backed metrics warrant initializing the task engine
+            # here — a lexical-only rescore pipeline stays engine-free
+            judge = session.engine_for(task.model)
+        ctx = MetricContext(judge_engine=judge, logs=art.logs)
+        scores: dict[str, np.ndarray] = {}
+        for name, scorer in resolve_metrics(task.metrics):
+            scores[name] = np.asarray(
+                scorer(art.rows, art.texts, ctx), np.float64
+            )
+        art.scores = scores
+        return art
+
+
+# -- stage 4: statistical aggregation ---------------------------------------------
+
+
+class AggregateStage:
+    name = "stats"
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        stats_cfg = art.task.statistics
+        metric_values: dict[str, MetricValue] = {}
+        for name, vals in art.scores.items():
+            ok = vals[~np.isnan(vals)]
+            n_unscored = int(np.isnan(vals).sum())
+            if len(ok) == 0:
+                metric_values[name] = MetricValue(
+                    name, float("nan"), (float("nan"),) * 2, "none", 0, n_unscored
+                )
+                continue
+            iv: Interval = compute_ci(
+                ok,
+                method=stats_cfg.ci_method,
+                confidence=stats_cfg.confidence_level,
+                n_boot=stats_cfg.bootstrap_iterations,
+                seed=stats_cfg.seed,
+                binary=name in BINARY_METRICS,
+            )
+            metric_values[name] = MetricValue(
+                name, iv.value, (iv.lo, iv.hi), iv.method, iv.n, n_unscored
+            )
+        art.metrics = metric_values
+        return art
+
+
+def default_stages() -> list[Stage]:
+    return [PrepareStage(), InferStage(), ScoreStage(), AggregateStage()]
+
+
+def rescore_stages(texts: list[str]) -> list[Stage]:
+    """Pipeline for the cache-replay iteration loop: re-score existing
+    responses without inference."""
+    return [
+        PrepareStage(),
+        StaticResponsesStage(texts),
+        ScoreStage(),
+        AggregateStage(),
+    ]
+
+
+# -- middleware -----------------------------------------------------------------
+
+
+class Middleware:
+    """No-op base; subclass and override the hooks you need."""
+
+    def on_task_start(self, task: EvalTask, rows: list[dict], session: Any) -> None:
+        pass
+
+    def on_stage_start(self, stage: Stage, art: EvalArtifact, session: Any) -> None:
+        pass
+
+    def on_stage_end(self, stage: Stage, art: EvalArtifact, session: Any) -> None:
+        pass
+
+    def on_task_end(self, task: EvalTask, result: EvalResult, session: Any) -> None:
+        pass
+
+
+class CostBudgetExceeded(RuntimeError):
+    """Raised by :class:`CostBudgetMiddleware` when session spend crosses
+    the configured budget; aborts the pipeline between stages."""
+
+
+class CostBudgetMiddleware(Middleware):
+    def __init__(self, max_usd: float):
+        self.max_usd = max_usd
+
+    def on_stage_end(self, stage, art, session) -> None:
+        spent = session.accounting.cost_usd
+        if spent > self.max_usd:
+            raise CostBudgetExceeded(
+                f"session cost ${spent:.4f} exceeds budget ${self.max_usd:.4f} "
+                f"(after stage {stage.name!r} of task {art.task.task_id!r})"
+            )
+
+
+class ProgressMiddleware(Middleware):
+    def __init__(self, stream=None):
+        self.stream = stream or sys.stderr
+        self._t0: dict[str, float] = {}
+
+    def on_task_start(self, task, rows, session) -> None:
+        print(
+            f"[{task.task_id}] {len(rows)} examples, "
+            f"model={task.model.provider}:{task.model.model_name}",
+            file=self.stream,
+        )
+
+    def on_stage_start(self, stage, art, session) -> None:
+        self._t0[stage.name] = time.monotonic()
+
+    def on_stage_end(self, stage, art, session) -> None:
+        dt = time.monotonic() - self._t0.get(stage.name, time.monotonic())
+        print(f"[{art.task.task_id}]   {stage.name}: {dt:.2f}s", file=self.stream)
+
+    def on_task_end(self, task, result, session) -> None:
+        vals = ", ".join(
+            f"{n}={mv.value:.3f}" for n, mv in result.metrics.items()
+        )
+        print(f"[{task.task_id}] done: {vals}", file=self.stream)
+
+
+class TrackingMiddleware(Middleware):
+    """Log every completed task to a :class:`repro.core.tracking.RunTracker`."""
+
+    def __init__(self, tracker, **tags: str):
+        self.tracker = tracker
+        self.tags = tags
+        self.run_ids: list[str] = []
+
+    def on_task_end(self, task, result, session) -> None:
+        self.run_ids.append(self.tracker.log_run(task, result, **self.tags))

@@ -16,7 +16,7 @@ import uuid
 import numpy as np
 
 from repro.core.config import EvalTask
-from repro.core.runner import EvalResult
+from repro.core.stages import EvalResult
 
 
 class RunTracker:
@@ -77,6 +77,50 @@ class RunTracker:
                 default=str,
             )
         return run_id
+
+    def log_suite(self, suite_result, **tags: str) -> str:
+        """Persist a :class:`repro.core.suite.SuiteResult`: the markdown
+        report, the pairwise comparison summaries, and session accounting,
+        in one directory alongside the per-run logs."""
+        suite_id = (
+            f"suite-{time.strftime('%Y%m%d-%H%M%S')}-{uuid.uuid4().hex[:6]}"
+        )
+        sdir = os.path.join(self.root, suite_id)
+        os.makedirs(sdir, exist_ok=True)
+        with open(os.path.join(sdir, "report.md"), "w") as f:
+            f.write(suite_result.to_markdown())
+        comparisons = [
+            {
+                "task": task_id,
+                "metric": metric,
+                "a": a,
+                "b": b,
+                "diff": cmp.diff,
+                "p_value": cmp.test.p_value,
+                "test": cmp.test.test,
+                "effect": cmp.effect.value,
+                "summary": cmp.summary(),
+            }
+            for task_id, metrics in suite_result.comparisons.items()
+            for metric, cells in metrics.items()
+            for (a, b), cmp in cells.items()
+        ]
+        with open(os.path.join(sdir, "comparisons.json"), "w") as f:
+            json.dump(comparisons, f, indent=1)
+        with open(os.path.join(sdir, "tags.json"), "w") as f:
+            json.dump(
+                {
+                    "suite": suite_result.name,
+                    "models": suite_result.models,
+                    "tasks": suite_result.tasks,
+                    "accounting": suite_result.accounting,
+                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                    **tags,
+                },
+                f,
+                indent=1,
+            )
+        return suite_id
 
     def list_runs(self) -> list[str]:
         return sorted(

@@ -9,7 +9,7 @@ constructed once per evaluation, not per metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Protocol
+from typing import Any, Callable, Protocol, Sequence
 
 import numpy as np
 
@@ -29,6 +29,8 @@ Scorer = Callable[[list[dict], list[str], MetricContext], np.ndarray]
 _REGISTRY: dict[str, Scorer] = {}
 #: metrics whose scores are 0/1 (drives Wilson CIs + McNemar selection)
 BINARY_METRICS = {"exact_match", "contains"}
+#: metrics that call ctx.judge_engine (drives lazy engine setup in ScoreStage)
+JUDGE_METRICS = {"llm_judge", "faithfulness", "context_relevance"}
 
 
 def register(name: str):
@@ -48,6 +50,18 @@ def get_metric(cfg: MetricConfig) -> Scorer:
     if cfg.params:
         return lambda rows, resp, ctx: base(rows, resp, ctx, **cfg.params)
     return base
+
+
+def resolve_metrics(
+    cfgs: "Sequence[MetricConfig]",
+) -> list[tuple[str, Scorer]]:
+    """Resolve a task's metric configs to bound scorers in one pass.
+
+    This is the single resolution point used by the pipeline: ScoreStage
+    resolves to scorers, and PrepareStage calls it for validation so
+    unknown-metric errors surface before any paid inference happens.
+    """
+    return [(cfg.name, get_metric(cfg)) for cfg in cfgs]
 
 
 def _refs(rows: list[dict]) -> list[str]:

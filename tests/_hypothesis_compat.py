@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim: property-based tests become clean skips when
+hypothesis is not installed, so the suite collects on a clean interpreter."""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        returns None (never drawn from — the test body is skipped)."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement so pytest doesn't look for fixtures
+            # matching the hypothesis-drawn parameters
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

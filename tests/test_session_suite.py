@@ -1,0 +1,234 @@
+"""EvalSession + stage pipeline + EvalSuite: engine reuse, suite pairwise
+comparison, legacy-shim equivalence, stage swaps, middleware."""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostBudgetExceeded,
+    EngineModelConfig,
+    EvalRunner,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    Middleware,
+    RunTracker,
+    SimulatedAPIEngine,
+    StatisticsConfig,
+    compare_scores,
+    rescore_stages,
+)
+from repro.data import mixed_examples
+
+M_A = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+M_B = EngineModelConfig(provider="anthropic", model_name="claude-3-haiku")
+
+
+def _task(tmp_path, task_id="t", model=M_A, **inf_kw) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=model,
+        inference=InferenceConfig(
+            batch_size=8, n_workers=3,
+            cache_dir=str(tmp_path / f"cache-{task_id}-{model.model_name}"),
+            **inf_kw,
+        ),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(bootstrap_iterations=200),
+    )
+
+
+@pytest.fixture
+def init_counter(monkeypatch):
+    counts: dict[str, int] = {}
+    orig = SimulatedAPIEngine.initialize
+
+    def counting(self):
+        counts[self.model.model_name] = counts.get(self.model.model_name, 0) + 1
+        orig(self)
+
+    monkeypatch.setattr(SimulatedAPIEngine, "initialize", counting)
+    return counts
+
+
+def test_session_reuses_engine_across_tasks(tmp_path, init_counter):
+    rows = mixed_examples(20, seed=3)
+    with EvalSession() as session:
+        session.run_task(rows, _task(tmp_path, "a"))
+        session.run_task(rows, _task(tmp_path, "b"))
+        assert len(session.engines) == 1
+    assert init_counter == {"gpt-4o-mini": 1}
+
+
+def test_suite_two_models_two_tasks(tmp_path, init_counter):
+    """Acceptance criterion: 2 models × 2 tasks, each engine initialized
+    exactly once, SuiteResult has a pairwise Comparison per shared metric."""
+    rows1 = mixed_examples(30, seed=3)
+    rows2 = mixed_examples(25, seed=7)
+    suite = (
+        EvalSuite("reg")
+        .add_task(_task(tmp_path, "qa"), rows1)
+        .add_task(_task(tmp_path, "qa2"), rows2)
+        .sweep_models([M_A, M_B])
+    )
+    with EvalSession() as session:
+        res = session.run_suite(suite)
+        assert init_counter == {"gpt-4o-mini": 1, "claude-3-haiku": 1}
+
+    assert res.models == ["gpt-4o-mini", "claude-3-haiku"]
+    assert res.tasks == ["qa", "qa2"]
+    assert len(res.results) == 4
+    for task_id in res.tasks:
+        for metric in ("exact_match", "token_f1"):
+            cmp = res.comparison(task_id, metric, "gpt-4o-mini", "claude-3-haiku")
+            assert cmp.metric == metric
+            assert 0.0 <= cmp.test.p_value <= 1.0
+    assert res.accounting["tasks"] == 4
+    md = res.to_markdown()
+    assert "| model |" in md and "gpt-4o-mini" in md
+
+
+def test_suite_comparison_matches_direct_compare_scores(tmp_path):
+    rows = mixed_examples(30, seed=5)
+    suite = (
+        EvalSuite().add_task(_task(tmp_path, "qa"), rows).sweep_models([M_A, M_B])
+    )
+    with EvalSession() as session:
+        res = session.run_suite(suite)
+    ra = res.result("gpt-4o-mini", "qa")
+    rb = res.result("claude-3-haiku", "qa")
+    direct = compare_scores(
+        "token_f1", ra.scores["token_f1"], rb.scores["token_f1"],
+        confidence=0.95, n_boot=200, seed=0,
+    )
+    via_suite = res.comparison("qa", "token_f1", "gpt-4o-mini", "claude-3-haiku")
+    assert via_suite.diff == direct.diff
+    assert via_suite.test.p_value == direct.test.p_value
+    assert via_suite.diff_ci == direct.diff_ci
+    assert via_suite.effect.value == direct.effect.value
+
+
+def test_runner_shim_matches_session_path(tmp_path):
+    """The legacy shim returns field-identical EvalResult to a fresh
+    session running the default stage pipeline."""
+    rows = mixed_examples(25, seed=9)
+    r_shim = EvalRunner().evaluate(rows, _task(tmp_path, "shim"))
+    with EvalSession() as session:
+        r_sess = session.run_task(rows, _task(tmp_path, "sess"))
+
+    assert r_shim.responses == r_sess.responses
+    for m in r_shim.scores:
+        np.testing.assert_array_equal(r_shim.scores[m], r_sess.scores[m])
+    for m, mv in r_shim.metrics.items():
+        sv = r_sess.metrics[m]
+        assert (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored) == (
+            sv.value, sv.ci, sv.ci_method, sv.n, sv.n_unscored
+        )
+    assert r_shim.failures == r_sess.failures
+    # per-call stats: same calls/cost/pool shape despite shared session pool
+    assert r_shim.engine_stats["calls"] == r_sess.engine_stats["calls"] == 25
+    assert r_shim.engine_stats["total_cost"] == pytest.approx(
+        r_sess.engine_stats["total_cost"]
+    )
+    assert r_shim.engine_stats["pool"] == r_sess.engine_stats["pool"]
+    assert r_shim.cache_stats["hits"] == r_sess.cache_stats["hits"] == 0
+    assert r_shim.cache_stats["writes"] == r_sess.cache_stats["writes"] == 25
+
+
+def test_rescore_stage_swap_zero_engine_calls(tmp_path):
+    rows = mixed_examples(20, seed=11)
+    task = _task(tmp_path, "base")
+    with EvalSession() as session:
+        full = session.run_task(rows, task)
+        calls_before = session.accounting.engine_calls
+        re_task = task.with_metrics(MetricConfig("rouge_l"), MetricConfig("bleu"))
+        res = session.run_task(
+            rows, re_task, stages=rescore_stages(full.responses)
+        )
+        assert session.accounting.engine_calls == calls_before
+    assert set(res.metrics) == {"rouge_l", "bleu"}
+    assert res.engine_stats["calls"] == 0
+    # re-scoring the same metric reproduces the full-pipeline scores, and a
+    # lexical-only rescore session never constructs an engine at all
+    with EvalSession() as session:
+        again = session.run_task(
+            rows, task, stages=rescore_stages(full.responses)
+        )
+        assert len(session.engines) == 0
+    np.testing.assert_array_equal(
+        again.scores["token_f1"], full.scores["token_f1"]
+    )
+
+
+def test_cache_stats_are_per_task_deltas(tmp_path):
+    rows = mixed_examples(15, seed=13)
+    task = _task(tmp_path, "warm")
+    with EvalSession() as session:
+        r1 = session.run_task(rows, task)
+        r2 = session.run_task(rows, task)
+    assert r1.cache_stats["hit_rate"] == 0.0
+    assert r2.cache_stats["hit_rate"] == 1.0
+    assert r2.cache_stats["writes"] == 0
+
+
+def test_cost_budget_middleware_aborts(tmp_path):
+    rows = mixed_examples(40, seed=17)
+    with EvalSession(cost_budget_usd=1e-9) as session:
+        with pytest.raises(CostBudgetExceeded):
+            session.run_task(rows, _task(tmp_path, "budget"))
+
+
+def test_middleware_hooks_fire_in_order(tmp_path):
+    events: list[str] = []
+
+    class Recorder(Middleware):
+        def on_task_start(self, task, rows, session):
+            events.append("task_start")
+
+        def on_stage_start(self, stage, art, session):
+            events.append(f"start:{stage.name}")
+
+        def on_stage_end(self, stage, art, session):
+            events.append(f"end:{stage.name}")
+
+        def on_task_end(self, task, result, session):
+            events.append("task_end")
+
+    rows = mixed_examples(10, seed=19)
+    with EvalSession(middleware=[Recorder()]) as session:
+        session.run_task(rows, _task(tmp_path, "mw"))
+    assert events == [
+        "task_start",
+        "start:prepare", "end:prepare",
+        "start:infer", "end:infer",
+        "start:metrics", "end:metrics",
+        "start:stats", "end:stats",
+        "task_end",
+    ]
+
+
+def test_closed_session_rejects_work(tmp_path):
+    session = EvalSession()
+    session.close()
+    with pytest.raises(RuntimeError):
+        session.run_task([], _task(tmp_path, "closed"))
+
+
+def test_suite_tracking_roundtrip(tmp_path):
+    rows = mixed_examples(15, seed=23)
+    suite = (
+        EvalSuite("tracked")
+        .add_task(_task(tmp_path, "qa"), rows)
+        .sweep_models([M_A, M_B])
+    )
+    with EvalSession() as session:
+        res = session.run_suite(suite)
+    tracker = RunTracker(str(tmp_path / "runs"))
+    suite_id = tracker.log_suite(res, experiment="unit")
+    assert suite_id in tracker.list_runs()
+    report = (tmp_path / "runs" / suite_id / "report.md").read_text()
+    assert "Suite report: tracked" in report

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import sharding as sh
 from repro.configs import ARCHS
