@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bootstrap.ref import bootstrap_means_ref
 from repro.kernels.bertscore.ref import bertscore_ref
+from repro.kernels.bootstrap.ref import bootstrap_means_ref
 from repro.models.attention import chunked_attention
 from repro.models.ssm import ssd_chunked
 
@@ -26,11 +26,11 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     rng = np.random.RandomState(0)
     lines = []
 
-    b, s, h, kh, d = 1, 2048, 8, 2, 64
+    b, s, h, kh, d = 1, (512 if smoke else 2048), 8, 2, 64
     q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
     k = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
     v = jnp.asarray(rng.randn(b, s, kh, d), jnp.float32)
@@ -41,30 +41,34 @@ def run() -> list[str]:
         f"kernel_flash_attention_jnp_s{s},{us:.0f},gflops={flops/us/1e3:.1f}"
     )
 
-    bb, l, hh, p, n = 2, 1024, 8, 64, 64
-    x = jnp.asarray(rng.randn(bb, l, hh, p) * 0.3, jnp.float32)
-    dt = jnp.asarray(np.abs(rng.randn(bb, l, hh)) * 0.3 + 0.1, jnp.float32)
+    bb, slen, hh, p, n = 2, (256 if smoke else 1024), 8, 64, 64
+    x = jnp.asarray(rng.randn(bb, slen, hh, p) * 0.3, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(bb, slen, hh)) * 0.3 + 0.1, jnp.float32)
     a = jnp.asarray(-np.abs(rng.randn(hh)) - 0.2, jnp.float32)
-    bm = jnp.asarray(rng.randn(bb, l, hh, n) * 0.3, jnp.float32)
-    cm = jnp.asarray(rng.randn(bb, l, hh, n) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.randn(bb, slen, hh, n) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.randn(bb, slen, hh, n) * 0.3, jnp.float32)
     fn2 = jax.jit(lambda *xs: ssd_chunked(*xs, 256)[0])
     us = _time(fn2, x, dt, a, bm, cm)
-    lines.append(f"kernel_ssd_jnp_l{l},{us:.0f},tokens_per_s={bb*l/us*1e6:.0f}")
+    lines.append(f"kernel_ssd_jnp_l{slen},{us:.0f},tokens_per_s={bb*slen/us*1e6:.0f}")
 
-    data = jnp.asarray(rng.randn(100_000), jnp.float32)
+    nboot_data = 10_000 if smoke else 100_000
+    data = jnp.asarray(rng.randn(nboot_data), jnp.float32)
     fn3 = jax.jit(lambda d: bootstrap_means_ref(d, 256, 0))
     us = _time(fn3, data)
     lines.append(
-        f"kernel_bootstrap_jnp_n100k_B256,{us:.0f},"
-        f"resample_elems_per_s={256*100_000/us*1e6:.2e}"
+        f"kernel_bootstrap_jnp_n{nboot_data // 1000}k_B256,{us:.0f},"
+        f"resample_elems_per_s={256 * nboot_data / us * 1e6:.2e}"
     )
 
-    cand = jnp.asarray(rng.randn(64, 48, 128), jnp.float32)
-    ref = jnp.asarray(rng.randn(64, 48, 128), jnp.float32)
-    mask = jnp.ones((64, 48))
+    nb = 16 if smoke else 64
+    cand = jnp.asarray(rng.randn(nb, 48, 128), jnp.float32)
+    ref = jnp.asarray(rng.randn(nb, 48, 128), jnp.float32)
+    mask = jnp.ones((nb, 48))
     fn4 = jax.jit(lambda c, r, m: bertscore_ref(c, r, m, m)[2])
     us = _time(fn4, cand, ref, mask)
-    lines.append(f"kernel_bertscore_jnp_b64,{us:.0f},pairs_per_s={64/us*1e6:.0f}")
+    lines.append(
+        f"kernel_bertscore_jnp_b{nb},{us:.0f},pairs_per_s={nb / us * 1e6:.0f}"
+    )
     return lines
 
 

@@ -1,9 +1,11 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores the paper's
-original sample counts (slower); the default sizes finish in minutes on CPU.
+original sample counts (slower); the default sizes finish in minutes on
+CPU; ``--smoke`` shrinks every suite to CI-friendly sizes (a couple of
+minutes total) while still emitting the ``BENCH_*.json`` artifacts.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2_scaling,...]
+  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only fig2_scaling,...]
 """
 
 from __future__ import annotations
@@ -16,8 +18,13 @@ import time
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI sizes: fast run of every suite + BENCH artifacts")
     p.add_argument("--only", default="")
     args = p.parse_args()
+    if args.full and args.smoke:
+        p.error("--full and --smoke are mutually exclusive")
+    smoke = args.smoke
 
     from benchmarks import (
         caching,
@@ -25,20 +32,34 @@ def main() -> None:
         coverage,
         kernels_bench,
         scaling,
+        streaming_scale,
         suite_overhead,
         throughput,
         type1,
     )
 
     suites = {
-        "fig2_scaling": lambda: scaling.run(),
-        "table3_throughput": lambda: throughput.run(),
-        "table4_caching": lambda: caching.run(),
-        "table5_coverage": lambda: coverage.run(full=args.full),
-        "type1_error": lambda: type1.run(full=args.full),
+        "fig2_scaling": lambda: scaling.run(
+            n_examples=2_000 if smoke else 20_000
+        ),
+        "table3_throughput": lambda: throughput.run(
+            sizes=(1_000, 5_000) if smoke else (1_000, 10_000, 50_000, 100_000)
+        ),
+        "table4_caching": lambda: caching.run(n_examples=100 if smoke else 400),
+        "table5_coverage": lambda: (
+            coverage.run(n_datasets=50, n_boot=150)
+            if smoke
+            else coverage.run(full=args.full)
+        ),
+        "type1_error": lambda: (
+            type1.run(n_sims=300) if smoke else type1.run(full=args.full)
+        ),
         "table6_cost": lambda: cost.run(),
-        "kernels": lambda: kernels_bench.run(),
-        "suite_overhead": lambda: suite_overhead.run(),
+        "kernels": lambda: kernels_bench.run(smoke=smoke),
+        "suite_overhead": lambda: suite_overhead.run(n_tasks=2 if smoke else 3),
+        "streaming_scale": lambda: streaming_scale.run(
+            smoke=smoke, full=args.full
+        ),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 

@@ -10,7 +10,6 @@ from benchmarks.simkit import simulate_eval
 
 def run(n_examples: int = 20_000) -> list[str]:
     lines = []
-    prev = 0.0
     for workers in (1, 2, 4, 8, 12, 16):
         t0 = time.perf_counter()
         res = simulate_eval(n_examples, workers)
@@ -20,7 +19,6 @@ def run(n_examples: int = 20_000) -> list[str]:
             f"throughput={res.throughput_per_min:.0f}/min "
             f"p50={res.latency_p50_ms:.0f}ms waited={res.rate_limited_s:.1f}s"
         )
-        prev = res.throughput_per_min
     return lines
 
 

@@ -11,7 +11,6 @@ small W, rate-limit saturation at large W.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 from repro.core.config import EngineModelConfig
 from repro.core.engines import SimulatedAPIEngine

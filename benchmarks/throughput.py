@@ -8,9 +8,9 @@ import time
 from benchmarks.simkit import simulate_eval
 
 
-def run() -> list[str]:
+def run(sizes: tuple[int, ...] = (1_000, 10_000, 50_000, 100_000)) -> list[str]:
     lines = []
-    for n in (1_000, 10_000, 50_000, 100_000):
+    for n in sizes:
         t0 = time.perf_counter()
         res = simulate_eval(n, 8)
         us = (time.perf_counter() - t0) * 1e6

@@ -23,8 +23,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-import tempfile
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

@@ -2,17 +2,17 @@
 
 from __future__ import annotations
 
-from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, applicable_shapes
-from repro.configs.whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
-from repro.configs.qwen15_110b import CONFIG as QWEN15_110B
-from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
-from repro.configs.minicpm3_4b import CONFIG as MINICPM3_4B
-from repro.configs.qwen25_32b import CONFIG as QWEN25_32B
-from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
-from repro.configs.paligemma_3b import CONFIG as PALIGEMMA_3B
-from repro.configs.mamba2_27b import CONFIG as MAMBA2_27B
-from repro.configs.qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE_30B_A3B
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, applicable_shapes
 from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
+from repro.configs.mamba2_27b import CONFIG as MAMBA2_27B
+from repro.configs.minicpm3_4b import CONFIG as MINICPM3_4B
+from repro.configs.paligemma_3b import CONFIG as PALIGEMMA_3B
+from repro.configs.qwen15_110b import CONFIG as QWEN15_110B
+from repro.configs.qwen25_32b import CONFIG as QWEN25_32B
+from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE_30B_A3B
+from repro.configs.whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
 
 ARCHS: dict[str, ModelConfig] = {
     c.name: c

@@ -13,6 +13,7 @@ from repro.core.config import (
     InferenceConfig,
     MetricConfig,
     StatisticsConfig,
+    StreamingConfig,
     cache_key,
 )
 from repro.core.engines import (
@@ -48,6 +49,7 @@ from repro.core.stages import (
     default_stages,
     rescore_stages,
 )
+from repro.core.streaming import ManifestMismatch, StreamingPipeline
 from repro.core.suite import EvalSuite, SuiteJob, SuiteResult
 from repro.core.tracking import RunTracker
 
@@ -57,11 +59,12 @@ __all__ = [
     "DataConfig", "EngineModelConfig", "EngineRegistry", "EvalArtifact",
     "EvalResult", "EvalRunner", "EvalSession", "EvalSuite", "EvalTask",
     "InferStage", "InferenceConfig", "InferenceEngine", "InferenceRequest",
-    "InferenceResponse", "LocalJaxEngine", "MetricConfig", "MetricValue",
-    "Middleware", "PrepareStage", "ProgressMiddleware", "ResponseCache",
-    "RunTracker", "ScoreStage", "SessionAccounting", "SimulatedAPIEngine",
-    "Stage", "StaticResponsesStage", "StatisticsConfig", "SuiteJob",
-    "SuiteResult", "TokenBucket", "TrackingMiddleware", "api_cost",
+    "InferenceResponse", "LocalJaxEngine", "ManifestMismatch", "MetricConfig",
+    "MetricValue", "Middleware", "PrepareStage", "ProgressMiddleware",
+    "ResponseCache", "RunTracker", "ScoreStage", "SessionAccounting",
+    "SimulatedAPIEngine", "Stage", "StaticResponsesStage", "StatisticsConfig",
+    "StreamingConfig", "StreamingPipeline", "SuiteJob", "SuiteResult",
+    "TokenBucket", "TrackingMiddleware", "api_cost",
     "cache_key", "compare_results", "compare_scores", "create_engine",
     "default_stages", "get_engine", "rescore_stages", "retry_with_backoff",
 ]

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core.stages import EvalResult
 from repro.stats.bootstrap import compute_ci
-from repro.stats.effect import EffectSize, cohens_d, hedges_g, odds_ratio
+from repro.stats.effect import EffectSize, hedges_g, odds_ratio
 from repro.stats.select import TestRecommendation, recommend_test, run_recommended
 from repro.stats.significance import TestResult
 

@@ -70,6 +70,24 @@ class StatisticsConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamingConfig:
+    """Bounded-memory chunked execution (paper-scale datasets).
+
+    When ``enabled``, the session runs prepare→infer→score per chunk of
+    ``max_memory_rows`` examples, folds scores into mergeable accumulators
+    (:mod:`repro.stats.streaming`), and discards raw responses — peak
+    per-example state is O(chunk), not O(dataset).  With a ``spill_dir``,
+    each completed chunk commits its partial state to a DeltaLite manifest
+    so an interrupted run resumes by skipping completed chunks.
+    """
+
+    enabled: bool = False
+    max_memory_rows: int = 1024       # chunk size == peak resident examples
+    spill_dir: str = ""               # "" = no spill, run is not resumable
+    resume: bool = True               # skip chunks already in the manifest
+
+
+@dataclasses.dataclass(frozen=True)
 class DataConfig:
     prompt_template: str = "{question}"
     input_columns: tuple[str, ...] = ("question",)
@@ -84,10 +102,19 @@ class EvalTask:
     metrics: tuple[MetricConfig, ...] = (MetricConfig("exact_match"),)
     statistics: StatisticsConfig = StatisticsConfig()
     data: DataConfig = DataConfig()
+    streaming: StreamingConfig = StreamingConfig()
 
     def with_model(self, model: "EngineModelConfig") -> "EvalTask":
         """Rebind the task to another model (used by suite model sweeps)."""
         return dataclasses.replace(self, model=model)
+
+    def with_streaming(self, **kw: Any) -> "EvalTask":
+        """Enable (or reconfigure) bounded-memory streaming execution.
+        Unspecified fields keep their current values."""
+        kw.setdefault("enabled", True)
+        return dataclasses.replace(
+            self, streaming=dataclasses.replace(self.streaming, **kw)
+        )
 
     def with_metrics(self, *metrics: "MetricConfig") -> "EvalTask":
         """Rebind the metric set (used by cache-replay metric iteration)."""

@@ -236,7 +236,9 @@ class LocalJaxEngine(InferenceEngine):
         self._cfg = cfg
         self._tokenizer = HashTokenizer(cfg.vocab_size)
         model = build_model(cfg, remat="none")
-        params = pm.init_params(jax.random.key(self.model_cfg.seed), model.param_specs())
+        params = pm.init_params(
+            jax.random.key(self.model_cfg.seed), model.param_specs()
+        )
         self._scheduler = ContinuousBatcher(
             model, cfg, params,
             n_slots=self.n_slots, max_len=self.max_len,

@@ -39,7 +39,9 @@ __all__ = ["EvalResult", "EvalRunner", "MetricValue"]
 
 
 class EvalRunner:
-    def __init__(self, *, judge_engine: Any = None, wall_clock_rate_limit: bool = False):
+    def __init__(
+        self, *, judge_engine: Any = None, wall_clock_rate_limit: bool = False
+    ):
         self._judge_engine = judge_engine
         self._wall_clock = wall_clock_rate_limit
 

@@ -151,12 +151,19 @@ class EvalSession:
 
     def run_task(
         self,
-        rows: Sequence[dict],
+        rows: Iterable[dict],
         task: EvalTask,
         *,
         stages: Sequence[Stage] | None = None,
     ) -> EvalResult:
         self._check_open()
+        if task.streaming.enabled:
+            if stages is not None:
+                raise ValueError(
+                    "streaming tasks run a fixed per-chunk pipeline; "
+                    "custom stages are not supported"
+                )
+            return self._run_streaming(rows, task)
         pipeline = list(stages) if stages is not None else default_stages()
         art = EvalArtifact(rows=list(rows), task=task)
         t_task = time.monotonic()
@@ -177,6 +184,22 @@ class EvalSession:
             mw.on_task_end(task, result, self)
         return result
 
+    def _run_streaming(self, source: Iterable[dict], task: EvalTask) -> EvalResult:
+        """Bounded-memory chunked execution (``task.streaming.enabled``):
+        prepare→infer→score per chunk, mergeable streaming aggregation,
+        optional DeltaLite spill for resume."""
+        from repro.core.streaming import StreamingPipeline
+
+        t_task = time.monotonic()
+        for mw in self.middleware:
+            mw.on_task_start(task, [], self)
+        result = StreamingPipeline.from_task(task).run(source, task, self)
+        self.accounting.tasks += 1
+        self.accounting.wall_s += time.monotonic() - t_task
+        for mw in self.middleware:
+            mw.on_task_end(task, result, self)
+        return result
+
     def run_suite(
         self, suite: EvalSuite, *, stages: Sequence[Stage] | None = None
     ) -> SuiteResult:
@@ -187,8 +210,11 @@ class EvalSession:
         results: dict[tuple[str, str], EvalResult] = {}
         jobs = suite.jobs()
         for job in jobs:
+            # a callable source yields a fresh iterator per job (streaming
+            # tasks swept across models consume their source once per run)
+            rows = job.rows() if callable(job.rows) else job.rows
             results[(job.model_label, job.task.task_id)] = self.run_task(
-                job.rows, job.task, stages=stages
+                rows, job.task, stages=stages
             )
         comparisons = build_comparisons(suite, results)
         return SuiteResult(

@@ -79,7 +79,11 @@ class EvalResult:
     @property
     def throughput_per_min(self) -> float:
         dt = self.timing.get("infer_s", 0.0)
-        return len(self.responses) / dt * 60.0 if dt > 0 else float("inf")
+        # streaming runs discard responses; the count lives in the logs
+        n = len(self.responses) or self.logs.get("streaming", {}).get(
+            "n_examples", 0
+        )
+        return n / dt * 60.0 if dt > 0 else float("inf")
 
 
 # -- artifact ------------------------------------------------------------------
@@ -421,6 +425,10 @@ class Middleware:
     def on_stage_end(self, stage: Stage, art: EvalArtifact, session: Any) -> None:
         pass
 
+    def on_chunk_end(self, chunk_index: int, state: dict, session: Any) -> None:
+        """Streaming pipeline only: a chunk finished (and was committed to
+        the spill manifest, when spill is configured)."""
+
     def on_task_end(self, task: EvalTask, result: EvalResult, session: Any) -> None:
         pass
 
@@ -435,11 +443,18 @@ class CostBudgetMiddleware(Middleware):
         self.max_usd = max_usd
 
     def on_stage_end(self, stage, art, session) -> None:
+        self._check(session, f"after stage {stage.name!r} of task "
+                             f"{art.task.task_id!r}")
+
+    def on_chunk_end(self, chunk_index, state, session) -> None:
+        self._check(session, f"after streaming chunk {chunk_index}")
+
+    def _check(self, session, where: str) -> None:
         spent = session.accounting.cost_usd
         if spent > self.max_usd:
             raise CostBudgetExceeded(
-                f"session cost ${spent:.4f} exceeds budget ${self.max_usd:.4f} "
-                f"(after stage {stage.name!r} of task {art.task.task_id!r})"
+                f"session cost ${spent:.4f} exceeds budget "
+                f"${self.max_usd:.4f} ({where})"
             )
 
 
@@ -461,6 +476,14 @@ class ProgressMiddleware(Middleware):
     def on_stage_end(self, stage, art, session) -> None:
         dt = time.monotonic() - self._t0.get(stage.name, time.monotonic())
         print(f"[{art.task.task_id}]   {stage.name}: {dt:.2f}s", file=self.stream)
+
+    def on_chunk_end(self, chunk_index, state, session) -> None:
+        print(
+            f"  chunk {chunk_index}: rows {state['start']}.."
+            f"{state['start'] + state['n_rows']}, "
+            f"{state['n_failures']} failures",
+            file=self.stream,
+        )
 
     def on_task_end(self, task, result, session) -> None:
         vals = ", ".join(

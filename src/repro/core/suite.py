@@ -22,7 +22,8 @@ text/markdown reports for regression dashboards.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import warnings
+from typing import Callable, Iterable, Sequence, Union
 
 from repro.core.compare import Comparison, compare_scores
 from repro.core.config import EngineModelConfig, EvalTask
@@ -31,28 +32,38 @@ from repro.core.stages import EvalResult
 #: comparisons key layout: task_id -> metric -> (label_a, label_b)
 ComparisonMatrix = dict[str, dict[str, dict[tuple[str, str], Comparison]]]
 
+#: examples for a task: a materialized list, or (for streaming tasks) a
+#: zero-arg factory returning a fresh iterator per run
+RowSource = Union[list[dict], Callable[[], Iterable[dict]]]
+
 
 @dataclasses.dataclass(frozen=True)
 class SuiteJob:
     model_label: str
     task: EvalTask
-    rows: list[dict]
+    rows: RowSource
 
 
 class EvalSuite:
     def __init__(self, name: str = "suite"):
         self.name = name
-        self._tasks: list[tuple[EvalTask, list[dict]]] = []
+        self._tasks: list[tuple[EvalTask, RowSource]] = []
         self._models: list[EngineModelConfig] = []
 
     # -- fluent builder ----------------------------------------------------------
 
-    def add_task(self, task: EvalTask, rows: Sequence[dict]) -> "EvalSuite":
+    def add_task(
+        self, task: EvalTask, rows: Sequence[dict] | Callable[[], Iterable[dict]]
+    ) -> "EvalSuite":
         """Register a task template and its examples.  The task's own
-        ``model`` is used unless :meth:`sweep_models` overrides it."""
+        ``model`` is used unless :meth:`sweep_models` overrides it.
+
+        For streaming tasks pass a zero-arg callable (e.g.
+        ``lambda: iter_qa_examples(1_000_000)``) so each (model, task) job
+        consumes a fresh iterator without materializing the dataset."""
         if task.task_id in self.task_ids():
             raise ValueError(f"duplicate task_id {task.task_id!r}")
-        self._tasks.append((task, list(rows)))
+        self._tasks.append((task, rows if callable(rows) else list(rows)))
         return self
 
     def sweep_models(
@@ -101,7 +112,7 @@ class EvalSuite:
                         SuiteJob(label, task.with_model(model), rows)
                     )
         else:
-            by_cfg = {c: l for c, l in zip(self.model_configs(), labels)}
+            by_cfg = dict(zip(self.model_configs(), labels))
             for task, rows in self._tasks:
                 out.append(SuiteJob(by_cfg[task.model], task, rows))
         return out
@@ -125,8 +136,15 @@ def build_comparisons(
             out[task.task_id] = {}
             continue
         shared = set.intersection(*(set(s) for s in per_model.values()))
+        if not shared and any(not s for s in per_model.values()):
+            # streaming results never materialize per-example score vectors
+            warnings.warn(
+                f"task {task.task_id!r}: no per-example scores to compare "
+                "(streaming tasks opt out of pairwise significance tests)",
+                stacklevel=2,
+            )
         task_cmp: dict[str, dict[tuple[str, str], Comparison]] = {}
-        present = [l for l in labels if l in per_model]
+        present = [lab for lab in labels if lab in per_model]
         for metric in sorted(shared):
             cells: dict[tuple[str, str], Comparison] = {}
             for i, a in enumerate(present):

@@ -6,7 +6,6 @@ One directory per run: ``params.json`` (full task config), ``metrics.json``
 
 from __future__ import annotations
 
-import dataclasses
 import gzip
 import json
 import os

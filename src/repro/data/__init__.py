@@ -1,5 +1,10 @@
 from repro.data.datasets import (
     instruction_examples,
+    iter_chunks,
+    iter_instruction_examples,
+    iter_mixed_examples,
+    iter_qa_examples,
+    iter_summarization_examples,
     mixed_examples,
     qa_examples,
     rag_examples,
@@ -12,6 +17,11 @@ from repro.data.tokenizer import HashTokenizer
 __all__ = [
     "HashTokenizer",
     "instruction_examples",
+    "iter_chunks",
+    "iter_instruction_examples",
+    "iter_mixed_examples",
+    "iter_qa_examples",
+    "iter_summarization_examples",
     "mixed_examples",
     "qa_examples",
     "rag_examples",

@@ -3,12 +3,21 @@ instruction-following) and a token-stream source for the training examples.
 
 Everything is deterministic in the seed: benchmarks and the caching
 workflow need identical prompts across runs to observe cache hits.
+
+Two access styles per dataset:
+
+* list builders (``qa_examples`` …) — materialize ``n`` rows, the classic
+  in-memory path;
+* streaming iterators (``iter_qa_examples`` …) — yield the *same* rows
+  one at a time, O(1) memory, for the chunked execution path.  Feed them
+  through :func:`iter_chunks` to get fixed-size example chunks.
 """
 
 from __future__ import annotations
 
+import itertools
 import random
-from typing import Iterator
+from typing import Iterable, Iterator
 
 _TOPICS = [
     "gravity", "photosynthesis", "volcanoes", "enzymes", "galaxies",
@@ -29,59 +38,110 @@ _INSTR = [
 ]
 
 
-def qa_examples(n: int, seed: int = 0) -> list[dict]:
+# -- streaming iterators ------------------------------------------------------
+
+
+def iter_chunks(rows: Iterable[dict], chunk_size: int) -> Iterator[list[dict]]:
+    """Yield fixed-size chunks from any example iterable (last may be short).
+
+    This is the unit of work for the streaming pipeline: only one chunk of
+    examples is ever resident, regardless of dataset size.
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    it = iter(rows)
+    while chunk := list(itertools.islice(it, chunk_size)):
+        yield chunk
+
+
+def iter_qa_examples(n: int, seed: int = 0) -> Iterator[dict]:
     rng = random.Random(seed)
-    out = []
     for i in range(n):
         topic = rng.choice(_TOPICS)
         fact = rng.choice(_FACTS).format(year=1800 + rng.randint(0, 220),
                                          n=rng.randint(2, 9))
-        question = f"What is known about {topic} (case {i})?"
-        reference = f"{topic} {fact}"
-        out.append(
-            {"id": f"qa-{seed}-{i}", "question": question,
-             "reference": reference, "domain": "qa"}
-        )
-    return out
+        yield {
+            "id": f"qa-{seed}-{i}",
+            "question": f"What is known about {topic} (case {i})?",
+            "reference": f"{topic} {fact}",
+            "domain": "qa",
+        }
 
 
-def summarization_examples(n: int, seed: int = 0) -> list[dict]:
+def iter_summarization_examples(n: int, seed: int = 0) -> Iterator[dict]:
     rng = random.Random(seed + 1)
-    out = []
     for i in range(n):
         topic = rng.choice(_TOPICS)
         sents = [
-            f"{topic} {rng.choice(_FACTS).format(year=1900 + rng.randint(0, 120), n=rng.randint(2, 9))}."
+            f"{topic} "
+            + rng.choice(_FACTS).format(year=1900 + rng.randint(0, 120),
+                                        n=rng.randint(2, 9))
+            + "."
             for _ in range(rng.randint(4, 8))
         ]
         doc = " ".join(sents)
-        out.append(
-            {
-                "id": f"sum-{seed}-{i}",
-                "question": f"Summarize: {doc}",
-                "reference": sents[0],
-                "domain": "summarization",
-            }
-        )
-    return out
+        yield {
+            "id": f"sum-{seed}-{i}",
+            "question": f"Summarize: {doc}",
+            "reference": sents[0],
+            "domain": "summarization",
+        }
 
 
-def instruction_examples(n: int, seed: int = 0) -> list[dict]:
+def iter_instruction_examples(n: int, seed: int = 0) -> Iterator[dict]:
     rng = random.Random(seed + 2)
-    out = []
     for i in range(n):
         topic, topic2 = rng.sample(_TOPICS, 2)
         instr = rng.choice(_INSTR).format(topic=topic, topic2=topic2,
                                           n=rng.randint(2, 5))
-        out.append(
-            {
-                "id": f"instr-{seed}-{i}",
-                "question": instr,
-                "reference": f"A helpful response about {topic}.",
-                "domain": "instruction",
-            }
-        )
-    return out
+        yield {
+            "id": f"instr-{seed}-{i}",
+            "question": instr,
+            "reference": f"A helpful response about {topic}.",
+            "domain": "instruction",
+        }
+
+
+def iter_mixed_examples(n: int, seed: int = 0) -> Iterator[dict]:
+    """Streaming multi-domain mix: deterministic weighted interleave of the
+    three domain streams, O(1) memory.
+
+    Note: the interleave order differs from :func:`mixed_examples` (which
+    shuffles the materialized list — impossible without O(n) memory); the
+    example *set* per domain is identical.
+    """
+    per = n // 3
+    streams = [
+        iter_qa_examples(per, seed),
+        iter_summarization_examples(per, seed),
+        iter_instruction_examples(n - 2 * per, seed),
+    ]
+    remaining = [per, per, n - 2 * per]
+    rng = random.Random(seed + 3)
+    while any(remaining):
+        total = sum(remaining)
+        pick = rng.randrange(total)
+        for d in range(3):
+            if pick < remaining[d]:
+                remaining[d] -= 1
+                yield next(streams[d])
+                break
+            pick -= remaining[d]
+
+
+# -- list builders ------------------------------------------------------------
+
+
+def qa_examples(n: int, seed: int = 0) -> list[dict]:
+    return list(iter_qa_examples(n, seed))
+
+
+def summarization_examples(n: int, seed: int = 0) -> list[dict]:
+    return list(iter_summarization_examples(n, seed))
+
+
+def instruction_examples(n: int, seed: int = 0) -> list[dict]:
+    return list(iter_instruction_examples(n, seed))
 
 
 def mixed_examples(n: int, seed: int = 0) -> list[dict]:

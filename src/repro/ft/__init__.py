@@ -1,4 +1,19 @@
-from repro.ft.failure_sim import Fault, FlakyFn, simulate_training
+from repro.ft.failure_sim import (
+    ChunkCrashMiddleware,
+    Fault,
+    FlakyFn,
+    SimulatedCrash,
+    simulate_training,
+)
 from repro.ft.workers import PoolStats, ShardResult, WorkerPool
 
-__all__ = ["Fault", "FlakyFn", "PoolStats", "ShardResult", "WorkerPool", "simulate_training"]
+__all__ = [
+    "ChunkCrashMiddleware",
+    "Fault",
+    "FlakyFn",
+    "PoolStats",
+    "ShardResult",
+    "SimulatedCrash",
+    "WorkerPool",
+    "simulate_training",
+]

@@ -45,6 +45,58 @@ class FlakyFn:
         return self.fn(idx, shard, worker)
 
 
+class SimulatedCrash(RuntimeError):
+    """Injected driver death: the process 'dies' mid-run, leaving any
+    on-disk state (checkpoints, spill manifests) exactly as committed."""
+
+
+class ChunkCrashMiddleware:
+    """Deterministic crash injection for streaming evaluation runs.
+
+    Reuses the :class:`Fault` schedule with ``shard`` = chunk index: a
+    ``raise`` fault at ``(chunk, attempt)`` kills the run *after* that
+    chunk committed to the spill manifest — the streaming analogue of
+    node death between Spark task commits.  Attempts are counted per
+    chunk across restarts of the same middleware instance, so a resumed
+    run (which skips committed chunks and never re-fires their hooks)
+    proceeds past the crash point.
+
+    Duck-types :class:`repro.core.stages.Middleware` (only the
+    ``on_chunk_end`` hook does anything).
+    """
+
+    def __init__(self, faults: list[Fault]):
+        self.faults = {(f.shard, f.attempt): f for f in faults}
+        self.attempt_counts: dict[int, int] = {}
+        self.injected: list[tuple[int, int, str]] = []
+
+    def on_task_start(self, task, rows, session) -> None:
+        pass
+
+    def on_stage_start(self, stage, art, session) -> None:
+        pass
+
+    def on_stage_end(self, stage, art, session) -> None:
+        pass
+
+    def on_task_end(self, task, result, session) -> None:
+        pass
+
+    def on_chunk_end(self, chunk_index: int, state: dict, session) -> None:
+        attempt = self.attempt_counts.get(chunk_index, 0) + 1
+        self.attempt_counts[chunk_index] = attempt
+        fault = self.faults.get((chunk_index, attempt))
+        if fault is not None:
+            self.injected.append((chunk_index, attempt, fault.kind))
+            if fault.kind == "raise":
+                raise SimulatedCrash(
+                    f"injected driver death after chunk={chunk_index} "
+                    f"attempt={attempt}"
+                )
+            if fault.kind == "delay":
+                time.sleep(fault.delay_s)
+
+
 def simulate_training(
     train_step: Callable,
     init_state: Any,

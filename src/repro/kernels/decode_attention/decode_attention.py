@@ -105,8 +105,12 @@ def decode_attention(
         grid=(b, kh, n_s),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), lambda b_, k_, is_, lens: (b_, k_, 0, 0)),
-            pl.BlockSpec((1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)),
-            pl.BlockSpec((1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)),
+            pl.BlockSpec(
+                (1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_s, d), lambda b_, k_, is_, lens: (b_, k_, is_, 0)
+            ),
         ],
         out_specs=pl.BlockSpec(
             (1, 1, g, d), lambda b_, k_, is_, lens: (b_, k_, 0, 0)

@@ -20,7 +20,7 @@ def ssd_ref(
     c_mat: jax.Array,  # (B, L, H, N)
     initial_state: jax.Array | None = None,  # (B, H, P, N)
 ) -> tuple[jax.Array, jax.Array]:
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     n = b_mat.shape[-1]
     f32 = jnp.float32
 

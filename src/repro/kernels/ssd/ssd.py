@@ -97,11 +97,11 @@ def ssd(
     chunk: int = 256,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     n = b_mat.shape[-1]
-    chunk = min(chunk, l)
-    assert l % chunk == 0, (l, chunk)
-    nc = l // chunk
+    chunk = min(chunk, slen)
+    assert slen % chunk == 0, (slen, chunk)
+    nc = slen // chunk
 
     kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
     a2d = a.reshape(h, 1).astype(jnp.float32)
@@ -121,7 +121,7 @@ def ssd(
             pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, slen, h, p), x.dtype),
             jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],

@@ -27,7 +27,7 @@ from repro.configs import SHAPES, get_config
 from repro.launch.accounting import account_cell
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline
+from repro.launch.roofline import roofline
 from repro.models.model import active_param_count, build_model
 
 PREFILL_PTS = (2048, 4096, 6144)

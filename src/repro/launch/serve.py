@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.ratelimit import TokenBucket

@@ -58,7 +58,11 @@ def main() -> None:
     params = pm.init_params(jax.random.key(0), model.param_specs())
     opt = init_opt_state(params)
     start = 0
-    mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None
+    mgr = (
+        CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        if args.ckpt_dir
+        else None
+    )
     if mgr and args.resume:
         from repro.ckpt import latest_step, restore_checkpoint
 

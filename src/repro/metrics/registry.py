@@ -9,7 +9,7 @@ constructed once per evaluation, not per metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Protocol, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 

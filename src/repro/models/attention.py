@@ -110,7 +110,7 @@ def chunked_attention(
         q_pos = q_pos_base + qi * block_q
 
         def k_block_step(carry, ki):
-            m, l, acc = carry
+            m, denom, acc = carry
             kblk, vblk = kb[:, ki], vb[:, ki]
             s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk) * scale
             if causal:
@@ -125,19 +125,19 @@ def chunked_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             correction = jnp.exp(m - m_new)
-            l_new = l * correction + jnp.sum(p, axis=-1)
+            denom_new = denom * correction + jnp.sum(p, axis=-1)
             acc_new = acc * correction[..., None] + jnp.einsum(
                 "bkgqs,bskd->bkgqd", p, vblk
             )
-            return (m_new, l_new, acc_new), None
+            return (m_new, denom_new, acc_new), None
 
         m0 = jnp.full((b, kheads, g, block_q), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((b, kheads, g, block_q), jnp.float32)
+        denom0 = jnp.zeros((b, kheads, g, block_q), jnp.float32)
         acc0 = jnp.zeros((b, kheads, g, block_q, dv), jnp.float32)
-        (m, l, acc), _ = maybe_scan(
-            k_block_step, (m0, l0, acc0), jnp.arange(nk)
+        (m, denom, acc), _ = maybe_scan(
+            k_block_step, (m0, denom0, acc0), jnp.arange(nk)
         )
-        out = acc / jnp.maximum(l, 1e-37)[..., None]  # (B,K,G,bq,dv)
+        out = acc / jnp.maximum(denom, 1e-37)[..., None]  # (B,K,G,bq,dv)
         return None, out
 
     _, outs = maybe_scan(q_block_step, None, jnp.arange(nq))

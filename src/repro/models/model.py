@@ -22,7 +22,6 @@ Batch dict convention (all optional except ``tokens``):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -418,7 +417,9 @@ class MambaLM:
         x = sharding.constrain(x, ("batch", "seq", "embed"))
 
         def block(p, h):
-            y = ssm.mamba2_full(p["mixer"], cfg, layers.rms_norm(p["ln"], h, cfg.norm_eps))
+            y = ssm.mamba2_full(
+                p["mixer"], cfg, layers.rms_norm(p["ln"], h, cfg.norm_eps)
+            )
             return h + y
 
         body = _remat(block, self.remat)
@@ -604,8 +605,6 @@ class HybridLM:
     ) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         x = layers.embed(params["embed"], batch["tokens"], dtype)
-        s = x.shape[1]
-        positions = jnp.arange(s)[None, :]
         shared = params["shared_attn"]
 
         def group_body(h, xs):
@@ -762,7 +761,6 @@ class EncDecLM:
     # -- decoder ---------------------------------------------------------------
 
     def _dec_embed(self, params, tokens, dtype, pos_offset=None):
-        cfg = self.cfg
         x = layers.embed(params["embed"], tokens, dtype)
         if pos_offset is None:
             pos = params["dec_pos"]["table"][None, : tokens.shape[1]]
@@ -829,7 +827,6 @@ class EncDecLM:
         cfg = self.cfg
         enc_out = self.encode(params, batch["frames"], dtype)
         tokens = batch["tokens"]
-        s = tokens.shape[1]
         x = self._dec_embed(params, tokens, dtype)
 
         def scan_body(h, pc):

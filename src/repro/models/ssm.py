@@ -94,11 +94,11 @@ def ssd_chunked(
     initial_state: jax.Array | None = None,  # (B, H, P, N)
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked state-space-dual scan. Returns (y, final_state)."""
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     n = b_mat.shape[-1]
-    chunk = min(chunk, l)
-    assert l % chunk == 0, (l, chunk)
-    nc = l // chunk
+    chunk = min(chunk, slen)
+    assert slen % chunk == 0, (slen, chunk)
+    nc = slen // chunk
 
     f32 = jnp.float32
     xd = (x * dt[..., None]).astype(f32)  # dt folded into x
@@ -146,7 +146,7 @@ def ssd_chunked(
         "bcqhn,bchpn,bcqh->bcqhp", cc, entering_states, state_decay
     )
 
-    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    y = (y_diag + y_off).reshape(bsz, slen, h, p)
     return y.astype(x.dtype), final_state
 
 
@@ -180,13 +180,13 @@ def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
 
 
 def _to_heads(cfg: ModelConfig, x_ssm, b_mat, c_mat):
-    bsz, l = x_ssm.shape[:2]
+    bsz, slen = x_ssm.shape[:2]
     h, p = cfg.ssm_nheads, cfg.ssm_head_dim
     g, n = cfg.ssm_ngroups, cfg.ssm_state
-    x_h = x_ssm.reshape(bsz, l, h, p)
+    x_h = x_ssm.reshape(bsz, slen, h, p)
     rep = h // g
-    b_h = jnp.repeat(b_mat.reshape(bsz, l, g, n), rep, axis=2)
-    c_h = jnp.repeat(c_mat.reshape(bsz, l, g, n), rep, axis=2)
+    b_h = jnp.repeat(b_mat.reshape(bsz, slen, g, n), rep, axis=2)
+    c_h = jnp.repeat(c_mat.reshape(bsz, slen, g, n), rep, axis=2)
     return x_h, b_h, c_h
 
 
@@ -194,7 +194,7 @@ def mamba2_full(
     params: dict, cfg: ModelConfig, x: jax.Array
 ) -> jax.Array:
     """Full-sequence Mamba2 block (train / prefill)."""
-    bsz, l, _ = x.shape
+    bsz, slen, _ = x.shape
     z = layers.dense(params["wz"], x)
     xbc = layers.dense(params["wxBC"], x)
     dt_raw = layers.dense(params["wdt"], x)  # (B,L,H)
@@ -211,7 +211,7 @@ def mamba2_full(
 
     y, _ = ssd_chunked(x_h, dt, a, b_h, c_h, cfg.ssm_chunk)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * x_h
-    y = y.reshape(bsz, l, cfg.d_inner)
+    y = y.reshape(bsz, slen, cfg.d_inner)
 
     y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     y = sharding.constrain(y, ("batch", "seq", "ssm_inner"))
@@ -229,7 +229,7 @@ def mamba2_prefill(
     Identical math to :func:`mamba2_full`, but returns the final SSD state and
     the trailing conv window so decoding can continue from position L.
     """
-    bsz, l, _ = x.shape
+    bsz, slen, _ = x.shape
     z = layers.dense(params["wz"], x)
     xbc_raw = layers.dense(params["wxBC"], x)
     dt_raw = layers.dense(params["wdt"], x)
@@ -247,13 +247,13 @@ def mamba2_prefill(
 
     y, final_state = ssd_chunked(x_h, dt, a, b_h, c_h, cfg.ssm_chunk)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * x_h
-    y = y.reshape(bsz, l, cfg.d_inner)
+    y = y.reshape(bsz, slen, cfg.d_inner)
     y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = layers.dense(params["out_proj"], y)
 
     k = cfg.ssm_conv
-    window = xbc_raw[:, -(k - 1):, :] if l >= k - 1 else jnp.concatenate(
-        [cache["conv"].astype(xbc_raw.dtype)[:, l:], xbc_raw], axis=1
+    window = xbc_raw[:, -(k - 1):, :] if slen >= k - 1 else jnp.concatenate(
+        [cache["conv"].astype(xbc_raw.dtype)[:, slen:], xbc_raw], axis=1
     )
     new_cache = {
         "conv": window.astype(cache["conv"].dtype),
@@ -301,7 +301,9 @@ def mamba2_decode(
 
     state = cache["state"].astype(jnp.float32)
     state = state * da[:, :, None, None] + jnp.einsum(
-        "bhp,bhn->bhpn", (dt[..., None] * x_h.astype(jnp.float32)), b_h.astype(jnp.float32)
+        "bhp,bhn->bhpn",
+        dt[..., None] * x_h.astype(jnp.float32),
+        b_h.astype(jnp.float32),
     )
     y = jnp.einsum("bhpn,bhn->bhp", state, c_h.astype(jnp.float32))
     y = y + params["D"].astype(jnp.float32)[None, :, None] * x_h.astype(jnp.float32)

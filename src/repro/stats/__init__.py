@@ -21,11 +21,17 @@ from repro.stats.significance import (
     permutation_test,
     wilcoxon_signed_rank,
 )
+from repro.stats.streaming import (
+    MetricAccumulator,
+    PoissonBootstrap,
+    streaming_ci,
+)
 
 __all__ = [
-    "EffectSize", "Interval", "TestRecommendation", "TestResult",
-    "bca_bootstrap", "cohens_d", "compute_ci", "hedges_g", "is_binary",
-    "mcnemar_test", "odds_ratio", "paired_t_test", "percentile_bootstrap",
-    "permutation_test", "recommend_test", "run_recommended", "shapiro_wilk",
+    "EffectSize", "Interval", "MetricAccumulator", "PoissonBootstrap",
+    "TestRecommendation", "TestResult", "bca_bootstrap", "cohens_d",
+    "compute_ci", "hedges_g", "is_binary", "mcnemar_test", "odds_ratio",
+    "paired_t_test", "percentile_bootstrap", "permutation_test",
+    "recommend_test", "run_recommended", "shapiro_wilk", "streaming_ci",
     "t_interval", "wilcoxon_signed_rank", "wilson_interval",
 ]

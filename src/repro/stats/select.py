@@ -13,7 +13,6 @@ import math
 
 import numpy as np
 
-from repro.stats.special import norm_ppf, norm_sf
 from repro.stats.significance import (
     TestResult,
     mcnemar_test,
@@ -21,6 +20,7 @@ from repro.stats.significance import (
     permutation_test,
     wilcoxon_signed_rank,
 )
+from repro.stats.special import norm_ppf, norm_sf
 
 
 def _polyval(coeffs: list[float], x: float) -> float:
@@ -116,7 +116,8 @@ def recommend_test(a, b, *, alpha: float = 0.05) -> TestRecommendation:
         p_norm = 0.0
     if n > 30 and p_norm > alpha:
         return TestRecommendation(
-            "paired_t", f"continuous, normality not rejected (SW p={p_norm:.3f}), n={n}",
+            "paired_t",
+            f"continuous, normality not rejected (SW p={p_norm:.3f}), n={n}",
             p_norm,
         )
     return TestRecommendation(

@@ -1,0 +1,179 @@
+"""Mergeable streaming statistics for chunked evaluation at paper scale.
+
+The in-memory :class:`~repro.core.stages.AggregateStage` holds every
+per-example score so it can bootstrap a CI; at the paper's "hundreds of
+thousands or millions of samples" that is O(dataset) memory.  This module
+keeps the rigor story with O(B) state per metric:
+
+* :class:`MetricAccumulator` — count / sum / sum-of-squares moments plus a
+  NaN (unscorable) counter.  Mergeable, JSON-serializable, and sufficient
+  for the exact mean, the analytical t-interval, and the Wilson interval
+  for binary metrics.
+* :class:`PoissonBootstrap` — B replicate ``(sum w*x, sum w)`` pairs under
+  i.i.d. Poisson(1) resampling weights: the standard streaming /
+  distributed bootstrap (Chamandy et al.; same scheme as the Pallas kernel
+  in ``repro/kernels/bootstrap``).  Each chunk's weights come from a
+  counter-based Philox stream keyed by ``(seed, chunk_start)``, so the
+  accumulated replicates are deterministic given the chunk layout and
+  independent of processing order — merging partial states from a resumed
+  run reproduces the uninterrupted result bit-for-bit.
+
+Both accumulators serialize to plain dicts (``state()`` / ``from_state``)
+so per-chunk partials can spill to a DeltaLite manifest and be merged on
+resume.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.stats.bootstrap import Interval, wilson_interval
+from repro.stats.special import t_ppf
+
+
+class MetricAccumulator:
+    """Mergeable moment accumulator for one metric's per-example scores."""
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.total = 0.0
+        self.total_sq = 0.0
+        self.n_nan = 0
+
+    def update(self, scores: np.ndarray) -> None:
+        scores = np.asarray(scores, np.float64)
+        ok = scores[~np.isnan(scores)]
+        self.n += int(ok.size)
+        self.total += float(ok.sum())
+        self.total_sq += float((ok * ok).sum())
+        self.n_nan += int(scores.size - ok.size)
+
+    def merge(self, other: "MetricAccumulator") -> "MetricAccumulator":
+        self.n += other.n
+        self.total += other.total
+        self.total_sq += other.total_sq
+        self.n_nan += other.n_nan
+        return self
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else float("nan")
+
+    @property
+    def variance(self) -> float:
+        """Unbiased (ddof=1) variance from the accumulated moments."""
+        if self.n < 2:
+            return 0.0
+        var = (self.total_sq - self.total * self.total / self.n) / (self.n - 1)
+        return max(var, 0.0)  # clamp catastrophic-cancellation dust
+
+    def state(self) -> dict:
+        return {
+            "n": self.n, "total": self.total,
+            "total_sq": self.total_sq, "n_nan": self.n_nan,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "MetricAccumulator":
+        acc = cls()
+        acc.n = int(state["n"])
+        acc.total = float(state["total"])
+        acc.total_sq = float(state["total_sq"])
+        acc.n_nan = int(state["n_nan"])
+        return acc
+
+
+class PoissonBootstrap:
+    """B mergeable bootstrap replicates under Poisson(1) resample weights.
+
+    ``update(scores, start)`` draws a ``(n_boot, len(scores))`` weight block
+    from ``Philox(key=(seed, start))`` — ``start`` is the chunk's global
+    example offset — and folds it into the running ``sum(w*x)`` / ``sum(w)``
+    pairs.  NaN scores get weight zero (excluded, matching the in-memory
+    path's NaN filtering).  ``means()`` yields the B replicate means, whose
+    percentiles form the CI.
+    """
+
+    def __init__(self, n_boot: int = 1000, seed: int = 0):
+        self.n_boot = int(n_boot)
+        self.seed = int(seed)
+        self.sum_wx = np.zeros(self.n_boot, np.float64)
+        self.sum_w = np.zeros(self.n_boot, np.float64)
+
+    def update(self, scores: np.ndarray, start: int) -> None:
+        scores = np.asarray(scores, np.float64)
+        if scores.size == 0:
+            return
+        rng = np.random.Generator(np.random.Philox(key=[self.seed, start]))
+        w = rng.poisson(1.0, (self.n_boot, scores.size)).astype(np.float64)
+        valid = ~np.isnan(scores)
+        w *= valid[None, :]
+        self.sum_wx += w @ np.where(valid, scores, 0.0)
+        self.sum_w += w.sum(axis=1)
+
+    def merge(self, other: "PoissonBootstrap") -> "PoissonBootstrap":
+        if (other.n_boot, other.seed) != (self.n_boot, self.seed):
+            raise ValueError("cannot merge bootstraps with different (B, seed)")
+        self.sum_wx += other.sum_wx
+        self.sum_w += other.sum_w
+        return self
+
+    def means(self) -> np.ndarray:
+        return self.sum_wx / np.maximum(self.sum_w, 1.0)
+
+    def interval(
+        self, value: float, n: int, *, confidence: float = 0.95
+    ) -> Interval:
+        alpha = (1 - confidence) / 2
+        lo, hi = np.quantile(self.means(), [alpha, 1 - alpha])
+        return Interval(value, float(lo), float(hi), "poisson", n)
+
+    def state(self) -> dict:
+        return {
+            "n_boot": self.n_boot, "seed": self.seed,
+            "sum_wx": self.sum_wx.tolist(), "sum_w": self.sum_w.tolist(),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PoissonBootstrap":
+        boot = cls(int(state["n_boot"]), int(state["seed"]))
+        boot.sum_wx = np.asarray(state["sum_wx"], np.float64)
+        boot.sum_w = np.asarray(state["sum_w"], np.float64)
+        return boot
+
+
+def streaming_ci(
+    acc: MetricAccumulator,
+    boot: PoissonBootstrap | None,
+    *,
+    method: str = "bca",
+    confidence: float = 0.95,
+    binary: bool = False,
+) -> Interval:
+    """Streaming counterpart of :func:`repro.stats.bootstrap.compute_ci`.
+
+    ``analytical`` is exact from the moments (Wilson for binary metrics, t
+    otherwise).  The bootstrap methods (``percentile`` / ``bca``) map to the
+    Poisson-bootstrap percentile interval — statistically equivalent to the
+    in-memory multinomial bootstrap within Monte-Carlo noise, but computable
+    without per-example scores.
+    """
+    if acc.n == 0:
+        return Interval(float("nan"), float("nan"), float("nan"), "none", 0)
+    if method == "analytical":
+        if binary:
+            return wilson_interval(
+                int(round(acc.total)), acc.n, confidence=confidence
+            )
+        se = math.sqrt(acc.variance / acc.n) if acc.n > 1 else 0.0
+        tcrit = t_ppf(1 - (1 - confidence) / 2, acc.n - 1) if acc.n > 1 else 0.0
+        return Interval(
+            acc.mean, acc.mean - tcrit * se, acc.mean + tcrit * se, "t", acc.n
+        )
+    if method not in ("percentile", "bca"):
+        raise ValueError(f"unknown ci method {method!r}")
+    if boot is None:
+        raise ValueError(f"ci method {method!r} needs a PoissonBootstrap")
+    return boot.interval(acc.mean, acc.n, confidence=confidence)

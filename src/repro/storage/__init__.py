@@ -1,3 +1,4 @@
 from repro.storage.deltalite import CommitConflict, DeltaLite
+from repro.storage.spill import ChunkManifest
 
-__all__ = ["CommitConflict", "DeltaLite"]
+__all__ = ["ChunkManifest", "CommitConflict", "DeltaLite"]

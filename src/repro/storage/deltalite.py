@@ -27,7 +27,7 @@ import json
 import os
 import time
 import uuid
-from typing import Any, Iterable
+from typing import Iterable
 
 
 class CommitConflict(Exception):

@@ -1,0 +1,46 @@
+"""Resumable chunk spill: per-chunk partial results on a DeltaLite table.
+
+A streaming run commits one manifest row per completed chunk — the chunk's
+mergeable accumulator states (:mod:`repro.stats.streaming`), failure
+sample, and stage stats — as a single DeltaLite commit.  The ACID log
+gives the two properties resume needs for free:
+
+* **atomicity** — a chunk is either fully committed (segment + log entry)
+  or invisible; a driver dying mid-chunk leaves at most an orphaned,
+  unreferenced segment file (crash safety inherited from DeltaLite);
+* **concurrency** — two drivers racing on the same table retry through
+  optimistic concurrency; duplicate rows for a chunk are resolved
+  latest-wins on the ``chunk_id`` key column.
+
+A restarted run reads the manifest, merges the committed partial states,
+and skips those chunks entirely — no re-inference, no re-scoring.  Each
+run is isolated under ``<root>/<run_key>`` (the task fingerprint), so a
+changed task config never resumes from stale chunks.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.storage.deltalite import DeltaLite
+
+
+class ChunkManifest:
+    def __init__(self, root: str, run_key: str):
+        self.run_key = run_key
+        self.path = os.path.join(root, run_key)
+        self.table = DeltaLite(self.path, key_column="chunk_id")
+
+    def completed(self) -> dict[int, dict]:
+        """chunk_id -> committed state row (latest wins on duplicates)."""
+        out: dict[int, dict] = {}
+        for row in self.table.read():
+            if row.get("run_key") == self.run_key:
+                out[int(row["chunk_id"])] = row
+        return out
+
+    def record(self, chunk_id: int, state: dict) -> int:
+        """Commit one completed chunk; returns the manifest version."""
+        return self.table.append(
+            [{"chunk_id": chunk_id, "run_key": self.run_key, **state}]
+        )

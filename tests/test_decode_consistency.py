@@ -55,7 +55,9 @@ def test_prefill_decode_matches_forward(arch, rng):
     pb["tokens"] = toks[:, :split]
     lg, cache = model.prefill(params, pb, cache, dtype=jnp.float32)
     errs = [
-        float(np.max(np.abs(np.asarray(lg) - np.asarray(logits_full[:, prefix + split - 1]))))
+        float(np.max(np.abs(
+            np.asarray(lg) - np.asarray(logits_full[:, prefix + split - 1])
+        )))
     ]
     for t in range(split, S):
         pos = jnp.full((B,), prefix + t, jnp.int32)
@@ -63,7 +65,9 @@ def test_prefill_decode_matches_forward(arch, rng):
             params, toks[:, t : t + 1], cache, pos, dtype=jnp.float32
         )
         errs.append(
-            float(np.max(np.abs(np.asarray(lg) - np.asarray(logits_full[:, prefix + t]))))
+            float(np.max(np.abs(
+                np.asarray(lg) - np.asarray(logits_full[:, prefix + t])
+            )))
         )
     assert max(errs) < 5e-5, f"{arch}: max err {max(errs):.2e}"
 
@@ -82,7 +86,9 @@ def test_ragged_positions_decode(rng):
     # decode logits at ragged positions vs single-row runs.
     outs = []
     for row in toks:
-        cache = pm.init_params(jax.random.key(1), model.cache_specs(1, MAX, jnp.float32))
+        cache = pm.init_params(
+            jax.random.key(1), model.cache_specs(1, MAX, jnp.float32)
+        )
         arr = jnp.asarray([row], jnp.int32)
         lg, cache = model.prefill(params, {"tokens": arr}, cache, dtype=jnp.float32)
         nxt = jnp.asarray([[int(np.argmax(np.asarray(lg)[0]))]], jnp.int32)

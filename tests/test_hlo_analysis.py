@@ -1,8 +1,6 @@
 """Collective-bytes parser on synthetic and real compiled HLO."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import collective_stats

@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -80,15 +79,15 @@ def test_decode_attention(b, kh, g, s, d, dtype, rng):
 
 
 @pytest.mark.parametrize(
-    "b,l,h,p,n,chunk",
+    "b,slen,h,p,n,chunk",
     [(2, 64, 2, 16, 8, 16), (1, 128, 4, 32, 16, 32), (2, 32, 1, 8, 128, 32)],
 )
-def test_ssd_kernel_and_chunked(b, l, h, p, n, chunk, rng):
-    x = jnp.asarray(rng.randn(b, l, h, p) * 0.5, jnp.float32)
-    dt = jnp.asarray(np.abs(rng.randn(b, l, h)) * 0.5 + 0.1, jnp.float32)
+def test_ssd_kernel_and_chunked(b, slen, h, p, n, chunk, rng):
+    x = jnp.asarray(rng.randn(b, slen, h, p) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(b, slen, h)) * 0.5 + 0.1, jnp.float32)
     a = jnp.asarray(-np.abs(rng.randn(h)) - 0.2, jnp.float32)
-    bm = jnp.asarray(rng.randn(b, l, h, n) * 0.5, jnp.float32)
-    cm = jnp.asarray(rng.randn(b, l, h, n) * 0.5, jnp.float32)
+    bm = jnp.asarray(rng.randn(b, slen, h, n) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.randn(b, slen, h, n) * 0.5, jnp.float32)
     y_ref, fs_ref = ssd_ref(x, dt, a, bm, cm)
     y_k, fs_k = ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
     y_c, fs_c = ssd_chunked(x, dt, a, bm, cm, chunk)

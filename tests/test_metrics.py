@@ -90,7 +90,9 @@ def test_bertscore_f1_identity():
 
 
 def test_judge_parsing_and_unparseable():
-    engine = SimulatedAPIEngine(EngineModelConfig(provider="openai", model_name="gpt-4o"))
+    engine = SimulatedAPIEngine(
+        EngineModelConfig(provider="openai", model_name="gpt-4o")
+    )
     engine.initialize()
     qs = [f"Question {i}: why is the sky blue?" for i in range(40)]
     rs = [f"Because of Rayleigh scattering variant {i}." for i in range(40)]
@@ -101,7 +103,9 @@ def test_judge_parsing_and_unparseable():
 
 
 def test_context_precision_and_recall():
-    contexts = [["noise chunk entirely", "gravity was discovered in 1687", "more noise"]]
+    contexts = [[
+        "noise chunk entirely", "gravity was discovered in 1687", "more noise"
+    ]]
     refs = ["gravity was discovered in 1687"]
     cp = context_precision(contexts, refs)
     assert 0.4 < cp[0] <= 1.0  # relevant chunk at rank 2 of 3

@@ -76,8 +76,6 @@ def test_failure_tracking(tmp_path):
     rows = mixed_examples(20, seed=9)
     task = _task(tmp_path, max_retries=0)
     # engine that fails every 5th call unrecoverably-ish (429 but no retries)
-    from repro.core.engines import SimulatedAPIEngine
-
     res = EvalRunner().evaluate(rows, task)
     assert isinstance(res.failures, list)
 

@@ -1,8 +1,6 @@
 """EvalSession + stage pipeline + EvalSuite: engine reuse, suite pairwise
 comparison, legacy-shim equivalence, stage swaps, middleware."""
 
-import dataclasses as dc
-
 import numpy as np
 import pytest
 

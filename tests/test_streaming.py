@@ -1,0 +1,329 @@
+"""Streaming bounded-memory evaluation: mergeable accumulators, Poisson
+bootstrap, chunked pipeline equivalence, DeltaLite spill + crash-resume."""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostBudgetExceeded,
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    ManifestMismatch,
+    MetricConfig,
+    StatisticsConfig,
+)
+from repro.data import iter_chunks, iter_qa_examples, qa_examples
+from repro.ft import ChunkCrashMiddleware, Fault, SimulatedCrash
+from repro.stats import (
+    MetricAccumulator,
+    PoissonBootstrap,
+    compute_ci,
+    streaming_ci,
+    t_interval,
+    wilson_interval,
+)
+
+M = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+
+
+def _task(task_id="stream", ci_method="percentile", **stream_kw) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=M,
+        inference=InferenceConfig(batch_size=32, n_workers=3, cache_dir=""),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=300, ci_method=ci_method
+        ),
+    ).with_streaming(**stream_kw)
+
+
+# -- accumulators --------------------------------------------------------------
+
+
+def test_accumulator_chunked_merge_matches_full_update():
+    rng = np.random.default_rng(0)
+    scores = rng.random(1000)
+    scores[::17] = np.nan
+    full = MetricAccumulator()
+    full.update(scores)
+    merged = MetricAccumulator()
+    for lo in range(0, 1000, 128):
+        part = MetricAccumulator()
+        part.update(scores[lo:lo + 128])
+        merged.merge(MetricAccumulator.from_state(part.state()))
+    assert merged.n == full.n
+    assert merged.n_nan == full.n_nan
+    assert merged.total == pytest.approx(full.total, rel=1e-12)
+    ok = scores[~np.isnan(scores)]
+    assert full.mean == pytest.approx(ok.mean())
+    assert full.variance == pytest.approx(ok.var(ddof=1))
+
+
+def test_poisson_bootstrap_order_independent_and_serializable():
+    rng = np.random.default_rng(1)
+    scores = rng.random(600)
+    starts = [0, 200, 400]
+    fwd = PoissonBootstrap(100, seed=7)
+    for s in starts:
+        fwd.update(scores[s:s + 200], s)
+    rev = PoissonBootstrap(100, seed=7)
+    for s in reversed(starts):
+        part = PoissonBootstrap(100, seed=7)
+        part.update(scores[s:s + 200], s)
+        rev.merge(PoissonBootstrap.from_state(part.state()))
+    np.testing.assert_allclose(fwd.means(), rev.means(), rtol=1e-12)
+    with pytest.raises(ValueError):
+        fwd.merge(PoissonBootstrap(100, seed=8))
+
+
+def test_streaming_ci_analytical_matches_in_memory():
+    rng = np.random.default_rng(2)
+    scores = rng.random(400)
+    acc = MetricAccumulator()
+    acc.update(scores)
+    iv = streaming_ci(acc, None, method="analytical")
+    ref = t_interval(scores)
+    assert iv.value == pytest.approx(ref.value, rel=1e-12)
+    assert iv.lo == pytest.approx(ref.lo, rel=1e-9)
+    assert iv.hi == pytest.approx(ref.hi, rel=1e-9)
+    # binary -> Wilson, exactly
+    binary = (rng.random(400) < 0.3).astype(np.float64)
+    acc_b = MetricAccumulator()
+    acc_b.update(binary)
+    iv_b = streaming_ci(acc_b, None, method="analytical", binary=True)
+    ref_b = wilson_interval(int(binary.sum()), 400)
+    assert (iv_b.value, iv_b.lo, iv_b.hi) == (ref_b.value, ref_b.lo, ref_b.hi)
+
+
+def test_poisson_ci_within_mc_tolerance_of_multinomial():
+    rng = np.random.default_rng(3)
+    scores = rng.random(1000)
+    boot = PoissonBootstrap(1000, seed=0)
+    acc = MetricAccumulator()
+    for lo in range(0, 1000, 250):
+        boot.update(scores[lo:lo + 250], lo)
+        acc.update(scores[lo:lo + 250])
+    iv = streaming_ci(acc, boot, method="percentile")
+    ref = compute_ci(scores, method="percentile", n_boot=1000)
+    width = ref.hi - ref.lo
+    assert iv.lo == pytest.approx(ref.lo, abs=0.5 * width)
+    assert iv.hi == pytest.approx(ref.hi, abs=0.5 * width)
+
+
+# -- streaming pipeline --------------------------------------------------------
+
+
+def test_streaming_matches_in_memory_run(tmp_path):
+    rows = qa_examples(400, seed=5)
+    with EvalSession() as session:
+        mem = session.run_task(rows, _task(enabled=False))
+    with EvalSession() as session:
+        stream = session.run_task(
+            iter(rows), _task(max_memory_rows=64, spill_dir=str(tmp_path / "sp"))
+        )
+    for m, mv in mem.metrics.items():
+        sv = stream.metrics[m]
+        assert sv.value == pytest.approx(mv.value, abs=1e-5)
+        assert sv.n == mv.n
+        assert sv.n_unscored == mv.n_unscored
+        width = max(mv.ci[1] - mv.ci[0], 1e-6)
+        assert sv.ci[0] == pytest.approx(mv.ci[0], abs=width)
+        assert sv.ci[1] == pytest.approx(mv.ci[1], abs=width)
+    assert stream.engine_stats["calls"] == mem.engine_stats["calls"] == 400
+    log = stream.logs["streaming"]
+    assert log["n_examples"] == 400
+    assert log["n_chunks"] == 7  # ceil(400/64)
+    assert log["max_resident_rows"] == 64  # O(chunk), not O(dataset)
+    # raw per-example state is discarded
+    assert stream.responses == []
+    assert stream.scores == {}
+
+
+def test_streaming_analytical_ci_identical(tmp_path):
+    rows = qa_examples(200, seed=6)
+    with EvalSession() as session:
+        mem = session.run_task(rows, _task(ci_method="analytical", enabled=False))
+    with EvalSession() as session:
+        stream = session.run_task(iter(rows), _task(
+            ci_method="analytical", max_memory_rows=50,
+        ))
+    for m, mv in mem.metrics.items():
+        sv = stream.metrics[m]
+        assert sv.ci_method == mv.ci_method
+        assert sv.value == pytest.approx(mv.value, rel=1e-9)
+        assert sv.ci[0] == pytest.approx(mv.ci[0], rel=1e-6, abs=1e-9)
+        assert sv.ci[1] == pytest.approx(mv.ci[1], rel=1e-6, abs=1e-9)
+
+
+def test_streaming_rejects_custom_stages():
+    with EvalSession() as session:
+        with pytest.raises(ValueError):
+            session.run_task(
+                [], _task(), stages=[],
+            )
+
+
+def test_cost_budget_aborts_between_chunks(tmp_path):
+    with EvalSession(cost_budget_usd=1e-9) as session:
+        with pytest.raises(CostBudgetExceeded, match="chunk"):
+            session.run_task(iter_qa_examples(200, seed=7), _task(
+                max_memory_rows=50,
+            ))
+
+
+# -- spill + resume ------------------------------------------------------------
+
+
+def test_crash_resume_skips_committed_chunks(tmp_path):
+    """Kill a streaming run mid-way (deterministic injection), restart,
+    assert completed chunks are skipped and metrics match an uninterrupted
+    run exactly."""
+    n, chunk = 400, 50
+    task = _task(max_memory_rows=chunk, spill_dir=str(tmp_path / "spill"))
+
+    # uninterrupted reference in its own spill dir
+    ref_task = _task(max_memory_rows=chunk, spill_dir=str(tmp_path / "ref"))
+    with EvalSession() as session:
+        ref = session.run_task(iter_qa_examples(n, seed=8), ref_task)
+
+    # crash after chunk 3 committed (chunks 0..3 done, 4..7 pending)
+    crash = ChunkCrashMiddleware([Fault(shard=3, attempt=1)])
+    with EvalSession(middleware=[crash]) as session:
+        with pytest.raises(SimulatedCrash):
+            session.run_task(iter_qa_examples(n, seed=8), task)
+        assert session.accounting.engine_calls == 4 * chunk
+    assert crash.injected == [(3, 1, "raise")]
+
+    # restart: committed chunks must not re-run (no engine calls for them)
+    with EvalSession(middleware=[crash]) as session:
+        res = session.run_task(iter_qa_examples(n, seed=8), task)
+        assert session.accounting.engine_calls == n - 4 * chunk
+    log = res.logs["streaming"]
+    assert log["n_resumed_chunks"] == 4
+    assert log["n_chunks"] == 8
+    for m, mv in ref.metrics.items():
+        assert res.metrics[m].value == mv.value
+        assert res.metrics[m].ci == mv.ci
+    assert res.engine_stats["calls"] == ref.engine_stats["calls"] == n
+
+
+def test_completed_run_resumes_with_zero_engine_calls(tmp_path):
+    task = _task(max_memory_rows=100, spill_dir=str(tmp_path / "spill"))
+    with EvalSession() as session:
+        first = session.run_task(iter_qa_examples(300, seed=9), task)
+    with EvalSession() as session:
+        again = session.run_task(iter_qa_examples(300, seed=9), task)
+        assert session.accounting.engine_calls == 0
+    assert again.logs["streaming"]["n_resumed_chunks"] == 3
+    # resumed chunks still count toward peak resident rows (digest check
+    # materializes them)
+    assert again.logs["streaming"]["max_resident_rows"] == 100
+    for m, mv in first.metrics.items():
+        assert again.metrics[m].value == mv.value
+        assert again.metrics[m].ci == mv.ci
+    # retuning execution knobs on restart must not orphan committed chunks
+    retuned = dc.replace(
+        task, inference=InferenceConfig(batch_size=8, n_workers=2, cache_dir="")
+    )
+    with EvalSession() as session:
+        res = session.run_task(iter_qa_examples(300, seed=9), retuned)
+        assert session.accounting.engine_calls == 0
+    assert res.logs["streaming"]["n_resumed_chunks"] == 3
+
+
+def test_manifest_mismatch_on_different_source(tmp_path):
+    task = _task(max_memory_rows=100, spill_dir=str(tmp_path / "spill"))
+    with EvalSession() as session:
+        session.run_task(iter_qa_examples(300, seed=10), task)
+    with EvalSession() as session:
+        with pytest.raises(ManifestMismatch):
+            # same task fingerprint, shorter source: last chunk disagrees
+            session.run_task(iter_qa_examples(250, seed=10), task)
+    with EvalSession() as session:
+        with pytest.raises(ManifestMismatch):
+            # same shape, different content: chunk digest disagrees
+            session.run_task(iter_qa_examples(300, seed=99), task)
+    with EvalSession() as session:
+        with pytest.raises(ManifestMismatch, match="beyond the end"):
+            # chunk-aligned shrink: trailing committed chunks must not be
+            # silently dropped
+            session.run_task(iter_qa_examples(200, seed=10), task)
+
+
+def test_with_streaming_preserves_prior_fields():
+    task = _task(max_memory_rows=256).with_streaming(spill_dir="/tmp/x")
+    assert task.streaming.max_memory_rows == 256  # not reset to the default
+    assert task.streaming.spill_dir == "/tmp/x"
+    assert task.streaming.enabled
+
+
+def test_streaming_ci_rejects_unknown_method():
+    acc = MetricAccumulator()
+    acc.update(np.arange(10, dtype=np.float64))
+    with pytest.raises(ValueError, match="unknown ci method"):
+        streaming_ci(acc, PoissonBootstrap(10), method="bac")
+
+
+def test_streaming_throughput_uses_example_count(tmp_path):
+    with EvalSession() as session:
+        res = session.run_task(
+            iter_qa_examples(200, seed=14), _task(max_memory_rows=50)
+        )
+    assert res.responses == []
+    assert 0 < res.throughput_per_min < float("inf")
+
+
+def test_resume_disabled_reruns_everything(tmp_path):
+    task = _task(
+        max_memory_rows=100, spill_dir=str(tmp_path / "spill"), resume=False
+    )
+    with EvalSession() as session:
+        session.run_task(iter_qa_examples(200, seed=11), task)
+    with EvalSession() as session:
+        res = session.run_task(iter_qa_examples(200, seed=11), task)
+        assert session.accounting.engine_calls == 200
+    assert res.logs["streaming"]["n_resumed_chunks"] == 0
+    # flipping execution-strategy knobs must not orphan committed chunks:
+    # the resume key normalizes resume/spill_dir away
+    with EvalSession() as session:
+        res = session.run_task(
+            iter_qa_examples(200, seed=11), task.with_streaming(resume=True)
+        )
+        assert session.accounting.engine_calls == 0
+    assert res.logs["streaming"]["n_resumed_chunks"] == 2
+
+
+# -- suite integration ---------------------------------------------------------
+
+
+def test_streaming_task_in_suite_with_callable_source(tmp_path):
+    m_b = EngineModelConfig(provider="anthropic", model_name="claude-3-haiku")
+    suite = (
+        EvalSuite("stream-suite")
+        .add_task(_task(max_memory_rows=64), lambda: iter_qa_examples(150, seed=12))
+        .sweep_models([M, m_b])
+    )
+    with EvalSession() as session:
+        with pytest.warns(UserWarning, match="streaming tasks opt out"):
+            res = session.run_suite(suite)
+    assert len(res.results) == 2
+    for label in res.models:
+        r = res.result(label, "stream")
+        assert r.logs["streaming"]["n_examples"] == 150
+        assert set(r.metrics) == {"exact_match", "token_f1"}
+    # no per-example scores -> no pairwise comparisons, but the suite runs
+    assert res.comparisons == {"stream": {}}
+
+
+def test_iter_chunks_shapes():
+    chunks = list(iter_chunks(iter_qa_examples(25, seed=0), 10))
+    assert [len(c) for c in chunks] == [10, 10, 5]
+    assert sum(chunks, []) == qa_examples(25, seed=0)
+    with pytest.raises(ValueError):
+        list(iter_chunks([], 0))
