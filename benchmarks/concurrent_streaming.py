@@ -1,0 +1,164 @@
+"""Concurrent streaming executor benchmark (ISSUE 3 tentpole).
+
+Serial streaming processes chunks one at a time, so wall-clock throughput
+is bounded by a single chunk's critical path even though chunk merges are
+order-independent.  This suite measures serial vs N-way-concurrent
+streaming on the simulated API engine in *wall-clock* mode (every call
+sleeps its modeled latency, like a real provider), and verifies the two
+acceptance properties:
+
+* **>= 2x throughput** at 4 in-flight chunks over serial streaming,
+  with **byte-identical** metric/CI output (the executor merges chunk
+  states in chunk-index order, so float accumulation matches serially);
+* **bounded memory**: peak Python heap at window W stays <= W x the
+  serial run's peak (the window frees a slot only when a chunk is merged).
+
+Emits ``BENCH_concurrency.json``.
+
+  PYTHONPATH=src python -m benchmarks.concurrent_streaming [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+import tracemalloc
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+)
+from repro.data import iter_qa_examples
+
+MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+
+#: wall-clock latency model: small but real sleeps, so chunk-level
+#: concurrency shows up as wall-clock speedup exactly as it would against
+#: a provider API (sleeping threads release the GIL)
+ENGINE_KW = {"wall_clock": True, "base_latency_ms": 3.0, "per_token_ms": 0.0}
+
+
+def _task(task_id: str, *, chunk: int, window: int, n_boot: int) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=MODEL,
+        inference=InferenceConfig(batch_size=32, n_workers=4, cache_dir=""),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=n_boot, ci_method="percentile"
+        ),
+    ).with_streaming(max_memory_rows=chunk, max_inflight_chunks=window)
+
+
+def _measured_run(n: int, task: EvalTask) -> dict:
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    with EvalSession(engine_kwargs=ENGINE_KW) as session:
+        res = session.run_task(iter_qa_examples(n, seed=0), task)
+    wall = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    log = res.logs["streaming"]
+    return {
+        "n": n,
+        "window": log.get("max_inflight_chunks", 1),
+        "wall_s": wall,
+        "throughput_per_s": n / wall if wall > 0 else float("inf"),
+        "py_heap_peak_mb": peak / 1e6,
+        "max_resident_rows": log["max_resident_rows"],
+        "metrics": {
+            m: {"value": mv.value, "ci": list(mv.ci), "n": mv.n}
+            for m, mv in res.metrics.items()
+        },
+    }
+
+
+def run(*, smoke: bool = False, full: bool = False) -> list[str]:
+    if smoke:
+        n, chunk, n_boot, windows = 1_200, 150, 300, [2, 4]
+    elif full:
+        n, chunk, n_boot, windows = 8_000, 500, 1_000, [2, 4, 8]
+    else:
+        n, chunk, n_boot, windows = 3_200, 200, 500, [2, 4, 8]
+
+    lines = []
+    serial = _measured_run(
+        n, _task("cs-serial", chunk=chunk, window=1, n_boot=n_boot)
+    )
+    lines.append(
+        f"concurrent_streaming_serial,{serial['wall_s'] * 1e6 / n:.1f},"
+        f"throughput={serial['throughput_per_s']:.0f}/s "
+        f"peak={serial['py_heap_peak_mb']:.1f}MB"
+    )
+
+    runs = []
+    identical = True
+    for w in windows:
+        r = _measured_run(
+            n, _task("cs-serial", chunk=chunk, window=w, n_boot=n_boot)
+        )
+        r["speedup_vs_serial"] = serial["wall_s"] / r["wall_s"]
+        # acceptance: byte-identical metric values AND CI bounds
+        r["metrics_identical"] = r["metrics"] == serial["metrics"]
+        r["peak_within_window_bound"] = (
+            r["py_heap_peak_mb"] <= w * serial["py_heap_peak_mb"]
+        )
+        identical = identical and r["metrics_identical"]
+        runs.append(r)
+        lines.append(
+            f"concurrent_streaming_w{w},{r['wall_s'] * 1e6 / n:.1f},"
+            f"throughput={r['throughput_per_s']:.0f}/s "
+            f"speedup={r['speedup_vs_serial']:.2f}x "
+            f"peak={r['py_heap_peak_mb']:.1f}MB "
+            f"identical={r['metrics_identical']}"
+        )
+
+    at4 = next((r for r in runs if r["window"] == 4), runs[-1])
+    ok = (
+        identical
+        and at4["speedup_vs_serial"] >= 2.0
+        and all(r["peak_within_window_bound"] for r in runs)
+    )
+    payload = {
+        "mode": "smoke" if smoke else ("full" if full else "default"),
+        "n_examples": n,
+        "chunk_size": chunk,
+        "bootstrap_iterations": n_boot,
+        "engine": {"model": MODEL.model_name, **ENGINE_KW},
+        "serial": serial,
+        "concurrent": runs,
+        "speedup_at_4_inflight": at4["speedup_vs_serial"],
+        "byte_identical_metrics": identical,
+        "ok": ok,
+    }
+    with open("BENCH_concurrency.json", "w") as f:
+        json.dump(payload, f, indent=1)
+
+    lines.append(
+        f"concurrent_streaming_accept,0,"
+        f"speedup@4={at4['speedup_vs_serial']:.2f}x "
+        f"identical={identical} ok={ok}"
+    )
+    if not ok:
+        raise RuntimeError(f"concurrency acceptance checks failed: {payload}")
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    for line in run(smoke=args.smoke, full=args.full):
+        print(line)
+    print("wrote BENCH_concurrency.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ def main() -> None:
 
     from benchmarks import (
         caching,
+        concurrent_streaming,
         cost,
         coverage,
         kernels_bench,
@@ -58,6 +59,9 @@ def main() -> None:
         "kernels": lambda: kernels_bench.run(smoke=smoke),
         "suite_overhead": lambda: suite_overhead.run(n_tasks=2 if smoke else 3),
         "streaming_scale": lambda: streaming_scale.run(
+            smoke=smoke, full=args.full
+        ),
+        "concurrent_streaming": lambda: concurrent_streaming.run(
             smoke=smoke, full=args.full
         ),
     }

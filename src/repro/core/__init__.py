@@ -49,13 +49,18 @@ from repro.core.stages import (
     default_stages,
     rescore_stages,
 )
-from repro.core.streaming import ManifestMismatch, StreamingPipeline
+from repro.core.streaming import (
+    ConcurrentStreamingExecutor,
+    ManifestMismatch,
+    StreamingPipeline,
+)
 from repro.core.suite import EvalSuite, SuiteJob, SuiteResult
 from repro.core.tracking import RunTracker
 
 __all__ = [
     "AdaptiveLimiter", "AggregateStage", "CacheEntry", "CacheMiss",
-    "CachePolicy", "Comparison", "CostBudgetExceeded", "CostBudgetMiddleware",
+    "CachePolicy", "Comparison", "ConcurrentStreamingExecutor",
+    "CostBudgetExceeded", "CostBudgetMiddleware",
     "DataConfig", "EngineModelConfig", "EngineRegistry", "EvalArtifact",
     "EvalResult", "EvalRunner", "EvalSession", "EvalSuite", "EvalTask",
     "InferStage", "InferenceConfig", "InferenceEngine", "InferenceRequest",

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -40,6 +41,13 @@ class ResponseCache:
 
     A warm in-memory key set makes the hot path O(1); it is rebuilt lazily
     from the log when the underlying table version moves (other writers).
+
+    One handle is safely shared by concurrent chunk workers: the key set,
+    version watermark and hit/miss/write counters are guarded by a single
+    reentrant lock, so a ``_refresh`` racing a ``put`` can never publish a
+    key set older than the version it is stamped with, and the counters
+    never lose increments.  (DeltaLite appends themselves are already safe
+    via optimistic concurrency — the lock covers the in-memory mirror.)
     """
 
     def __init__(self, path: str, policy: CachePolicy = CachePolicy.ENABLED):
@@ -47,6 +55,7 @@ class ResponseCache:
         self.table = DeltaLite(path, key_column="prompt_hash")
         self._known_version = -2
         self._keys: set[str] = set()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.writes = 0
@@ -71,46 +80,59 @@ class ResponseCache:
     def lookup(self, key: str) -> CacheEntry | None:
         if self.policy in (CachePolicy.DISABLED, CachePolicy.WRITE_ONLY):
             return None
-        self._refresh()
-        if key not in self._keys:
-            if self.policy == CachePolicy.REPLAY:
-                raise CacheMiss(
-                    f"replay mode: {key[:12]}… not cached "
-                    f"({len(self._keys)} entries present)"
-                )
-            self.misses += 1
-            return None
+        with self._lock:
+            self._refresh()
+            if key not in self._keys:
+                if self.policy == CachePolicy.REPLAY:
+                    raise CacheMiss(
+                        f"replay mode: {key[:12]}… not cached "
+                        f"({len(self._keys)} entries present)"
+                    )
+                self.misses += 1
+                return None
+        # segment read happens outside the lock: concurrent lookups must
+        # not serialize behind each other's (or a writer's) disk I/O
         row = self.table.lookup(key)
         if row is None:  # pragma: no cover — index said yes, table says no
-            self.misses += 1
+            with self._lock:
+                self.misses += 1
             return None
         entry = CacheEntry.from_row(row)
         if entry.ttl_days is not None and entry.created_at is not None:
             age_days = (time.time() - entry.created_at) / 86_400.0
             if age_days > entry.ttl_days:
-                self.misses += 1
+                with self._lock:
+                    self.misses += 1
                 return None
-        self.hits += 1
+        with self._lock:
+            self.hits += 1
         return entry
 
-    def put(self, entries: list[CacheEntry]) -> None:
+    def put(self, entries: list[CacheEntry]) -> int:
+        """Cache entries per policy; returns how many were recorded."""
         if self.policy in (CachePolicy.DISABLED, CachePolicy.READ_ONLY,
                            CachePolicy.REPLAY):
-            return
+            return 0
         if not entries:
-            return
+            return 0
+        # the append itself is already safe under DeltaLite's optimistic
+        # concurrency; only the in-memory mirror goes under the lock, so
+        # readers are never blocked behind a writer's segment+commit I/O
         self.table.append([e.to_row() for e in entries])
-        self._keys.update(e.prompt_hash for e in entries)
-        self._known_version = self.table.latest_version()
-        self.writes += len(entries)
+        with self._lock:
+            self._keys.update(e.prompt_hash for e in entries)
+            self._known_version = self.table.latest_version()
+            self.writes += len(entries)
+        return len(entries)
 
     def stats(self) -> dict[str, Any]:
-        total = self.hits + self.misses
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "writes": self.writes,
-            "hit_rate": self.hits / total if total else 0.0,
-            "entries": len(self._keys),
-            "version": self.table.latest_version(),
-        }
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "writes": self.writes,
+                "hit_rate": self.hits / total if total else 0.0,
+                "entries": len(self._keys),
+                "version": self.table.latest_version(),
+            }

@@ -79,12 +79,21 @@ class StreamingConfig:
     per-example state is O(chunk), not O(dataset).  With a ``spill_dir``,
     each completed chunk commits its partial state to a DeltaLite manifest
     so an interrupted run resumes by skipping completed chunks.
+
+    ``max_inflight_chunks > 1`` runs that many whole chunks concurrently
+    on a chunk-level worker pool (the paper's executor layer lifted from
+    shards to chunks): peak resident examples become
+    ``max_inflight_chunks x max_memory_rows``, chunk states are merged
+    deterministically in chunk order, and results stay bit-identical to
+    the serial pipeline.  Like the other execution-strategy knobs it is
+    excluded from the resume key — a restart may retune it freely.
     """
 
     enabled: bool = False
     max_memory_rows: int = 1024       # chunk size == peak resident examples
     spill_dir: str = ""               # "" = no spill, run is not resumable
     resume: bool = True               # skip chunks already in the manifest
+    max_inflight_chunks: int = 1      # >1 = concurrent chunk execution
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,8 +119,13 @@ class EvalTask:
 
     def with_streaming(self, **kw: Any) -> "EvalTask":
         """Enable (or reconfigure) bounded-memory streaming execution.
-        Unspecified fields keep their current values."""
+        Unspecified fields keep their current values.  ``concurrency`` is
+        accepted as an alias for ``max_inflight_chunks``:
+        ``task.with_streaming(concurrency=4)`` runs four chunks in flight.
+        """
         kw.setdefault("enabled", True)
+        if "concurrency" in kw:
+            kw["max_inflight_chunks"] = kw.pop("concurrency")
         return dataclasses.replace(
             self, streaming=dataclasses.replace(self.streaming, **kw)
         )

@@ -22,6 +22,7 @@ import hashlib
 import json
 import math
 import re
+import threading
 import time
 from typing import Any
 
@@ -127,6 +128,9 @@ class SimulatedAPIEngine(InferenceEngine):
         self.calls = 0
         self.total_cost = 0.0
         self.initialized = False
+        # counter updates must not lose increments when shards from
+        # several concurrent chunks share one simulated engine
+        self._counter_lock = threading.Lock()
 
     def initialize(self) -> None:
         self.initialized = True
@@ -176,8 +180,10 @@ class SimulatedAPIEngine(InferenceEngine):
         return " ".join(kept + [f"ans_{h[:8]}"])
 
     def infer(self, request: InferenceRequest) -> InferenceResponse:
-        self.calls += 1
-        if self.fail_every and self.calls % self.fail_every == 0:
+        with self._counter_lock:
+            self.calls += 1
+            call_no = self.calls
+        if self.fail_every and call_no % self.fail_every == 0:
             return InferenceResponse(
                 text="", input_tokens=0, output_tokens=0,
                 latency_ms=self.base_latency_ms, error="rate_limited_429",
@@ -190,7 +196,8 @@ class SimulatedAPIEngine(InferenceEngine):
         if self.wall_clock:
             time.sleep(latency / 1000.0)
         cost = api_cost(self.model.provider, self.model.model_name, in_tok, out_tok)
-        self.total_cost += cost
+        with self._counter_lock:
+            self.total_cost += cost
         return InferenceResponse(
             text=text, input_tokens=in_tok, output_tokens=out_tok,
             latency_ms=latency, cost_usd=cost,
@@ -217,7 +224,7 @@ class LocalJaxEngine(InferenceEngine):
         self._next_id = 0
         # worker threads share one scheduler; it is the batching layer, so
         # concurrent infer_batch calls serialize (slots multiplex inside)
-        self._lock = __import__("threading").Lock()
+        self._lock = threading.Lock()
 
     def initialize(self) -> None:
         if self.initialized:
@@ -324,15 +331,19 @@ class EngineRegistry:
     def __init__(self) -> None:
         self._engines: dict[tuple[EngineModelConfig, str], InferenceEngine] = {}
         self.initializations = 0
+        # concurrent chunk workers may request the same engine at once;
+        # initialization must happen exactly once per config
+        self._lock = threading.Lock()
 
     def get(self, model: EngineModelConfig, **kw: Any) -> InferenceEngine:
         key = (model, json.dumps(kw, sort_keys=True, default=str))
-        engine = self._engines.get(key)
-        if engine is None:
-            engine = create_engine(model, **kw)
-            engine.initialize()
-            self.initializations += 1
-            self._engines[key] = engine
+        with self._lock:
+            engine = self._engines.get(key)
+            if engine is None:
+                engine = create_engine(model, **kw)
+                engine.initialize()
+                self.initializations += 1
+                self._engines[key] = engine
         return engine
 
     def shutdown(self) -> None:

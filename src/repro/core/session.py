@@ -31,6 +31,7 @@ vectors into the pairwise significance machinery of
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Iterable, Sequence
 
@@ -51,7 +52,15 @@ from repro.ft.workers import WorkerPool
 
 @dataclasses.dataclass
 class SessionAccounting:
-    """Cost/token totals across every task the session has run."""
+    """Cost/token totals across every task the session has run.
+
+    Updated under ``lock``: concurrent chunk workers (streaming with
+    ``max_inflight_chunks > 1``) fold their per-chunk traffic in from
+    multiple threads.  Speculative chunk attempts that lose the manifest
+    race still count here — the engine calls really happened and really
+    cost money — while result-level ``engine_stats`` only merge the
+    winning attempt per chunk.
+    """
 
     tasks: int = 0
     engine_calls: int = 0
@@ -61,6 +70,9 @@ class SessionAccounting:
     cache_hits: int = 0
     cache_misses: int = 0
     wall_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.lock = threading.Lock()
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -89,6 +101,11 @@ class EvalSession:
         self._caches: dict[tuple[str, CachePolicy], ResponseCache] = {}
         self._limiters: dict[tuple, Any] = {}
         self._pools: dict[tuple, WorkerPool] = {}
+        # get-or-create must be atomic: concurrent chunk workers asking for
+        # the same cache/limiter/pool must share ONE instance — a duplicate
+        # ResponseCache handle would fragment the key set and the hit/miss
+        # counters across workers
+        self._res_lock = threading.Lock()
         self._closed = False
 
     # -- shared resources ------------------------------------------------------
@@ -105,10 +122,11 @@ class EvalSession:
         if not inf.cache_dir or inf.cache_policy == CachePolicy.DISABLED:
             return None
         key = (inf.cache_dir, inf.cache_policy)
-        cache = self._caches.get(key)
-        if cache is None:
-            cache = ResponseCache(inf.cache_dir, inf.cache_policy)
-            self._caches[key] = cache
+        with self._res_lock:
+            cache = self._caches.get(key)
+            if cache is None:
+                cache = ResponseCache(inf.cache_dir, inf.cache_policy)
+                self._caches[key] = cache
         return cache
 
     def limiter_for(self, inf: InferenceConfig):
@@ -116,35 +134,37 @@ class EvalSession:
             inf.adaptive_rate, inf.rate_limit_rpm, inf.rate_limit_tpm,
             inf.n_workers,
         )
-        limiter = self._limiters.get(key)
-        if limiter is None:
-            if inf.adaptive_rate:
-                limiter = AdaptiveLimiter(
-                    inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers,
-                    sleep=self.sleep,
-                )
-            else:
-                limiter = [
-                    TokenBucket(
+        with self._res_lock:
+            limiter = self._limiters.get(key)
+            if limiter is None:
+                if inf.adaptive_rate:
+                    limiter = AdaptiveLimiter(
                         inf.rate_limit_rpm, inf.rate_limit_tpm, inf.n_workers,
                         sleep=self.sleep,
                     )
-                    for _ in range(inf.n_workers)
-                ]
-            self._limiters[key] = limiter
+                else:
+                    limiter = [
+                        TokenBucket(
+                            inf.rate_limit_rpm, inf.rate_limit_tpm,
+                            inf.n_workers, sleep=self.sleep,
+                        )
+                        for _ in range(inf.n_workers)
+                    ]
+                self._limiters[key] = limiter
         return limiter
 
     def pool_for(self, inf: InferenceConfig) -> WorkerPool:
         straggler = inf.straggler_factor if inf.speculative_reissue else 0.0
         key = (inf.n_workers, inf.max_retries, straggler)
-        pool = self._pools.get(key)
-        if pool is None:
-            pool = WorkerPool(
-                n_workers=inf.n_workers,
-                max_retries=inf.max_retries,
-                straggler_factor=straggler,
-            )
-            self._pools[key] = pool
+        with self._res_lock:
+            pool = self._pools.get(key)
+            if pool is None:
+                pool = WorkerPool(
+                    n_workers=inf.n_workers,
+                    max_retries=inf.max_retries,
+                    straggler_factor=straggler,
+                )
+                self._pools[key] = pool
         return pool
 
     # -- pipeline execution -----------------------------------------------------
@@ -187,13 +207,23 @@ class EvalSession:
     def _run_streaming(self, source: Iterable[dict], task: EvalTask) -> EvalResult:
         """Bounded-memory chunked execution (``task.streaming.enabled``):
         prepare→infer→score per chunk, mergeable streaming aggregation,
-        optional DeltaLite spill for resume."""
-        from repro.core.streaming import StreamingPipeline
+        optional DeltaLite spill for resume.  With
+        ``max_inflight_chunks > 1`` whole chunks run concurrently on a
+        chunk-level worker pool (bounded window, chunk-level speculation),
+        producing bit-identical results to the serial pipeline."""
+        from repro.core.streaming import (
+            ConcurrentStreamingExecutor,
+            StreamingPipeline,
+        )
 
+        if task.streaming.max_inflight_chunks > 1:
+            pipeline = ConcurrentStreamingExecutor.from_task(task)
+        else:
+            pipeline = StreamingPipeline.from_task(task)
         t_task = time.monotonic()
         for mw in self.middleware:
             mw.on_task_start(task, [], self)
-        result = StreamingPipeline.from_task(task).run(source, task, self)
+        result = pipeline.run(source, task, self)
         self.accounting.tasks += 1
         self.accounting.wall_s += time.monotonic() - t_task
         for mw in self.middleware:

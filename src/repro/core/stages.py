@@ -29,13 +29,14 @@ from typing import Any, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.cache import CacheEntry
-from repro.core.config import EvalTask
+from repro.core.config import CachePolicy, EvalTask
 from repro.core.engines import (
     InferenceRequest,
     InferenceResponse,
     retry_with_backoff,
 )
 from repro.core.ratelimit import AdaptiveLimiter
+from repro.ft.workers import PoolStats
 from repro.data.templates import render
 from repro.metrics.registry import (
     BINARY_METRICS,
@@ -153,14 +154,41 @@ class PrepareStage:
 # -- stage 2: distributed inference ---------------------------------------------
 
 
+@dataclasses.dataclass
+class _ShardStats:
+    """One shard attempt's own traffic, counted at the call site.
+
+    Concurrent chunk workers share one engine, cache and pool, so deltas
+    over their *global* counters would attribute another chunk's traffic
+    to this stage.  Counting locally per shard and summing keeps per-task
+    (and per-chunk) stats exact regardless of what else runs in parallel.
+
+    Two sinks with different semantics: the *result* stats
+    (``art.engine_stats`` / ``art.cache_stats``) sum only the winning
+    attempt per shard — deterministic, parity with a serial run — while
+    ``session.accounting`` receives every attempt's calls and cost as the
+    shard finishes (see :meth:`InferStage.run`): a speculative loser's
+    inference really happened and really cost money, and the cost-budget
+    guard must see it.
+    """
+
+    calls: int = 0
+    cost: float = 0.0
+    hits: int = 0
+    misses: int = 0
+    writes: int = 0
+
+
 class InferStage:
     """Sharded inference over the session worker pool: per-worker rate
     limiting, content-addressable caching, retries and speculative re-issue.
 
-    Engine / cache / limiter / pool are session-owned and reused across
-    tasks; per-task ``engine_stats`` and ``cache_stats`` are deltas over
-    the session-cumulative counters, so a fresh session reproduces the
-    legacy per-call numbers exactly.
+    Engine / cache / limiter / pool are session-owned and shared across
+    tasks — and, in concurrent streaming, across chunk workers running
+    this stage in parallel.  Per-task ``engine_stats`` / ``cache_stats``
+    are therefore counted locally per shard (not as deltas over the shared
+    counters), which reproduces the legacy per-call numbers exactly in a
+    fresh session and stays exact under concurrency.
     """
 
     name = "infer"
@@ -174,10 +202,9 @@ class InferStage:
         limiter = session.limiter_for(inf)
         pool = session.pool_for(inf)
 
-        calls0 = getattr(engine, "calls", None)
-        cost0 = getattr(engine, "total_cost", 0.0)
-        cache0 = (cache.hits, cache.misses, cache.writes) if cache else None
-        pool0 = dataclasses.asdict(pool.stats)
+        count_lookups = cache is not None and cache.policy not in (
+            CachePolicy.DISABLED, CachePolicy.WRITE_ONLY,
+        )
 
         shards = [
             list(range(i, min(i + inf.batch_size, len(prompts))))
@@ -188,6 +215,20 @@ class InferStage:
         sleep = session.sleep
 
         def run_shard(shard_idx: int, idxs: list[int], worker: int):
+            st = _ShardStats()
+            try:
+                return _do_shard(idxs, worker, st), st
+            finally:
+                # every attempt's spend reaches the session accounting —
+                # including speculative losers and failed attempts whose
+                # results are discarded by the pool; result-level stats
+                # below sum only the winning attempts
+                acct = session.accounting
+                with acct.lock:
+                    acct.engine_calls += st.calls
+                    acct.cost_usd += st.cost
+
+        def _do_shard(idxs: list[int], worker: int, st: "_ShardStats"):
             out: list[tuple[int, InferenceResponse, bool]] = []
             to_infer: list[int] = []
             for i in idxs:
@@ -198,6 +239,7 @@ class InferStage:
                     )
                     hit = cache.lookup(key)
                     if hit is not None:
+                        st.hits += 1
                         out.append(
                             (
                                 i,
@@ -211,6 +253,8 @@ class InferStage:
                             )
                         )
                         continue
+                    if count_lookups:
+                        st.misses += 1
                 to_infer.append(i)
             w = worker % inf.n_workers
             new_entries: list[CacheEntry] = []
@@ -223,12 +267,18 @@ class InferStage:
                 req = InferenceRequest(
                     prompts[i], task.model.max_tokens, task.model.temperature
                 )
+
+                def _infer(req=req):
+                    st.calls += 1
+                    return engine.infer(req)
+
                 resp = retry_with_backoff(
-                    lambda req=req: engine.infer(req),
+                    _infer,
                     max_retries=inf.max_retries,
                     base_delay=inf.retry_delay,
                     sleep=sleep,
                 )
+                st.cost += resp.cost_usd
                 out.append((i, resp, False))
                 if cache is not None and resp.error is None:
                     new_entries.append(
@@ -249,14 +299,22 @@ class InferStage:
                         )
                     )
             if new_entries:
-                cache.put(new_entries)
+                st.writes += cache.put(new_entries)
             return out
 
         n_cached = 0
         in_tok = out_tok = 0
-        shard_results = pool.map_shards(run_shard, shards)
+        totals = _ShardStats()
+        pool_stats = PoolStats()
+        shard_results = pool.map_shards(run_shard, shards, stats_out=pool_stats)
         for sr in shard_results:
-            for i, resp, cached in sr.value:
+            rows, st = sr.value
+            for f in dataclasses.fields(_ShardStats):
+                setattr(
+                    totals, f.name,
+                    getattr(totals, f.name) + getattr(st, f.name),
+                )
+            for i, resp, cached in rows:
                 responses[i] = resp
                 if resp.error is not None:
                     failures.append({"index": i, "error": resp.error})
@@ -271,44 +329,30 @@ class InferStage:
             r.text if r is not None and r.error is None else "" for r in responses
         ]
         art.failures = failures
-        art.cache_stats = (
-            _cache_stats_delta(cache, cache0) if cache is not None else {}
-        )
-        calls = (
-            getattr(engine, "calls", 0) - calls0 if calls0 is not None else None
-        )
+        if cache is not None:
+            stats = cache.stats()  # entries/version stay session-absolute
+            h, m = totals.hits, totals.misses
+            stats.update(
+                hits=h, misses=m, writes=totals.writes,
+                hit_rate=h / (h + m) if h + m else 0.0,
+            )
+            art.cache_stats = stats
+        else:
+            art.cache_stats = {}
         art.engine_stats = {
-            "calls": calls,
-            "total_cost": getattr(engine, "total_cost", 0.0) - cost0,
-            "pool": _pool_stats_delta(pool.stats, pool0),
+            "calls": totals.calls,
+            "total_cost": totals.cost,
+            "pool": dataclasses.asdict(pool_stats),
         }
 
         acct = session.accounting
-        acct.engine_calls += calls or 0
-        acct.cost_usd += art.engine_stats["total_cost"]
-        acct.input_tokens += in_tok
-        acct.output_tokens += out_tok
-        if cache is not None:
-            acct.cache_hits += n_cached
-            acct.cache_misses += len(prompts) - n_cached
+        with acct.lock:
+            acct.input_tokens += in_tok
+            acct.output_tokens += out_tok
+            if cache is not None:
+                acct.cache_hits += n_cached
+                acct.cache_misses += len(prompts) - n_cached
         return art
-
-
-def _cache_stats_delta(cache, before: tuple[int, int, int]) -> dict:
-    h = cache.hits - before[0]
-    m = cache.misses - before[1]
-    stats = cache.stats()  # entries/version stay session-absolute
-    stats.update(
-        hits=h,
-        misses=m,
-        writes=cache.writes - before[2],
-        hit_rate=h / (h + m) if h + m else 0.0,
-    )
-    return stats
-
-
-def _pool_stats_delta(after, before: dict) -> dict:
-    return {k: v - before[k] for k, v in dataclasses.asdict(after).items()}
 
 
 class StaticResponsesStage:

@@ -21,16 +21,33 @@ The aggregate CIs come from :func:`repro.stats.streaming.streaming_ci`:
 exact analytical intervals from the moments, or the Poisson-bootstrap
 percentile interval (Monte-Carlo-equivalent to the in-memory multinomial
 bootstrap) for the bootstrap methods.
+
+:class:`ConcurrentStreamingExecutor` is the parallel counterpart: it
+schedules whole chunks onto a chunk-level :class:`~repro.ft.workers.
+WorkerPool` window (``StreamingConfig.max_inflight_chunks``), so peak
+memory is window x chunk — still independent of dataset size.  The Philox
+keying of the bootstrap by (seed, chunk offset) makes chunk states
+mergeable in *any* order; the executor nevertheless folds them
+deterministically in chunk-index order through a bounded reorder buffer,
+so the final metrics and CIs are **bit-identical** to the serial pipeline
+(float addition is not associative — completion-order folding would be
+statistically equivalent but not byte-equal).  Chunk-level straggler
+mitigation reuses the pool's speculative re-issue; with a spill manifest,
+racing attempts resolve first-committer-wins through DeltaLite's
+conditional append, and the losing attempt's partial state is discarded
+(its engine spend still lands in the session accounting — the calls were
+real).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import time
-from typing import Any, Iterable
+from typing import Any, Iterable, Iterator
 
-from repro.core.config import EvalTask
+from repro.core.config import EvalTask, StatisticsConfig
 from repro.core.stages import (
     EvalArtifact,
     EvalResult,
@@ -40,6 +57,7 @@ from repro.core.stages import (
     ScoreStage,
 )
 from repro.data.datasets import iter_chunks
+from repro.ft.workers import WorkerPool
 from repro.metrics.registry import BINARY_METRICS, resolve_metrics
 from repro.stats.streaming import (
     MetricAccumulator,
@@ -199,24 +217,7 @@ class StreamingPipeline:
             )
 
         t0 = time.monotonic()
-        metrics: dict[str, MetricValue] = {}
-        for m in names:
-            acc = accs[m]
-            if acc.n == 0:
-                metrics[m] = MetricValue(
-                    m, float("nan"), (float("nan"),) * 2, "none", 0, acc.n_nan
-                )
-                continue
-            iv = streaming_ci(
-                acc,
-                boots.get(m),
-                method=stats_cfg.ci_method,
-                confidence=stats_cfg.confidence_level,
-                binary=m in BINARY_METRICS,
-            )
-            metrics[m] = MetricValue(
-                m, iv.value, (iv.lo, iv.hi), iv.method, iv.n, acc.n_nan
-            )
+        metrics = _finalize_metrics(names, accs, boots, stats_cfg)
         timing["stats_s"] = time.monotonic() - t0
 
         if cache_stats:
@@ -262,6 +263,336 @@ class StreamingPipeline:
         _merge_cache_stats(cache_stats, row.get("cache_stats", {}))
         for k, v in row.get("timing", {}).items():
             timing[k] = timing.get(k, 0.0) + v
+
+
+@dataclasses.dataclass
+class ChunkOutcome:
+    """One chunk's contribution, produced by a concurrent chunk worker.
+
+    Exactly one outcome per chunk reaches the merge loop: speculative
+    duplicates are discarded at the pool level (first finisher) and at the
+    manifest level (first committer); ``state`` always carries the
+    canonical chunk state — the one committed to the manifest when spill
+    is configured.
+    """
+
+    index: int
+    start: int
+    n_rows: int
+    state: dict
+    resumed: bool = False        # merged from a prior run's manifest row
+    deduped: bool = False        # this attempt lost the commit race
+    #: live accumulator objects (None when merging a committed row)
+    accs: dict[str, MetricAccumulator] | None = None
+    boots: dict[str, PoissonBootstrap] | None = None
+
+
+class ConcurrentStreamingExecutor:
+    """Parallel streaming evaluation: whole chunks in flight on a bounded
+    window, bit-identical to :class:`StreamingPipeline`.
+
+    * **Scheduling** — chunks are pulled lazily from the source and run on
+      :meth:`WorkerPool.imap_windowed`: at most ``window`` chunks are
+      materialized and executing at once, so peak memory is
+      window x chunk (PR 2's O(chunk) guarantee, scaled by the window).
+      Chunk-level retries and speculative re-issue of straggler chunks
+      come from the same pool machinery the intra-chunk shards use.
+    * **Merging** — chunk states are folded in chunk-index order (the
+      pool's ordered mode reorders completions; a slot frees only once a
+      chunk is yielded, so in-flight + buffered chunks never exceed the
+      window), which makes metric totals and Poisson-bootstrap sums
+      accumulate in exactly the serial order: the final metrics/CIs are
+      byte-equal to a serial run.
+    * **Spill** — each chunk worker commits its own manifest row through
+      DeltaLite's optimistic-concurrency loop; racing speculative attempts
+      resolve first-committer-wins (:meth:`ChunkManifest.try_record`), and
+      a losing attempt adopts the committed row so the merged result never
+      double-counts engine calls or cache traffic.
+    * **Middleware** — ``on_chunk_end`` fires from the merge loop in chunk
+      order (never for resumed chunks), matching serial semantics for
+      progress, cost-budget aborts and crash injection.
+    """
+
+    def __init__(
+        self,
+        *,
+        chunk_size: int = 1024,
+        window: int = 2,
+        spill_dir: str = "",
+        resume: bool = True,
+    ):
+        self.chunk_size = chunk_size
+        self.window = max(1, window)
+        self.spill_dir = spill_dir
+        self.resume = resume
+
+    @classmethod
+    def from_task(cls, task: EvalTask) -> "ConcurrentStreamingExecutor":
+        s = task.streaming
+        return cls(
+            chunk_size=s.max_memory_rows,
+            window=s.max_inflight_chunks,
+            spill_dir=s.spill_dir,
+            resume=s.resume,
+        )
+
+    def run(
+        self, source: Iterable[dict], task: EvalTask, session: Any
+    ) -> EvalResult:
+        stages = [PrepareStage(), InferStage(), ScoreStage()]
+        stats_cfg = task.statistics
+        names = [name for name, _ in resolve_metrics(task.metrics)]
+        accs = {m: MetricAccumulator() for m in names}
+        use_boot = stats_cfg.ci_method in ("percentile", "bca")
+        boots = {
+            m: PoissonBootstrap(stats_cfg.bootstrap_iterations, stats_cfg.seed)
+            for m in names
+        } if use_boot else {}
+        manifest = (
+            ChunkManifest(self.spill_dir, _run_key(task))
+            if self.spill_dir
+            else None
+        )
+        completed = (
+            manifest.completed() if manifest is not None and self.resume else {}
+        )
+
+        inf = task.inference
+        chunk_pool = WorkerPool(
+            n_workers=self.window,
+            max_retries=inf.max_retries,
+            straggler_factor=(
+                inf.straggler_factor if inf.speculative_reissue else 0.0
+            ),
+        )
+
+        failures: list[dict] = []
+        timing: dict[str, float] = {}
+        engine_stats = {"calls": 0, "total_cost": 0.0, "pool": {}}
+        cache_stats: dict = {}
+        n_examples = n_chunks = n_resumed = 0
+        resident = {"rows": 0, "max": 0}
+
+        def items() -> Iterator[tuple[int, int, list[dict]]]:
+            # runs on the driver thread inside the pool's scheduling loop:
+            # a chunk is materialized only when a window slot is free
+            start = 0
+            for ci, chunk in enumerate(iter_chunks(source, self.chunk_size)):
+                resident["rows"] += len(chunk)
+                resident["max"] = max(resident["max"], resident["rows"])
+                yield (ci, start, chunk)
+                start += len(chunk)
+
+        def process(index: int, item: tuple, worker: int) -> ChunkOutcome:
+            ci, start, chunk = item
+            return self._process_chunk(
+                ci, start, chunk, task, session, stages, names, use_boot,
+                stats_cfg, manifest, completed,
+            )
+
+        # ordered=True does double duty: chunk states fold in index order
+        # (deterministic float accumulation == serial order == bit-identical
+        # output) and a window slot frees only at yield, so in-flight plus
+        # completed-but-unmerged chunks never exceed the window
+        stream = chunk_pool.imap_windowed(
+            process, items(), window=self.window, ordered=True
+        )
+        try:
+            for res in stream:
+                out: ChunkOutcome = res.value
+                resident["rows"] -= out.n_rows
+                self._merge_outcome(
+                    out, accs, boots, failures, timing, engine_stats,
+                    cache_stats,
+                )
+                completed.pop(out.index, None)
+                n_chunks += 1
+                n_examples += out.n_rows
+                if out.resumed:
+                    n_resumed += 1
+                else:
+                    for mw in session.middleware:
+                        mw.on_chunk_end(out.index, out.state, session)
+        finally:
+            # a middleware abort (cost budget, crash injection) or a merge
+            # error must join the chunk workers NOW, not at GC: in-flight
+            # chunks drain — completing their manifest commits, which the
+            # next resume will reuse — before the exception propagates,
+            # so no worker keeps spending against the session afterwards
+            stream.close()
+
+        if completed:
+            raise ManifestMismatch(
+                f"manifest has {len(completed)} committed chunk(s) "
+                f"({sorted(completed)}) beyond the end of the data source "
+                f"({n_chunks} chunks observed) — was the data source changed?"
+            )
+
+        t0 = time.monotonic()
+        metrics = _finalize_metrics(names, accs, boots, stats_cfg)
+        timing["stats_s"] = time.monotonic() - t0
+
+        if cache_stats:
+            h, mi = cache_stats.get("hits", 0), cache_stats.get("misses", 0)
+            cache_stats["hit_rate"] = h / (h + mi) if h + mi else 0.0
+        return EvalResult(
+            task_id=task.task_id,
+            metrics=metrics,
+            scores={},
+            responses=[],
+            failures=failures[:MAX_FAILURE_SAMPLE],
+            cache_stats=cache_stats,
+            engine_stats=engine_stats,
+            timing=timing,
+            logs={
+                "streaming": {
+                    "n_examples": n_examples,
+                    "n_chunks": n_chunks,
+                    "n_resumed_chunks": n_resumed,
+                    "chunk_size": self.chunk_size,
+                    "max_inflight_chunks": self.window,
+                    "max_resident_rows": resident["max"],
+                    "spill_dir": self.spill_dir,
+                    "chunk_pool": dataclasses.asdict(chunk_pool.stats),
+                }
+            },
+        )
+
+    def _process_chunk(
+        self, ci: int, start: int, chunk: list[dict], task: EvalTask,
+        session: Any, stages: list, names: list[str], use_boot: bool,
+        stats_cfg: StatisticsConfig, manifest: ChunkManifest | None,
+        completed: dict[int, dict],
+    ) -> ChunkOutcome:
+        row = completed.get(ci) if manifest is not None else None
+        if row is not None:
+            digest = _chunk_digest(chunk)
+            if (
+                row["n_rows"] != len(chunk)
+                or row["start"] != start
+                or row.get("digest") != digest
+            ):
+                raise ManifestMismatch(
+                    f"chunk {ci}: manifest has start={row['start']} "
+                    f"n_rows={row['n_rows']} digest={row.get('digest')}, "
+                    f"observed start={start} n_rows={len(chunk)} "
+                    f"digest={digest} — was the data source changed?"
+                )
+            return ChunkOutcome(ci, start, len(chunk), state=row, resumed=True)
+
+        art = EvalArtifact(rows=chunk, task=task)
+        chunk_timing: dict[str, float] = {}
+        for stage in stages:
+            t0 = time.monotonic()
+            art = stage.run(art, session)
+            chunk_timing[f"{stage.name}_s"] = time.monotonic() - t0
+
+        accs: dict[str, MetricAccumulator] = {}
+        boots: dict[str, PoissonBootstrap] = {}
+        chunk_states: dict[str, dict] = {}
+        for m in names:
+            acc = MetricAccumulator()
+            acc.update(art.scores[m])
+            accs[m] = acc
+            if manifest is not None:
+                chunk_states.setdefault("metrics", {})[m] = acc.state()
+            if use_boot:
+                boot = PoissonBootstrap(
+                    stats_cfg.bootstrap_iterations, stats_cfg.seed
+                )
+                boot.update(art.scores[m], start)
+                boots[m] = boot
+                if manifest is not None:
+                    chunk_states.setdefault("boot", {})[m] = boot.state()
+        chunk_failures = [
+            {**f, "index": f["index"] + start} for f in art.failures
+        ]
+        state = {
+            "start": start,
+            "n_rows": len(chunk),
+            "failures": chunk_failures[:MAX_FAILURE_SAMPLE],
+            "n_failures": len(chunk_failures),
+            "engine_stats": art.engine_stats,
+            "cache_stats": art.cache_stats,
+            "timing": chunk_timing,
+        }
+        if manifest is not None:
+            state["digest"] = _chunk_digest(chunk)
+            state.update(chunk_states)
+            if not manifest.try_record(ci, state):
+                # lost the commit race to a speculative twin: adopt the
+                # committed row so this chunk's calls/cache traffic are
+                # counted exactly once in the merged result
+                committed = manifest.get(ci)
+                if committed is None:  # pragma: no cover — commit is durable
+                    raise RuntimeError(
+                        f"chunk {ci}: lost the manifest race but no "
+                        "committed row is visible"
+                    )
+                return ChunkOutcome(
+                    ci, start, len(chunk), state=committed, deduped=True
+                )
+        return ChunkOutcome(
+            ci, start, len(chunk), state=state, accs=accs,
+            boots=boots if use_boot else None,
+        )
+
+    @staticmethod
+    def _merge_outcome(
+        out: ChunkOutcome,
+        accs: dict[str, MetricAccumulator],
+        boots: dict[str, PoissonBootstrap],
+        failures: list[dict],
+        timing: dict[str, float],
+        engine_stats: dict,
+        cache_stats: dict,
+    ) -> None:
+        if out.accs is None:
+            # committed manifest row (resumed chunk or commit-race loser)
+            StreamingPipeline._merge_committed(
+                out.state, accs, boots, failures, timing, engine_stats,
+                cache_stats,
+            )
+            return
+        for m, acc in accs.items():
+            acc.merge(out.accs[m])
+            if m in boots:
+                boots[m].merge(out.boots[m])
+        _merge_failures(failures, out.state["failures"])
+        _merge_engine_stats(engine_stats, out.state["engine_stats"])
+        _merge_cache_stats(cache_stats, out.state["cache_stats"])
+        for k, v in out.state["timing"].items():
+            timing[k] = timing.get(k, 0.0) + v
+
+
+def _finalize_metrics(
+    names: list[str],
+    accs: dict[str, MetricAccumulator],
+    boots: dict[str, PoissonBootstrap],
+    stats_cfg: StatisticsConfig,
+) -> dict[str, MetricValue]:
+    """Aggregate merged accumulator state into final :class:`MetricValue`s
+    (shared by the serial and concurrent streaming paths — same code, same
+    floats, same bytes)."""
+    metrics: dict[str, MetricValue] = {}
+    for m in names:
+        acc = accs[m]
+        if acc.n == 0:
+            metrics[m] = MetricValue(
+                m, float("nan"), (float("nan"),) * 2, "none", 0, acc.n_nan
+            )
+            continue
+        iv = streaming_ci(
+            acc,
+            boots.get(m),
+            method=stats_cfg.ci_method,
+            confidence=stats_cfg.confidence_level,
+            binary=m in BINARY_METRICS,
+        )
+        metrics[m] = MetricValue(
+            m, iv.value, (iv.lo, iv.hi), iv.method, iv.n, acc.n_nan
+        )
+    return metrics
 
 
 def _run_key(task: EvalTask) -> str:

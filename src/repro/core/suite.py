@@ -73,6 +73,16 @@ class EvalSuite:
         self._models.extend(models)
         return self
 
+    def with_streaming(self, **kw) -> "EvalSuite":
+        """Apply :meth:`EvalTask.with_streaming` to every registered task —
+        e.g. ``.with_streaming(concurrency=4, max_memory_rows=2048)`` turns
+        on N-way concurrent chunk execution suite-wide.  Tasks added later
+        are not affected; call this after the last ``add_task``."""
+        self._tasks = [
+            (task.with_streaming(**kw), rows) for task, rows in self._tasks
+        ]
+        return self
+
     # -- expansion ---------------------------------------------------------------
 
     def task_ids(self) -> list[str]:

@@ -14,6 +14,15 @@ evaluation runner splits examples into shards and this pool
 * tracks per-worker heartbeats so a simulated dead worker's shards are
   reassigned.
 
+Two scheduling surfaces share those semantics:
+
+* :meth:`WorkerPool.map_shards` — a fixed shard list, results returned in
+  shard order (the intra-chunk inference path);
+* :meth:`WorkerPool.imap_windowed` — an unbounded item *iterator* with a
+  bounded in-flight window, results yielded in completion order (the
+  chunk-level surface of the concurrent streaming executor: items are
+  whole chunks, so peak materialized work is window x chunk).
+
 Deterministic failure injection hooks make all of this testable on CPU.
 """
 
@@ -23,7 +32,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 
 @dataclasses.dataclass
@@ -43,6 +52,11 @@ class PoolStats:
     speculative_launches: int = 0
     speculative_wins: int = 0
     failures: int = 0
+
+    def merge(self, other: "PoolStats") -> "PoolStats":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 class WorkerPool:
@@ -87,88 +101,250 @@ class WorkerPool:
             duration_s=dt, speculative=speculative,
         )
 
+    def _fold_stats(self, local: PoolStats, stats_out: PoolStats | None) -> None:
+        """Publish one scheduling loop's stats.  Each ``map_shards`` /
+        ``imap_windowed`` call accumulates into a *local* :class:`PoolStats`
+        and folds it into the shared ``self.stats`` under the pool lock, so
+        concurrent calls sharing one pool (the concurrent streaming
+        executor's chunk workers) neither lose increments nor misattribute
+        another call's traffic to their own delta."""
+        with self._lock:
+            self.stats.merge(local)
+        if stats_out is not None:
+            stats_out.merge(local)
+
     def map_shards(
-        self, fn: Callable[[int, Any, int], Any], shards: Sequence[Any]
+        self,
+        fn: Callable[[int, Any, int], Any],
+        shards: Sequence[Any],
+        *,
+        stats_out: PoolStats | None = None,
     ) -> list[ShardResult]:
-        """Run ``fn(shard_index, shard, worker_id)`` over all shards."""
+        """Run ``fn(shard_index, shard, worker_id)`` over all shards.
+
+        ``stats_out`` (optional) receives this call's own retry/speculation
+        counts — exact even when other threads run ``map_shards`` on the
+        same pool concurrently, unlike a before/after snapshot of
+        ``self.stats``.
+        """
         results: dict[int, ShardResult] = {}
         completed_durations: list[float] = []
-        self.stats.shards += len(shards)
+        local = PoolStats(shards=len(shards))
 
-        with ThreadPoolExecutor(max_workers=self.n_workers) as pool:
-            running: dict[Future, tuple[int, int, bool, float]] = {}
-            pending = list(enumerate(shards))
-            attempts = {i: 0 for i in range(len(shards))}
-            speculated: set[int] = set()
+        try:
+            with ThreadPoolExecutor(max_workers=self.n_workers) as pool:
+                running: dict[Future, tuple[int, int, bool, float]] = {}
+                pending = list(enumerate(shards))
+                attempts = {i: 0 for i in range(len(shards))}
+                speculated: set[int] = set()
 
-            def launch(i: int, speculative: bool = False) -> None:
-                attempts[i] += 1
-                fut = pool.submit(
-                    self._run_shard, fn, i, shards[i], attempts[i], speculative
-                )
-                running[fut] = (i, attempts[i], speculative, time.monotonic())
+                def launch(i: int, speculative: bool = False) -> None:
+                    attempts[i] += 1
+                    fut = pool.submit(
+                        self._run_shard, fn, i, shards[i], attempts[i], speculative
+                    )
+                    running[fut] = (i, attempts[i], speculative, time.monotonic())
 
-            while pending and len(running) < self.n_workers:
-                i, _ = pending.pop(0)
-                launch(i)
-
-            while running:
-                done, _ = wait(
-                    list(running), timeout=self.poll_s,
-                    return_when=FIRST_COMPLETED,
-                )
-                for fut in done:
-                    i, attempt, speculative, _t0 = running.pop(fut)
-                    try:
-                        res = fut.result()
-                    except Exception:
-                        self.stats.failures += 1
-                        if attempt <= self.max_retries and i not in results:
-                            self.stats.retries += 1
-                            launch(i, speculative)
-                        elif i not in results and not any(
-                            ri == i for ri, *_ in running.values()
-                        ):
-                            raise
-                        continue
-                    if i not in results:
-                        results[i] = res
-                        completed_durations.append(res.duration_s)
-                        if res.speculative:
-                            self.stats.speculative_wins += 1
-
-                # refill free workers
                 while pending and len(running) < self.n_workers:
                     i, _ = pending.pop(0)
                     launch(i)
 
-                # straggler detection: re-issue slow in-flight shards
-                if (
-                    self.straggler_factor
-                    and completed_durations
-                    and not pending
-                    and len(running) < self.n_workers
-                ):
-                    median = sorted(completed_durations)[
-                        len(completed_durations) // 2
-                    ]
-                    threshold = max(
-                        self.straggler_min_s, self.straggler_factor * median
+                while running:
+                    done, _ = wait(
+                        list(running), timeout=self.poll_s,
+                        return_when=FIRST_COMPLETED,
                     )
-                    now = time.monotonic()
-                    for fut, (i, attempt, spec, t0) in list(running.items()):
-                        if (
-                            not spec
-                            and i not in speculated
-                            and i not in results
-                            and now - t0 > threshold
-                            and len(running) < self.n_workers
-                        ):
-                            speculated.add(i)
-                            self.stats.speculative_launches += 1
-                            launch(i, speculative=True)
+                    for fut in done:
+                        i, attempt, speculative, _t0 = running.pop(fut)
+                        try:
+                            res = fut.result()
+                        except Exception:
+                            local.failures += 1
+                            if attempt <= self.max_retries and i not in results:
+                                local.retries += 1
+                                launch(i, speculative)
+                            elif i not in results and not any(
+                                ri == i for ri, *_ in running.values()
+                            ):
+                                raise
+                            continue
+                        if i not in results:
+                            results[i] = res
+                            completed_durations.append(res.duration_s)
+                            if res.speculative:
+                                local.speculative_wins += 1
+
+                    # refill free workers
+                    while pending and len(running) < self.n_workers:
+                        i, _ = pending.pop(0)
+                        launch(i)
+
+                    # straggler detection: re-issue slow in-flight shards
+                    if (
+                        self.straggler_factor
+                        and completed_durations
+                        and not pending
+                        and len(running) < self.n_workers
+                    ):
+                        median = sorted(completed_durations)[
+                            len(completed_durations) // 2
+                        ]
+                        threshold = max(
+                            self.straggler_min_s, self.straggler_factor * median
+                        )
+                        now = time.monotonic()
+                        for fut, (i, attempt, spec, t0) in list(running.items()):
+                            if (
+                                not spec
+                                and i not in speculated
+                                and i not in results
+                                and now - t0 > threshold
+                                and len(running) < self.n_workers
+                            ):
+                                speculated.add(i)
+                                local.speculative_launches += 1
+                                launch(i, speculative=True)
+        finally:
+            self._fold_stats(local, stats_out)
 
         missing = [i for i in range(len(shards)) if i not in results]
         if missing:
             raise RuntimeError(f"shards never completed: {missing}")
         return [results[i] for i in range(len(shards))]
+
+    def imap_windowed(
+        self,
+        fn: Callable[[int, Any, int], Any],
+        items: Iterable[Any],
+        *,
+        window: int,
+        ordered: bool = False,
+        stats_out: PoolStats | None = None,
+    ) -> Iterator[ShardResult]:
+        """Run ``fn(index, item, worker_id)`` over an item *iterator* with a
+        bounded in-flight window, yielding one :class:`ShardResult` per item
+        — in **completion order** by default, in **item order** with
+        ``ordered=True``.
+
+        This is :meth:`map_shards` lifted to streaming input: at most
+        ``window`` distinct items are materialized and in flight at once
+        (the next item is pulled from the iterator only when a window slot
+        frees), failed attempts are retried up to ``max_retries``, and
+        in-flight items slower than ``straggler_factor`` x the median
+        completed duration are speculatively re-issued when a thread is
+        idle — first finisher wins, the duplicate's result is discarded.
+
+        In ordered mode a slot is freed only when its result is *yielded*:
+        an item completing ahead of its turn stays resident (and its
+        result buffered) until every earlier item has been yielded, so the
+        window bounds in-flight + buffered together.  With chunks as items
+        this is the chunk-level executor of the concurrent streaming
+        pipeline: peak resident examples are strictly window x chunk, and
+        a straggler chunk throttles admission instead of ballooning a
+        reorder buffer — while its speculative twin runs on the idled
+        threads.
+        """
+        if window < 1:
+            raise ValueError(f"window must be positive, got {window}")
+        it = iter(items)
+        local = PoolStats()
+        try:
+            with ThreadPoolExecutor(max_workers=window) as pool:
+                running: dict[Future, tuple[int, int, bool, float]] = {}
+                payloads: dict[int, Any] = {}
+                attempts: dict[int, int] = {}
+                done_idx: set[int] = set()
+                speculated: set[int] = set()
+                ready: dict[int, ShardResult] = {}  # ordered-mode buffer
+                next_yield = 0
+                completed_durations: list[float] = []
+                exhausted = False
+                next_index = 0
+
+                def launch(i: int, speculative: bool = False) -> None:
+                    attempts[i] = attempts.get(i, 0) + 1
+                    fut = pool.submit(
+                        self._run_shard, fn, i, payloads[i], attempts[i],
+                        speculative,
+                    )
+                    running[fut] = (i, attempts[i], speculative, time.monotonic())
+
+                while True:
+                    # admit new items while distinct in-flight < window
+                    while not exhausted and len(payloads) < window:
+                        try:
+                            item = next(it)
+                        except StopIteration:
+                            exhausted = True
+                            break
+                        payloads[next_index] = item
+                        local.shards += 1
+                        launch(next_index)
+                        next_index += 1
+                    if not running:
+                        if exhausted:
+                            break
+                        continue
+
+                    done, _ = wait(
+                        list(running), timeout=self.poll_s,
+                        return_when=FIRST_COMPLETED,
+                    )
+                    for fut in done:
+                        i, attempt, speculative, _t0 = running.pop(fut)
+                        try:
+                            res = fut.result()
+                        except Exception:
+                            local.failures += 1
+                            if attempt <= self.max_retries and i not in done_idx:
+                                local.retries += 1
+                                launch(i, speculative)
+                            elif i not in done_idx and not any(
+                                ri == i for ri, *_ in running.values()
+                            ):
+                                raise
+                            continue
+                        if i in done_idx:
+                            continue  # speculative loser: discard duplicate
+                        done_idx.add(i)
+                        completed_durations.append(res.duration_s)
+                        if res.speculative:
+                            local.speculative_wins += 1
+                        if not ordered:
+                            payloads.pop(i, None)  # frees a window slot
+                            yield res
+                            continue
+                        ready[i] = res
+                        while next_yield in ready:
+                            out = ready.pop(next_yield)
+                            payloads.pop(next_yield, None)  # frees a slot
+                            next_yield += 1
+                            yield out
+
+                    # straggler detection at the item level: re-issue slow
+                    # in-flight items onto idle threads
+                    if (
+                        self.straggler_factor
+                        and completed_durations
+                        and len(running) < window
+                    ):
+                        median = sorted(completed_durations)[
+                            len(completed_durations) // 2
+                        ]
+                        threshold = max(
+                            self.straggler_min_s, self.straggler_factor * median
+                        )
+                        now = time.monotonic()
+                        for fut, (i, attempt, spec, t0) in list(running.items()):
+                            if (
+                                not spec
+                                and i not in speculated
+                                and i not in done_idx
+                                and now - t0 > threshold
+                                and len(running) < window
+                            ):
+                                speculated.add(i)
+                                local.speculative_launches += 1
+                                launch(i, speculative=True)
+        finally:
+            self._fold_stats(local, stats_out)

@@ -25,6 +25,7 @@ from __future__ import annotations
 import gzip
 import json
 import os
+import random
 import time
 import uuid
 from typing import Iterable
@@ -34,10 +35,29 @@ class CommitConflict(Exception):
     """Another writer committed this version first; retry."""
 
 
+#: optimistic-concurrency retry budget.  Every lost race means another
+#: writer committed (global progress), but a single writer can starve
+#: under heavy contention — the budget plus jittered backoff below keeps
+#: many concurrent chunk committers from spinning against each other.
+COMMIT_RETRIES = 50
+
+
+def _conflict_backoff(attempt: int) -> None:
+    """Tiny jittered sleep after a lost version race: de-synchronizes
+    writers that keep colliding on the same next-version number."""
+    time.sleep(random.uniform(0.0, 0.002) * min(attempt + 1, 8))
+
+
 class DeltaLite:
     def __init__(self, path: str, key_column: str | None = None):
         self.path = path
         self.key_column = key_column
+        # monotone scan hint: versions are append-only, so latest_version
+        # can resume from the last one seen instead of walking from 0 —
+        # O(new versions) instead of O(all versions) per call, which keeps
+        # concurrent committers from bunching up on long logs.  Benign
+        # under races: the hint only ever lags the truth.
+        self._version_hint = -1
         os.makedirs(os.path.join(path, "_log"), exist_ok=True)
         os.makedirs(os.path.join(path, "data"), exist_ok=True)
 
@@ -51,9 +71,10 @@ class DeltaLite:
 
     def latest_version(self) -> int:
         """Highest contiguous committed version (-1 = empty table)."""
-        v = -1
+        v = self._version_hint
         while os.path.exists(self._version_path(v + 1)):
             v += 1
+        self._version_hint = v
         return v
 
     def _read_log(self, version: int | None = None) -> list[dict]:
@@ -86,12 +107,23 @@ class DeltaLite:
             seg["keys"] = sorted({str(r[self.key_column]) for r in rows})
         return seg
 
-    def _commit(self, entry: dict, retries: int = 20) -> int:
+    def _commit(
+        self, entry: dict, retries: int = COMMIT_RETRIES, precheck=None
+    ) -> int | None:
         """Atomic commit: the fully-written entry is published with a hard
         link, so a concurrent reader can never observe a partial log file;
-        losers of the version race get FileExistsError and retry."""
-        for _ in range(retries):
+        losers of the version race get FileExistsError and retry.
+
+        ``precheck(v)`` (optional) runs before each attempt against the
+        table state at version ``v - 1`` — the state the successful link
+        at ``v`` linearizes after; returning False abandons the commit
+        (returns None).  Conditional appends build on this single copy of
+        the publish protocol.
+        """
+        for attempt in range(retries):
             v = self.latest_version() + 1
+            if precheck is not None and not precheck(v):
+                return None
             entry["version"] = v
             entry["timestamp"] = time.time()
             tmp = self._version_path(v) + f".{uuid.uuid4().hex}.tmp"
@@ -101,6 +133,7 @@ class DeltaLite:
                 os.link(tmp, self._version_path(v))
                 return v
             except FileExistsError:
+                _conflict_backoff(attempt)
                 continue  # lost the race; re-read latest and retry
             finally:
                 os.unlink(tmp)
@@ -113,6 +146,43 @@ class DeltaLite:
             return self.latest_version()
         seg = self._write_segment(rows)
         return self._commit({"add": [seg], "remove": []})
+
+    def append_if_absent(
+        self, rows: Iterable[dict], retries: int = COMMIT_RETRIES
+    ) -> int | None:
+        """First-committer-wins conditional append: commit the rows only if
+        none of their ``key_column`` values are already live in the table.
+
+        The absence check runs against the table state immediately preceding
+        the version we try to claim, and the ``O_CREAT|O_EXCL``-style link is
+        the linearization point: if another writer claims that version first
+        we lose the race, re-read, and re-check — so two writers racing on
+        the same key can never both commit it.  Returns the committed
+        version, or ``None`` if a key was already taken (the written segment
+        is unlinked; losers leave no garbage, even when the retry budget is
+        exhausted).
+        """
+        assert self.key_column, "append_if_absent requires a key_column"
+        rows = list(rows)
+        if not rows:
+            return self.latest_version()
+        keys = {str(r[self.key_column]) for r in rows}
+        if keys & self.keys():  # cheap fast path: skip the segment write
+            return None
+        seg = self._write_segment(rows)
+
+        def absent(v: int) -> bool:
+            return not (keys & self.keys(version=v - 1))
+
+        version: int | None = None
+        try:
+            version = self._commit(
+                {"add": [seg], "remove": []}, retries=retries, precheck=absent
+            )
+        finally:
+            if version is None:  # lost the key race or exhausted retries
+                os.unlink(os.path.join(self.path, "data", seg["file"]))
+        return version
 
     def overwrite(self, rows: Iterable[dict]) -> int:
         """Replace the table contents (old versions stay readable)."""

@@ -44,3 +44,26 @@ class ChunkManifest:
         return self.table.append(
             [{"chunk_id": chunk_id, "run_key": self.run_key, **state}]
         )
+
+    def try_record(self, chunk_id: int, state: dict) -> bool:
+        """First-committer-wins commit for concurrent chunk workers.
+
+        A speculatively re-issued chunk races its original attempt here:
+        exactly one attempt commits a manifest row (``True``); the loser's
+        row is discarded atomically by DeltaLite's conditional append
+        (``False``) and its partial state must not be merged — the
+        committed row is the canonical result for the chunk.
+        """
+        return (
+            self.table.append_if_absent(
+                [{"chunk_id": chunk_id, "run_key": self.run_key, **state}]
+            )
+            is not None
+        )
+
+    def get(self, chunk_id: int) -> dict | None:
+        """Committed row for one chunk (CAS point lookup), or None."""
+        row = self.table.lookup(str(chunk_id))
+        if row is not None and row.get("run_key") != self.run_key:
+            return None
+        return row

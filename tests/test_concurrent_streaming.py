@@ -1,0 +1,376 @@
+"""Concurrent chunk executor (ISSUE 3): golden parity with the serial
+pipelines, chunk-level speculation + first-committer-wins manifest dedup,
+concurrent-commit stress, crash-resume bit-equality, cache thread safety."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CacheEntry,
+    ConcurrentStreamingExecutor,
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    ResponseCache,
+    StatisticsConfig,
+)
+from repro.core.streaming import _run_key
+from repro.data import iter_qa_examples, mixed_examples, qa_examples
+from repro.ft import ChunkCrashMiddleware, Fault, FlakyFn, SimulatedCrash
+from repro.ft.workers import WorkerPool
+from repro.storage.spill import ChunkManifest
+
+M = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+
+
+def _task(
+    task_id="conc", ci_method="percentile", cache_dir="", **stream_kw
+) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=M,
+        inference=InferenceConfig(
+            batch_size=16, n_workers=3, cache_dir=cache_dir
+        ),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method=ci_method
+        ),
+    ).with_streaming(**stream_kw)
+
+
+def _mv_tuple(mv):
+    return (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored)
+
+
+# -- golden parity -------------------------------------------------------------
+
+
+def test_golden_parity_concurrent_vs_serial_bitwise():
+    """Concurrent streaming at windows 1, 2 and 8 is byte-identical to
+    serial streaming on the mixed QA/summarization/instruction dataset —
+    values, CIs, engine-call accounting, chunk counts."""
+    rows = mixed_examples(240, seed=21)
+    task = _task(max_memory_rows=48)
+    with EvalSession() as session:
+        serial = session.run_task(iter(rows), task)
+    for window in (1, 2, 8):
+        with EvalSession() as session:
+            ex = ConcurrentStreamingExecutor(chunk_size=48, window=window)
+            conc = ex.run(iter(rows), task, session)
+        assert set(conc.metrics) == set(serial.metrics)
+        for m, mv in serial.metrics.items():
+            assert _mv_tuple(conc.metrics[m]) == _mv_tuple(mv), (window, m)
+        assert conc.engine_stats["calls"] == serial.engine_stats["calls"]
+        assert conc.engine_stats["total_cost"] == pytest.approx(
+            serial.engine_stats["total_cost"]
+        )
+        log = conc.logs["streaming"]
+        assert log["n_examples"] == 240
+        assert log["n_chunks"] == 5
+        assert log["max_inflight_chunks"] == window
+        assert conc.responses == [] and conc.scores == {}
+
+
+def test_golden_parity_vs_in_memory_analytical():
+    """Window-N streaming vs serial streaming vs the in-memory pipeline on
+    the analytical CI path: identical values and intervals (up to float
+    re-association in the streamed moments)."""
+    rows = mixed_examples(180, seed=22)
+    with EvalSession() as session:
+        mem = session.run_task(rows, _task(ci_method="analytical", enabled=False))
+    with EvalSession() as session:
+        serial = session.run_task(
+            iter(rows), _task(ci_method="analytical", max_memory_rows=40)
+        )
+    with EvalSession() as session:
+        conc = session.run_task(
+            iter(rows),
+            _task(ci_method="analytical", max_memory_rows=40, concurrency=4),
+        )
+    for m, mv in mem.metrics.items():
+        for other in (serial, conc):
+            ov = other.metrics[m]
+            assert ov.ci_method == mv.ci_method
+            assert ov.n == mv.n and ov.n_unscored == mv.n_unscored
+            assert ov.value == pytest.approx(mv.value, rel=1e-12)
+            assert ov.ci[0] == pytest.approx(mv.ci[0], rel=1e-6, abs=1e-9)
+            assert ov.ci[1] == pytest.approx(mv.ci[1], rel=1e-6, abs=1e-9)
+        # serial vs concurrent streaming: bitwise
+        assert _mv_tuple(conc.metrics[m]) == _mv_tuple(serial.metrics[m])
+
+
+def test_cache_accounting_parity_across_modes(tmp_path):
+    """Hit/miss/write accounting is identical for in-memory, serial
+    streaming and concurrent streaming — cold pass all misses+writes,
+    warm pass all hits, nothing double-counted."""
+    rows = qa_examples(120, seed=3)
+    modes = {
+        "mem": dict(enabled=False),
+        "serial": dict(max_memory_rows=30),
+        "conc": dict(max_memory_rows=30, concurrency=4),
+    }
+    observed = {}
+    for name, stream_kw in modes.items():
+        task = _task(cache_dir=str(tmp_path / f"cache-{name}"), **stream_kw)
+        with EvalSession() as session:
+            cold = session.run_task(iter(rows), task)
+            warm = session.run_task(iter(rows), task)
+        observed[name] = [
+            {k: r.cache_stats[k] for k in ("hits", "misses", "writes")}
+            for r in (cold, warm)
+        ]
+    for name, (cold, warm) in observed.items():
+        assert cold == {"hits": 0, "misses": 120, "writes": 120}, name
+        assert warm == {"hits": 120, "misses": 0, "writes": 0}, name
+
+
+def test_concurrency_knob_excluded_from_resume_key():
+    task = _task(max_memory_rows=64)
+    assert _run_key(task) == _run_key(task.with_streaming(concurrency=8))
+    # but the chunk layout still keys the manifest
+    assert _run_key(task) != _run_key(task.with_streaming(max_memory_rows=32))
+
+
+def test_window_bounds_resident_rows():
+    task = _task(max_memory_rows=20, concurrency=3)
+    with EvalSession() as session:
+        res = session.run_task(iter_qa_examples(200, seed=4), task)
+    log = res.logs["streaming"]
+    assert log["n_examples"] == 200
+    # peak materialized examples <= window x chunk (the O(window x chunk)
+    # guarantee; reorder-buffered chunks have already been dematerialized)
+    assert log["max_resident_rows"] <= 3 * 20
+
+
+# -- spill: concurrent commits, speculation, crash-resume ----------------------
+
+
+@pytest.mark.stress
+def test_manifest_concurrent_commit_stress(tmp_path):
+    """N threads racing try_record over interleaved chunk ids: every chunk
+    ends up committed exactly once — no lost commits, no duplicate rows."""
+    man = ChunkManifest(str(tmp_path / "spill"), "stress-run")
+    n_threads, n_chunks = 6, 30
+    barrier = threading.Barrier(n_threads)
+    wins = [0] * n_threads
+    errors = []
+
+    def worker(t: int) -> None:
+        barrier.wait()
+        try:
+            # each thread walks the chunks from a different offset so every
+            # chunk id sees concurrent committers
+            for k in range(n_chunks):
+                ci = (k + t * 5) % n_chunks
+                if man.try_record(ci, {"start": ci, "n_rows": 1, "by": t}):
+                    wins[t] += 1
+        except Exception as e:  # pragma: no cover — the assertion target
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=worker, args=(t,)) for t in range(n_threads)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert errors == []
+    assert sum(wins) == n_chunks  # exactly one winner per chunk
+    rows = man.table.read()
+    assert len(rows) == n_chunks  # losers left no duplicate rows
+    assert sorted(int(r["chunk_id"]) for r in rows) == list(range(n_chunks))
+    assert set(man.completed()) == set(range(n_chunks))
+    # orphaned loser segments were unlinked, not just unreferenced
+    committed_files = {
+        f for s in man.table._live_segments() for f in [s["file"]]
+    }
+    import os
+
+    on_disk = set(os.listdir(os.path.join(man.path, "data")))
+    assert on_disk == committed_files
+
+
+@pytest.mark.stress
+def test_speculative_chunk_reissue_first_committer_wins(tmp_path):
+    """A straggler chunk is speculatively re-issued; both attempts race the
+    manifest commit and exactly one row lands — the merged stream sees one
+    result per chunk (no double-counting)."""
+    man = ChunkManifest(str(tmp_path / "spill"), "spec-run")
+    pool = WorkerPool(
+        n_workers=4, straggler_factor=2.0, straggler_min_s=0.05, poll_s=0.005
+    )
+    attempts: dict[int, int] = {}
+    lock = threading.Lock()
+
+    def fn(i: int, item: int, worker: int):
+        with lock:
+            attempts[i] = attempts.get(i, 0) + 1
+            attempt = attempts[i]
+        if i == 2 and attempt == 1:
+            time.sleep(0.6)  # deterministic straggler: first attempt only
+        won = man.try_record(i, {"start": item, "n_rows": 1, "attempt": attempt})
+        return (won, attempt)
+
+    results = list(pool.imap_windowed(fn, iter(range(6)), window=4))
+    assert sorted(r.index for r in results) == list(range(6))  # one per chunk
+    assert pool.stats.speculative_launches >= 1
+    assert attempts[2] == 2  # original + speculative twin both ran
+    rows = man.table.read()
+    assert len(rows) == 6  # first-committer-wins: no duplicate chunk rows
+    assert sum(1 for r in results if r.value[0]) == 6  # every yield committed
+
+
+def test_imap_windowed_retry_and_permanent_failure():
+    pool = WorkerPool(n_workers=2, max_retries=2, poll_s=0.001)
+    flaky = FlakyFn(lambda i, item, w: item * 2, [Fault(shard=1, attempt=1)])
+    results = {
+        r.index: r.value
+        for r in pool.imap_windowed(flaky, iter([5, 6, 7, 8]), window=2)
+    }
+    assert results == {0: 10, 1: 12, 2: 14, 3: 16}
+    assert pool.stats.retries == 1 and pool.stats.failures == 1
+    assert pool.stats.shards == 4
+
+    dead = FlakyFn(
+        lambda i, item, w: item,
+        [Fault(shard=0, attempt=1), Fault(shard=0, attempt=2)],
+    )
+    pool2 = WorkerPool(n_workers=2, max_retries=1, poll_s=0.001)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        list(pool2.imap_windowed(dead, iter([1]), window=2))
+
+
+def test_imap_windowed_lazy_admission():
+    """The source iterator is only advanced when a window slot frees: at
+    most ``window`` items are ever materialized."""
+    pool = WorkerPool(n_workers=2, poll_s=0.001)
+    in_flight = {"now": 0, "max": 0}
+    lock = threading.Lock()
+
+    def items():
+        for i in range(12):
+            with lock:
+                in_flight["now"] += 1
+                in_flight["max"] = max(in_flight["max"], in_flight["now"])
+            yield i
+
+    def fn(i, item, w):
+        time.sleep(0.005)
+        with lock:
+            in_flight["now"] -= 1
+        return item
+
+    out = list(pool.imap_windowed(fn, items(), window=3))
+    assert len(out) == 12
+    assert in_flight["max"] <= 3
+
+
+def test_concurrent_crash_resume_bit_identical(tmp_path):
+    """Kill a concurrent run mid-stream; in-flight chunks drain their
+    commits, the restart skips all committed chunks, and the final metrics
+    are bit-identical to an uninterrupted run — serial or concurrent."""
+    n, chunk = 300, 50
+    task = _task(
+        max_memory_rows=chunk, concurrency=2,
+        spill_dir=str(tmp_path / "spill"),
+    )
+    ref_task = _task(
+        max_memory_rows=chunk, concurrency=2, spill_dir=str(tmp_path / "ref")
+    )
+    serial_task = _task(
+        max_memory_rows=chunk, spill_dir=str(tmp_path / "serial")
+    )
+    with EvalSession() as session:
+        ref = session.run_task(iter_qa_examples(n, seed=8), ref_task)
+    with EvalSession() as session:
+        serial = session.run_task(iter_qa_examples(n, seed=8), serial_task)
+
+    crash = ChunkCrashMiddleware([Fault(shard=2, attempt=1)])
+    with EvalSession(middleware=[crash]) as session:
+        with pytest.raises(SimulatedCrash):
+            session.run_task(iter_qa_examples(n, seed=8), task)
+        calls_first = session.accounting.engine_calls
+    assert crash.injected == [(2, 1, "raise")]
+
+    with EvalSession() as session:
+        res = session.run_task(iter_qa_examples(n, seed=8), task)
+        calls_resumed = session.accounting.engine_calls
+    # every chunk was inferred exactly once across both attempts: in-flight
+    # chunks at crash time drained their manifest commits and were skipped
+    assert calls_first + calls_resumed == n
+    log = res.logs["streaming"]
+    assert log["n_chunks"] == n // chunk
+    assert log["n_resumed_chunks"] >= 3  # >= chunks merged before the crash
+    for m, mv in ref.metrics.items():
+        assert _mv_tuple(res.metrics[m]) == _mv_tuple(mv)
+        assert _mv_tuple(res.metrics[m]) == _mv_tuple(serial.metrics[m])
+
+
+# -- ResponseCache thread safety -----------------------------------------------
+
+
+@pytest.mark.stress
+def test_response_cache_concurrent_same_key(tmp_path):
+    """Regression for the _refresh/write/stat-counter races: many workers
+    writing and reading the same prompt_hash concurrently must not lose
+    counter increments or corrupt the key set."""
+    cache = ResponseCache(str(tmp_path / "cache"))
+    entry = CacheEntry(
+        prompt_hash="deadbeef", model_name="m", provider="p",
+        prompt_text="q", response_text="a", input_tokens=1, output_tokens=1,
+        latency_ms=0.0, created_at=time.time(),
+    )
+    n_threads, n_ops = 6, 10
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker() -> None:
+        barrier.wait()
+        try:
+            for _ in range(n_ops):
+                cache.put([entry])
+                assert cache.lookup("deadbeef") is not None
+        except Exception as e:  # pragma: no cover — the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert errors == []
+    total = n_threads * n_ops
+    assert cache.writes == total          # no lost write increments
+    assert cache.hits == total            # every lookup hit, all counted
+    assert cache.misses == 0
+    stats = cache.stats()
+    assert stats["entries"] == 1          # one key, latest-wins on dup rows
+    assert stats["hit_rate"] == 1.0
+    # a fresh handle sees exactly one logical entry
+    fresh = ResponseCache(str(tmp_path / "cache"))
+    assert fresh.lookup("deadbeef") is not None
+    assert fresh.table.keys() == {"deadbeef"}
+
+
+# -- suite integration ---------------------------------------------------------
+
+
+def test_suite_with_streaming_concurrency():
+    suite = (
+        EvalSuite("conc-suite")
+        .add_task(_task("s1"), lambda: iter_qa_examples(120, seed=12))
+        .with_streaming(max_memory_rows=30, concurrency=3)
+    )
+    with EvalSession() as session:
+        res = session.run_suite(suite)
+    r = res.result("gpt-4o-mini", "s1")
+    log = r.logs["streaming"]
+    assert log["n_examples"] == 120
+    assert log["max_inflight_chunks"] == 3
+    assert log["n_chunks"] == 4

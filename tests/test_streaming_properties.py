@@ -1,0 +1,216 @@
+"""Property-based tests for the streaming merge laws (ISSUE 3).
+
+The concurrent chunk executor is only correct if the streaming
+accumulators obey their algebra: folding per-chunk partial states under
+*any* partition of the dataset and *any* merge order must reproduce the
+single-pass result, and the derived CIs must be invariant to merge order.
+Each law lives in a plain ``check_*`` helper so the same assertions run
+two ways: hypothesis drives them over arbitrary inputs (skipped cleanly
+when hypothesis is not installed, via ``tests/_hypothesis_compat``), and
+seeded deterministic tests drive them on every interpreter.
+
+Merges are additive folds of floats, so "equal" means equal to within
+float summation re-association (tolerance 1e-9 on sums of [0, 1] scores);
+integer state (n, n_nan) must match exactly.  The executor itself gets
+*bit*-identical output by merging in chunk-index order — proven in
+``tests/test_concurrent_streaming.py`` — while these laws establish that
+any order is statistically the same state.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.stats import MetricAccumulator, PoissonBootstrap, streaming_ci
+
+# -- law checkers (shared by hypothesis and seeded tests) ----------------------
+
+
+def _split(scores: np.ndarray, sizes: list[int]):
+    """Partition ``scores`` into consecutive chunks of the given sizes;
+    returns [(start_offset, chunk_array), ...] covering the whole array."""
+    parts = []
+    lo = 0
+    for size in sizes:
+        parts.append((lo, scores[lo:lo + size]))
+        lo += size
+    assert lo == len(scores)
+    return parts
+
+
+def check_accumulator_partition_law(
+    scores: np.ndarray, sizes: list[int], order: list[int]
+) -> None:
+    """Merging per-chunk MetricAccumulators in any order == one full pass."""
+    full = MetricAccumulator()
+    full.update(scores)
+    parts = _split(scores, sizes)
+    merged = MetricAccumulator()
+    for j in order:
+        part = MetricAccumulator()
+        part.update(parts[j][1])
+        # round-trip through the spill serialization on every merge
+        merged.merge(MetricAccumulator.from_state(part.state()))
+    assert merged.n == full.n
+    assert merged.n_nan == full.n_nan
+    assert merged.total == pytest.approx(full.total, rel=1e-9, abs=1e-9)
+    assert merged.total_sq == pytest.approx(full.total_sq, rel=1e-9, abs=1e-9)
+    if full.n:
+        assert merged.mean == pytest.approx(full.mean, rel=1e-9, abs=1e-9)
+        assert merged.variance == pytest.approx(
+            full.variance, rel=1e-6, abs=1e-9
+        )
+
+
+def check_bootstrap_partition_law(
+    scores: np.ndarray, sizes: list[int], order: list[int],
+    n_boot: int = 50, seed: int = 3,
+) -> None:
+    """For a fixed chunk layout, merging per-chunk PoissonBootstraps in any
+    order == sequentially updating one instance: the Philox streams are
+    keyed by (seed, chunk offset), not by processing order."""
+    parts = _split(scores, sizes)
+    seq = PoissonBootstrap(n_boot, seed)
+    for start, part in parts:
+        seq.update(part, start)
+    merged = PoissonBootstrap(n_boot, seed)
+    for j in order:
+        start, part = parts[j]
+        p = PoissonBootstrap(n_boot, seed)
+        p.update(part, start)
+        merged.merge(PoissonBootstrap.from_state(p.state()))
+    np.testing.assert_allclose(merged.sum_wx, seq.sum_wx, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(merged.sum_w, seq.sum_w, rtol=1e-9, atol=1e-9)
+
+
+def check_ci_merge_order_invariance(
+    scores: np.ndarray, sizes: list[int], order_a: list[int],
+    order_b: list[int], method: str,
+) -> None:
+    """streaming_ci over states merged in two different orders agrees."""
+    parts = _split(scores, sizes)
+
+    def fold(order):
+        acc = MetricAccumulator()
+        boot = PoissonBootstrap(50, 3) if method != "analytical" else None
+        for j in order:
+            start, part = parts[j]
+            a = MetricAccumulator()
+            a.update(part)
+            acc.merge(a)
+            if boot is not None:
+                b = PoissonBootstrap(50, 3)
+                b.update(part, start)
+                boot.merge(b)
+        return acc, boot
+
+    acc_a, boot_a = fold(order_a)
+    acc_b, boot_b = fold(order_b)
+    if acc_a.n == 0:
+        assert acc_b.n == 0
+        return
+    iv_a = streaming_ci(acc_a, boot_a, method=method)
+    iv_b = streaming_ci(acc_b, boot_b, method=method)
+    for x, y in [(iv_a.value, iv_b.value), (iv_a.lo, iv_b.lo),
+                 (iv_a.hi, iv_b.hi)]:
+        if math.isnan(x):
+            assert math.isnan(y)
+        else:
+            assert x == pytest.approx(y, rel=1e-9, abs=1e-9)
+    assert iv_a.n == iv_b.n
+
+
+def _random_case(rng: np.random.Generator, n_max: int = 200):
+    """One random (scores, sizes, order) instance for the seeded tests."""
+    n = int(rng.integers(1, n_max))
+    scores = rng.random(n)
+    scores[rng.random(n) < 0.1] = np.nan
+    sizes = []
+    left = n
+    while left > 0:
+        take = int(rng.integers(1, left + 1))
+        sizes.append(take)
+        left -= take
+    order = list(rng.permutation(len(sizes)))
+    return scores, sizes, order
+
+
+# -- hypothesis-driven ---------------------------------------------------------
+
+_SCORE = st.one_of(
+    st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    st.just(float("nan")),
+)
+_PARTS = st.lists(st.lists(_SCORE, min_size=0, max_size=40),
+                  min_size=1, max_size=6)
+
+
+def _materialize(parts: list[list[float]], perm_seed: int):
+    scores = np.asarray([x for p in parts for x in p], np.float64)
+    sizes = [len(p) for p in parts]
+    order = list(np.random.default_rng(perm_seed).permutation(len(parts)))
+    return scores, sizes, order
+
+
+@settings(max_examples=40, deadline=None)
+@given(parts=_PARTS, perm_seed=st.integers(0, 2**31 - 1))
+def test_prop_accumulator_merge_law(parts, perm_seed):
+    scores, sizes, order = _materialize(parts, perm_seed)
+    check_accumulator_partition_law(scores, sizes, order)
+
+
+@settings(max_examples=25, deadline=None)
+@given(parts=_PARTS, perm_seed=st.integers(0, 2**31 - 1))
+def test_prop_bootstrap_merge_law(parts, perm_seed):
+    scores, sizes, order = _materialize(parts, perm_seed)
+    check_bootstrap_partition_law(scores, sizes, order)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    parts=_PARTS,
+    perm_seed=st.integers(0, 2**31 - 1),
+    perm_seed_b=st.integers(0, 2**31 - 1),
+    method=st.sampled_from(["analytical", "percentile"]),
+)
+def test_prop_streaming_ci_merge_order_invariant(
+    parts, perm_seed, perm_seed_b, method
+):
+    scores, sizes, order_a = _materialize(parts, perm_seed)
+    order_b = list(
+        np.random.default_rng(perm_seed_b).permutation(len(sizes))
+    )
+    check_ci_merge_order_invariance(scores, sizes, order_a, order_b, method)
+
+
+# -- seeded deterministic coverage (runs without hypothesis) -------------------
+
+
+def test_seeded_accumulator_merge_law():
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        check_accumulator_partition_law(*_random_case(rng))
+
+
+def test_seeded_bootstrap_merge_law():
+    rng = np.random.default_rng(12)
+    for _ in range(10):
+        check_bootstrap_partition_law(*_random_case(rng))
+
+
+def test_seeded_ci_merge_order_invariance():
+    rng = np.random.default_rng(13)
+    for method in ("analytical", "percentile"):
+        for _ in range(5):
+            scores, sizes, order_a = _random_case(rng)
+            order_b = list(rng.permutation(len(sizes)))
+            check_ci_merge_order_invariance(
+                scores, sizes, order_a, order_b, method
+            )
+
+
+def test_hypothesis_shim_reports_mode():
+    # documents which mode this run exercised (skip-shim vs real driver)
+    assert HAVE_HYPOTHESIS in (True, False)
