@@ -27,6 +27,7 @@ def main() -> None:
     smoke = args.smoke
 
     from benchmarks import (
+        bootstrap_stats,
         caching,
         concurrent_streaming,
         cost,
@@ -64,6 +65,7 @@ def main() -> None:
         "concurrent_streaming": lambda: concurrent_streaming.run(
             smoke=smoke, full=args.full
         ),
+        "bootstrap_stats": lambda: bootstrap_stats.run(smoke=smoke),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 

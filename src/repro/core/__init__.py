@@ -4,7 +4,12 @@ composable stage pipeline, metric computation, statistical aggregation,
 multi-model suite comparison, tracking."""
 
 from repro.core.cache import CacheEntry, CacheMiss, ResponseCache
-from repro.core.compare import Comparison, compare_results, compare_scores
+from repro.core.compare import (
+    Comparison,
+    compare_results,
+    compare_scores,
+    compare_stream_stats,
+)
 from repro.core.config import (
     CachePolicy,
     DataConfig,
@@ -70,6 +75,7 @@ __all__ = [
     "SimulatedAPIEngine", "Stage", "StaticResponsesStage", "StatisticsConfig",
     "StreamingConfig", "StreamingPipeline", "SuiteJob", "SuiteResult",
     "TokenBucket", "TrackingMiddleware", "api_cost",
-    "cache_key", "compare_results", "compare_scores", "create_engine",
+    "cache_key", "compare_results", "compare_scores", "compare_stream_stats",
+    "create_engine",
     "default_stages", "get_engine", "rescore_stages", "retry_with_backoff",
 ]

@@ -1,5 +1,20 @@
 """Model comparison (paper §4.3-4.4): paired significance test (selected per
-Table 2) + effect size + CI of the per-example difference."""
+Table 2) + effect size + CI of the per-example difference.
+
+Two entry points:
+
+* :func:`compare_scores` — the in-memory path, on aligned per-example
+  score vectors.
+* :func:`compare_stream_stats` — the streaming path, on the O(B) replicate
+  state two runs carry in :class:`~repro.stats.streaming.StreamingStats`.
+  Because the Poisson-bootstrap weight for an example depends only on
+  ``(seed, example position)`` — never on the model — two models evaluated
+  over the same chunk layout share their weight streams
+  replicate-for-replicate, so the elementwise difference of their
+  replicate means *is* the paired bootstrap distribution of the mean
+  difference: Δ*_b = Σ w_b·(x^A − x^B) / Σ w_b when both arms score the
+  same examples.  Paired inference without per-example scores.
+"""
 
 from __future__ import annotations
 
@@ -8,10 +23,16 @@ import dataclasses
 import numpy as np
 
 from repro.core.stages import EvalResult
-from repro.stats.bootstrap import compute_ci
-from repro.stats.effect import EffectSize, hedges_g, odds_ratio
+from repro.stats.bootstrap import compute_ci, replicate_p_value
+from repro.stats.effect import (
+    EffectSize,
+    hedges_g,
+    hedges_g_from_moments,
+    odds_ratio,
+)
 from repro.stats.select import TestRecommendation, recommend_test, run_recommended
 from repro.stats.significance import TestResult
+from repro.stats.streaming import StreamingStats
 
 
 @dataclasses.dataclass
@@ -68,6 +89,62 @@ def compare_scores(
         recommendation=rec,
         effect=effect,
         n=len(a),
+    )
+
+
+def compare_stream_stats(
+    metric: str,
+    a: StreamingStats,
+    b: StreamingStats,
+    *,
+    confidence: float = 0.95,
+) -> Comparison:
+    """Paired comparison from two streaming runs' replicate states.
+
+    Valid only when ``a.comparable_with(b)`` is None (same seed, B,
+    backend and chunk layout — i.e. shared weight streams); callers
+    gate on that.  The test is the paired-delta bootstrap: a CI-inversion
+    p-value on the replicate-delta distribution, reported as
+    ``paired_bootstrap``.  Effect size is Hedges' g from the two arms'
+    moments (the discordant-pair table McNemar needs is not recoverable
+    from O(B) state, so binary metrics use the same delta test).
+    """
+    reason = a.comparable_with(b)
+    if reason is not None:
+        raise ValueError(f"streaming runs are not paired-comparable: {reason}")
+    acc_a, acc_b = a.accs[metric], b.accs[metric]
+    deltas = a.engine.view(metric).means() - b.engine.view(metric).means()
+    diff = acc_a.mean - acc_b.mean
+    alpha = (1 - confidence) / 2
+    lo, hi = np.quantile(deltas, [alpha, 1 - alpha])
+    se = float(deltas.std(ddof=1)) if deltas.size > 1 else 0.0
+    n = min(acc_a.n, acc_b.n)
+    test = TestResult(
+        "paired_bootstrap",
+        diff / se if se > 0 else 0.0,
+        replicate_p_value(deltas),
+        n,
+        detail={"n_boot": int(deltas.size), "backend": a.engine.backend},
+    )
+    rec = TestRecommendation(
+        "paired_bootstrap",
+        "streaming: paired Poisson-bootstrap replicate deltas over shared "
+        f"weight streams (B={deltas.size}), per-example scores not retained",
+    )
+    effect = hedges_g_from_moments(
+        acc_a.mean, acc_a.variance, acc_a.n,
+        acc_b.mean, acc_b.variance, acc_b.n,
+    )
+    return Comparison(
+        metric=metric,
+        mean_a=acc_a.mean,
+        mean_b=acc_b.mean,
+        diff=diff,
+        diff_ci=(float(lo), float(hi)),
+        test=test,
+        recommendation=rec,
+        effect=effect,
+        n=n,
     )
 
 

@@ -67,6 +67,15 @@ class StatisticsConfig:
     ci_method: str = "bca"            # percentile | bca | analytical
     significance_threshold: float = 0.05
     seed: int = 0
+    #: bootstrap execution backend for streaming aggregation:
+    #: "numpy"  — host Philox(seed, chunk_start) weight blocks, one
+    #:            (B, chunk) float64 matrix per metric per chunk;
+    #: "pallas" — device-resident chunked partials (one kernel launch per
+    #:            chunk covers all metrics; counter-mixer PRNG keyed by the
+    #:            absolute example position, O(B x n_metrics) host state).
+    #: The two backends draw different (each internally deterministic)
+    #: weight streams, so the backend is part of the resume key.
+    backend: str = "numpy"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -76,6 +76,11 @@ class EvalResult:
     engine_stats: dict
     timing: dict
     logs: dict
+    #: streaming runs only: merged accumulator + bootstrap-replicate state
+    #: (:class:`repro.stats.streaming.StreamingStats`).  O(B) per metric —
+    #: this is what makes pairwise significance possible for tasks that
+    #: never materialize per-example score vectors.
+    stream_stats: Any = None
 
     @property
     def throughput_per_min(self) -> float:
@@ -383,9 +388,24 @@ class StaticResponsesStage:
 class ScoreStage:
     """Vectorized per-example scoring.  Metric resolution (registry lookup +
     params binding) lives behind this stage via
-    :func:`repro.metrics.registry.resolve_metrics`."""
+    :func:`repro.metrics.registry.resolve_metrics`, memoized per metric
+    tuple — a streaming run re-enters this stage once per chunk, and the
+    stage object is shared across concurrent chunk workers, so resolution
+    happens once per task instead of once per chunk."""
 
     name = "metrics"
+
+    def __init__(self) -> None:
+        self._resolved: dict[tuple, list] = {}
+
+    def _metrics_for(self, task: EvalTask) -> list:
+        # benign race under concurrent chunk workers: two threads may both
+        # resolve, the dict assignment is atomic and the values identical
+        resolved = self._resolved.get(task.metrics)
+        if resolved is None:
+            resolved = resolve_metrics(task.metrics)
+            self._resolved[task.metrics] = resolved
+        return resolved
 
     def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
         task = art.task
@@ -399,7 +419,7 @@ class ScoreStage:
             judge = session.engine_for(task.model)
         ctx = MetricContext(judge_engine=judge, logs=art.logs)
         scores: dict[str, np.ndarray] = {}
-        for name, scorer in resolve_metrics(task.metrics):
+        for name, scorer in self._metrics_for(task):
             scores[name] = np.asarray(
                 scorer(art.rows, art.texts, ctx), np.float64
             )
@@ -417,8 +437,9 @@ class AggregateStage:
         stats_cfg = art.task.statistics
         metric_values: dict[str, MetricValue] = {}
         for name, vals in art.scores.items():
-            ok = vals[~np.isnan(vals)]
-            n_unscored = int(np.isnan(vals).sum())
+            nan_mask = np.isnan(vals)  # one O(n) scan, reused for both
+            ok = vals[~nan_mask]
+            n_unscored = int(nan_mask.sum())
             if len(ok) == 0:
                 metric_values[name] = MetricValue(
                     name, float("nan"), (float("nan"),) * 2, "none", 0, n_unscored

@@ -20,7 +20,14 @@ processing order.
 The aggregate CIs come from :func:`repro.stats.streaming.streaming_ci`:
 exact analytical intervals from the moments, or the Poisson-bootstrap
 percentile interval (Monte-Carlo-equivalent to the in-memory multinomial
-bootstrap) for the bootstrap methods.
+bootstrap) for the bootstrap methods.  Replicate state is maintained by a
+pluggable :class:`~repro.stats.streaming.BootstrapEngine`
+(``StatisticsConfig.backend``): per-metric host Philox weight blocks
+("numpy") or the device-resident chunked-partials kernel ("pallas") that
+covers every metric of a chunk in one launch.  Either way the finished
+result carries the merged O(B) state as ``EvalResult.stream_stats``,
+which is what lets suites run paired significance tests between
+streaming runs without per-example scores.
 
 :class:`ConcurrentStreamingExecutor` is the parallel counterpart: it
 schedules whole chunks onto a chunk-level :class:`~repro.ft.workers.
@@ -60,8 +67,10 @@ from repro.data.datasets import iter_chunks
 from repro.ft.workers import WorkerPool
 from repro.metrics.registry import BINARY_METRICS, resolve_metrics
 from repro.stats.streaming import (
+    BootstrapEngine,
     MetricAccumulator,
-    PoissonBootstrap,
+    StreamingStats,
+    make_bootstrap_engine,
     streaming_ci,
 )
 from repro.storage.spill import ChunkManifest
@@ -104,12 +113,14 @@ class StreamingPipeline:
         names = [name for name, _ in resolve_metrics(task.metrics)]
         accs = {m: MetricAccumulator() for m in names}
         # the analytical interval comes straight from the moments; only the
-        # bootstrap methods pay for the O(B x chunk) Poisson weight draws
+        # bootstrap methods pay for maintaining replicate state (numpy:
+        # O(B x chunk) Poisson weight draws per metric; pallas: one
+        # chunked-partials kernel launch covering every metric)
         use_boot = stats_cfg.ci_method in ("percentile", "bca")
-        boots = {
-            m: PoissonBootstrap(stats_cfg.bootstrap_iterations, stats_cfg.seed)
-            for m in names
-        } if use_boot else {}
+        engine = make_bootstrap_engine(
+            stats_cfg.backend, stats_cfg.bootstrap_iterations,
+            stats_cfg.seed, tuple(names),
+        ) if use_boot else None
         manifest = (
             ChunkManifest(self.spill_dir, _run_key(task))
             if self.spill_dir
@@ -148,7 +159,7 @@ class StreamingPipeline:
                         f"digest={digest} — was the data source changed?"
                     )
                 self._merge_committed(
-                    row, accs, boots, failures, timing, engine_stats,
+                    row, accs, engine, failures, timing, engine_stats,
                     cache_stats,
                 )
                 n_resumed += 1
@@ -171,14 +182,12 @@ class StreamingPipeline:
                 accs[m].merge(acc)
                 if manifest is not None:
                     chunk_states.setdefault("metrics", {})[m] = acc.state()
-                if use_boot:
-                    boot = PoissonBootstrap(
-                        stats_cfg.bootstrap_iterations, stats_cfg.seed
-                    )
-                    boot.update(art.scores[m], start)
-                    boots[m].merge(boot)
-                    if manifest is not None:
-                        chunk_states.setdefault("boot", {})[m] = boot.state()
+            if engine is not None:
+                chunk_engine = engine.spawn()
+                chunk_engine.update(art.scores, start)
+                engine.merge(chunk_engine)
+                if manifest is not None:
+                    chunk_states["boot"] = chunk_engine.state()
             chunk_failures = [
                 {**f, "index": f["index"] + start} for f in art.failures
             ]
@@ -217,7 +226,7 @@ class StreamingPipeline:
             )
 
         t0 = time.monotonic()
-        metrics = _finalize_metrics(names, accs, boots, stats_cfg)
+        metrics = _finalize_metrics(names, accs, engine, stats_cfg)
         timing["stats_s"] = time.monotonic() - t0
 
         if cache_stats:
@@ -240,15 +249,20 @@ class StreamingPipeline:
                     "chunk_size": self.chunk_size,
                     "max_resident_rows": max_resident,
                     "spill_dir": self.spill_dir,
+                    "stats_backend": stats_cfg.backend if use_boot else "",
                 }
             },
+            stream_stats=StreamingStats(
+                accs=accs, engine=engine,
+                chunk_size=self.chunk_size, n_examples=n_examples,
+            ),
         )
 
     @staticmethod
     def _merge_committed(
         row: dict,
         accs: dict[str, MetricAccumulator],
-        boots: dict[str, PoissonBootstrap],
+        engine: BootstrapEngine | None,
         failures: list[dict],
         timing: dict[str, float],
         engine_stats: dict,
@@ -256,8 +270,19 @@ class StreamingPipeline:
     ) -> None:
         for m, acc in accs.items():
             acc.merge(MetricAccumulator.from_state(row["metrics"][m]))
-            if m in boots:
-                boots[m].merge(PoissonBootstrap.from_state(row["boot"][m]))
+        if engine is not None:
+            try:
+                engine.merge_state(row["boot"])
+            except ValueError as e:
+                # designed refusal (e.g. pallas partials spilled on a TPU
+                # host resumed on CPU): surface it as the documented
+                # non-reusable-spill error, with a way out
+                raise ManifestMismatch(
+                    f"committed bootstrap partials are not mergeable by "
+                    f"this run's statistics engine ({e}) — resume on the "
+                    f"platform that wrote the spill, or clear the spill "
+                    f"dir to recompute"
+                ) from e
         _merge_failures(failures, row.get("failures", []))
         _merge_engine_stats(engine_stats, row.get("engine_stats", {}))
         _merge_cache_stats(cache_stats, row.get("cache_stats", {}))
@@ -284,7 +309,7 @@ class ChunkOutcome:
     deduped: bool = False        # this attempt lost the commit race
     #: live accumulator objects (None when merging a committed row)
     accs: dict[str, MetricAccumulator] | None = None
-    boots: dict[str, PoissonBootstrap] | None = None
+    engine: BootstrapEngine | None = None
 
 
 class ConcurrentStreamingExecutor:
@@ -344,10 +369,10 @@ class ConcurrentStreamingExecutor:
         names = [name for name, _ in resolve_metrics(task.metrics)]
         accs = {m: MetricAccumulator() for m in names}
         use_boot = stats_cfg.ci_method in ("percentile", "bca")
-        boots = {
-            m: PoissonBootstrap(stats_cfg.bootstrap_iterations, stats_cfg.seed)
-            for m in names
-        } if use_boot else {}
+        engine = make_bootstrap_engine(
+            stats_cfg.backend, stats_cfg.bootstrap_iterations,
+            stats_cfg.seed, tuple(names),
+        ) if use_boot else None
         manifest = (
             ChunkManifest(self.spill_dir, _run_key(task))
             if self.spill_dir
@@ -386,8 +411,8 @@ class ConcurrentStreamingExecutor:
         def process(index: int, item: tuple, worker: int) -> ChunkOutcome:
             ci, start, chunk = item
             return self._process_chunk(
-                ci, start, chunk, task, session, stages, names, use_boot,
-                stats_cfg, manifest, completed,
+                ci, start, chunk, task, session, stages, names, engine,
+                manifest, completed,
             )
 
         # ordered=True does double duty: chunk states fold in index order
@@ -402,7 +427,7 @@ class ConcurrentStreamingExecutor:
                 out: ChunkOutcome = res.value
                 resident["rows"] -= out.n_rows
                 self._merge_outcome(
-                    out, accs, boots, failures, timing, engine_stats,
+                    out, accs, engine, failures, timing, engine_stats,
                     cache_stats,
                 )
                 completed.pop(out.index, None)
@@ -429,7 +454,7 @@ class ConcurrentStreamingExecutor:
             )
 
         t0 = time.monotonic()
-        metrics = _finalize_metrics(names, accs, boots, stats_cfg)
+        metrics = _finalize_metrics(names, accs, engine, stats_cfg)
         timing["stats_s"] = time.monotonic() - t0
 
         if cache_stats:
@@ -454,14 +479,20 @@ class ConcurrentStreamingExecutor:
                     "max_resident_rows": resident["max"],
                     "spill_dir": self.spill_dir,
                     "chunk_pool": dataclasses.asdict(chunk_pool.stats),
+                    "stats_backend": stats_cfg.backend if use_boot else "",
                 }
             },
+            stream_stats=StreamingStats(
+                accs=accs, engine=engine,
+                chunk_size=self.chunk_size, n_examples=n_examples,
+            ),
         )
 
     def _process_chunk(
         self, ci: int, start: int, chunk: list[dict], task: EvalTask,
-        session: Any, stages: list, names: list[str], use_boot: bool,
-        stats_cfg: StatisticsConfig, manifest: ChunkManifest | None,
+        session: Any, stages: list, names: list[str],
+        run_engine: BootstrapEngine | None,
+        manifest: ChunkManifest | None,
         completed: dict[int, dict],
     ) -> ChunkOutcome:
         row = completed.get(ci) if manifest is not None else None
@@ -488,7 +519,7 @@ class ConcurrentStreamingExecutor:
             chunk_timing[f"{stage.name}_s"] = time.monotonic() - t0
 
         accs: dict[str, MetricAccumulator] = {}
-        boots: dict[str, PoissonBootstrap] = {}
+        chunk_engine: BootstrapEngine | None = None
         chunk_states: dict[str, dict] = {}
         for m in names:
             acc = MetricAccumulator()
@@ -496,14 +527,11 @@ class ConcurrentStreamingExecutor:
             accs[m] = acc
             if manifest is not None:
                 chunk_states.setdefault("metrics", {})[m] = acc.state()
-            if use_boot:
-                boot = PoissonBootstrap(
-                    stats_cfg.bootstrap_iterations, stats_cfg.seed
-                )
-                boot.update(art.scores[m], start)
-                boots[m] = boot
-                if manifest is not None:
-                    chunk_states.setdefault("boot", {})[m] = boot.state()
+        if run_engine is not None:
+            chunk_engine = run_engine.spawn()
+            chunk_engine.update(art.scores, start)
+            if manifest is not None:
+                chunk_states["boot"] = chunk_engine.state()
         chunk_failures = [
             {**f, "index": f["index"] + start} for f in art.failures
         ]
@@ -534,14 +562,14 @@ class ConcurrentStreamingExecutor:
                 )
         return ChunkOutcome(
             ci, start, len(chunk), state=state, accs=accs,
-            boots=boots if use_boot else None,
+            engine=chunk_engine,
         )
 
     @staticmethod
     def _merge_outcome(
         out: ChunkOutcome,
         accs: dict[str, MetricAccumulator],
-        boots: dict[str, PoissonBootstrap],
+        engine: BootstrapEngine | None,
         failures: list[dict],
         timing: dict[str, float],
         engine_stats: dict,
@@ -550,14 +578,14 @@ class ConcurrentStreamingExecutor:
         if out.accs is None:
             # committed manifest row (resumed chunk or commit-race loser)
             StreamingPipeline._merge_committed(
-                out.state, accs, boots, failures, timing, engine_stats,
+                out.state, accs, engine, failures, timing, engine_stats,
                 cache_stats,
             )
             return
         for m, acc in accs.items():
             acc.merge(out.accs[m])
-            if m in boots:
-                boots[m].merge(out.boots[m])
+        if engine is not None:
+            engine.merge(out.engine)
         _merge_failures(failures, out.state["failures"])
         _merge_engine_stats(engine_stats, out.state["engine_stats"])
         _merge_cache_stats(cache_stats, out.state["cache_stats"])
@@ -568,7 +596,7 @@ class ConcurrentStreamingExecutor:
 def _finalize_metrics(
     names: list[str],
     accs: dict[str, MetricAccumulator],
-    boots: dict[str, PoissonBootstrap],
+    engine: BootstrapEngine | None,
     stats_cfg: StatisticsConfig,
 ) -> dict[str, MetricValue]:
     """Aggregate merged accumulator state into final :class:`MetricValue`s
@@ -584,7 +612,7 @@ def _finalize_metrics(
             continue
         iv = streaming_ci(
             acc,
-            boots.get(m),
+            engine.view(m) if engine is not None else None,
             method=stats_cfg.ci_method,
             confidence=stats_cfg.confidence_level,
             binary=m in BINARY_METRICS,
@@ -599,10 +627,13 @@ def _run_key(task: EvalTask) -> str:
     """Resume key: only configuration that affects the results — model,
     data prep, metrics, statistics, and the chunk layout
     (``max_memory_rows`` keys the bootstrap offsets) — decides whether
-    committed chunks are reusable.  Execution-strategy knobs (the whole
-    InferenceConfig: worker count, batching, caching, rate limits; spill
-    location; resume flag) are normalized away so a restart may legitimately
-    retune them without orphaning committed work."""
+    committed chunks are reusable.  ``StatisticsConfig.backend`` stays in
+    the key on purpose: the two backends draw different weight streams, so
+    partials spilled by one are not mergeable by the other.
+    Execution-strategy knobs (the whole InferenceConfig: worker count,
+    batching, caching, rate limits; spill location; resume flag) are
+    normalized away so a restart may legitimately retune them without
+    orphaning committed work."""
     payload = json.loads(task.to_json())
     payload.pop("inference", None)
     payload["streaming"] = {"max_memory_rows": task.streaming.max_memory_rows}

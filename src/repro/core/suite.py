@@ -25,7 +25,7 @@ import dataclasses
 import warnings
 from typing import Callable, Iterable, Sequence, Union
 
-from repro.core.compare import Comparison, compare_scores
+from repro.core.compare import Comparison, compare_scores, compare_stream_stats
 from repro.core.config import EngineModelConfig, EvalTask
 from repro.core.stages import EvalResult
 
@@ -132,29 +132,26 @@ def build_comparisons(
     suite: EvalSuite, results: dict[tuple[str, str], EvalResult]
 ) -> ComparisonMatrix:
     """Pairwise significance matrix: for each task and each metric shared
-    by all models, compare every model pair on aligned score vectors."""
+    by all models, compare every model pair — on aligned score vectors for
+    in-memory runs, or on shared-weight-stream bootstrap replicate state
+    (:func:`repro.core.compare.compare_stream_stats`) for streaming runs
+    that never materialize per-example scores."""
     labels = suite.model_labels()
     out: ComparisonMatrix = {}
     for task, _ in suite._tasks:
         stats = task.statistics
-        per_model = {
-            label: results[(label, task.task_id)].scores
+        per_result = {
+            label: results[(label, task.task_id)]
             for label in labels
             if (label, task.task_id) in results
         }
+        per_model = {label: r.scores for label, r in per_result.items()}
         if len(per_model) < 2:
             out[task.task_id] = {}
             continue
-        shared = set.intersection(*(set(s) for s in per_model.values()))
-        if not shared and any(not s for s in per_model.values()):
-            # streaming results never materialize per-example score vectors
-            warnings.warn(
-                f"task {task.task_id!r}: no per-example scores to compare "
-                "(streaming tasks opt out of pairwise significance tests)",
-                stacklevel=2,
-            )
         task_cmp: dict[str, dict[tuple[str, str], Comparison]] = {}
         present = [lab for lab in labels if lab in per_model]
+        shared = set.intersection(*(set(s) for s in per_model.values()))
         for metric in sorted(shared):
             cells: dict[tuple[str, str], Comparison] = {}
             for i, a in enumerate(present):
@@ -168,8 +165,62 @@ def build_comparisons(
                         seed=stats.seed,
                     )
             task_cmp[metric] = cells
+        if not shared and any(not s for s in per_model.values()):
+            task_cmp = _stream_comparisons(task, per_result, present)
         out[task.task_id] = task_cmp
     return out
+
+
+def _stream_comparisons(
+    task: EvalTask,
+    per_result: dict[str, EvalResult],
+    present: list[str],
+) -> dict[str, dict[tuple[str, str], Comparison]]:
+    """Pairwise comparisons for streaming runs: paired-delta bootstrap on
+    the replicate state the runs carried instead of per-example scores.
+    Warns (and yields no cells) when that state is absent — analytical
+    ``ci_method`` maintains no replicates — or when two runs' weight
+    streams are not shared (mismatched seed/B/backend/chunk layout)."""
+    stats = task.statistics
+    streams = {
+        label: r.stream_stats
+        for label, r in per_result.items()
+        if r.stream_stats is not None
+    }
+    if len(streams) < 2:
+        warnings.warn(
+            f"task {task.task_id!r}: no per-example scores and no streaming "
+            "replicate state to compare",
+            stacklevel=3,
+        )
+        return {}
+    shared = set.intersection(*(set(s.accs) for s in streams.values()))
+    task_cmp: dict[str, dict[tuple[str, str], Comparison]] = {}
+    warned: set[tuple[str, str]] = set()
+    for metric in sorted(shared):
+        cells: dict[tuple[str, str], Comparison] = {}
+        for i, a in enumerate(present):
+            for b in present[i + 1:]:
+                if a not in streams or b not in streams:
+                    continue
+                reason = streams[a].comparable_with(streams[b])
+                if reason is not None:
+                    if (a, b) not in warned:
+                        warned.add((a, b))
+                        warnings.warn(
+                            f"task {task.task_id!r}: streaming runs "
+                            f"{a!r} vs {b!r} are not paired-comparable: "
+                            f"{reason}",
+                            stacklevel=3,
+                        )
+                    continue
+                cells[(a, b)] = compare_stream_stats(
+                    metric, streams[a], streams[b],
+                    confidence=stats.confidence_level,
+                )
+        if cells:
+            task_cmp[metric] = cells
+    return task_cmp
 
 
 @dataclasses.dataclass

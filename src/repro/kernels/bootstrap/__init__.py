@@ -1,11 +1,18 @@
 from repro.kernels.bootstrap.bootstrap import bootstrap_means
-from repro.kernels.bootstrap.ops import bootstrap_ci
-from repro.kernels.bootstrap.ref import bootstrap_means_ref, mix_bits, poisson1_weight
+from repro.kernels.bootstrap.ops import bootstrap_ci, bootstrap_partials
+from repro.kernels.bootstrap.ref import (
+    bootstrap_means_ref,
+    bootstrap_partials_ref,
+    mix_bits,
+    poisson1_weight,
+)
 
 __all__ = [
     "bootstrap_ci",
     "bootstrap_means",
     "bootstrap_means_ref",
+    "bootstrap_partials",
+    "bootstrap_partials_ref",
     "mix_bits",
     "poisson1_weight",
 ]

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.bootstrap.ref import POISSON1_CDF
+from repro.kernels.bootstrap.ref import mix_bits, poisson1_weight
 
 
 def _kernel(
@@ -62,19 +62,10 @@ def _kernel(
     pos = (
         it * bn + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
     ).astype(u32)
-    seed = seed_ref[0, 0]
 
-    h = boot * u32(0x9E3779B1) ^ pos * u32(0x85EBCA77) ^ seed
-    h = h ^ (h >> u32(16))
-    h = h * u32(0x85EBCA6B)
-    h = h ^ (h >> u32(13))
-    h = h * u32(0xC2B2AE35)
-    h = h ^ (h >> u32(16))
-
-    u = (h >> u32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
-    w = jnp.zeros((bb, bn), jnp.float32)
-    for c in POISSON1_CDF:
-        w = w + (u >= jnp.float32(c)).astype(jnp.float32)
+    # mix_bits/poisson1_weight are pure jnp and trace inside the kernel:
+    # one definition of the PRNG shared by kernel and oracle, bit-for-bit
+    w = poisson1_weight(mix_bits(boot, pos, seed_ref[0, 0]))
 
     # mask the ragged tail (n may not divide the tile size)
     valid = (it * bn + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)) < n
@@ -132,3 +123,132 @@ def bootstrap_means(
         jnp.asarray(seed, jnp.uint32).reshape(1, 1),
     )
     return out[:, 0]
+
+
+# -- chunked-partials variant ---------------------------------------------------
+#
+# The evaluation pipeline streams chunks; a chunk carries *all* lexical
+# metrics of its examples as a (chunk, n_metrics) score matrix.  Instead of
+# one means-kernel launch per metric per chunk, this variant emits the
+# mergeable ``(sum w*x, sum w)`` replicate pairs for every metric in one
+# launch: weights are generated once per (replicate, example) and hit the
+# MXU twice — against the scores and against the per-metric validity mask
+# (NaN = unscorable, weight zero for that metric only).  Weights are keyed
+# by the *absolute* example position ``chunk_start + i`` through the same
+# murmur3-finalizer counter mixer, so chunk partials are deterministic,
+# order-independent, and merge bit-identically across crash/resume as long
+# as the chunk layout is unchanged.
+
+
+def _partials_kernel(
+    data_ref,   # (bn, bm) f32 — NaN marks unscorable / padding
+    sp_ref,     # (1, 2) uint32 — [seed, chunk_start]
+    swx_ref,    # out (bb, bm) f32
+    sw_ref,     # out (bb, bm) f32
+    swx_acc,    # VMEM (bb, bm) f32
+    sw_acc,     # VMEM (bb, bm) f32
+    *,
+    bb: int,
+    bn: int,
+    n_tiles: int,
+):
+    ib = pl.program_id(0)
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        swx_acc[...] = jnp.zeros_like(swx_acc)
+        sw_acc[...] = jnp.zeros_like(sw_acc)
+
+    x = data_ref[...].astype(jnp.float32)  # (bn, bm)
+
+    u32 = jnp.uint32
+    boot = (
+        ib * bb + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 0)
+    ).astype(u32)
+    pos = sp_ref[0, 1] + (
+        it * bn + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
+    ).astype(u32)
+
+    # shared PRNG definition (see _kernel): weights keyed by the absolute
+    # example position, identical to the blocked oracle bit-for-bit
+    w = poisson1_weight(mix_bits(boot, pos, sp_ref[0, 0]))
+
+    # per-metric validity: NaN scores (and NaN row/column padding) carry
+    # weight zero in both sums, so each metric's replicate pair only ever
+    # sees that metric's scorable examples
+    valid = x == x  # (bn, bm)
+    xv = jnp.where(valid, x, 0.0)
+    swx_acc[...] += jax.lax.dot(
+        w, xv, preferred_element_type=jnp.float32
+    )
+    sw_acc[...] += jax.lax.dot(
+        w, valid.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(it == n_tiles - 1)
+    def _final():
+        swx_ref[...] = swx_acc[...]
+        sw_ref[...] = sw_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_boot", "block_boot", "block_n", "interpret"),
+)
+def bootstrap_partials(
+    scores: jax.Array,  # (n, m) — NaN marks unscorable examples
+    seed: jax.Array,    # () uint32
+    start: jax.Array,   # () uint32 — absolute offset of row 0
+    *,
+    n_boot: int = 1000,
+    block_boot: int = 128,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Mergeable ``(sum w*x, sum w)`` replicate pairs, shape (n_boot, m)."""
+    n, m = scores.shape
+    bb = min(block_boot, n_boot)
+    # round the replicate count up to a whole number of row-blocks; the
+    # extra rows draw from their own counter stream and are sliced away
+    nb_pad = ((n_boot + bb - 1) // bb) * bb
+    bn = min(block_n, max(n, 8))
+    n_tiles = (n + bn - 1) // bn
+    # lanes want multiples of 128; pad metrics with NaN columns (masked out)
+    bm = ((m + 127) // 128) * 128
+    data = jnp.pad(
+        scores.astype(jnp.float32),
+        ((0, n_tiles * bn - n), (0, bm - m)),
+        constant_values=jnp.nan,
+    )
+
+    kernel = functools.partial(
+        _partials_kernel, bb=bb, bn=bn, n_tiles=n_tiles
+    )
+    swx, sw = pl.pallas_call(
+        kernel,
+        grid=(nb_pad // bb, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda ib, it: (it, 0)),
+            pl.BlockSpec((1, 2), lambda ib, it: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bm), lambda ib, it: (ib, 0)),
+            pl.BlockSpec((bb, bm), lambda ib, it: (ib, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb_pad, bm), jnp.float32),
+            jax.ShapeDtypeStruct((nb_pad, bm), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, bm), jnp.float32),
+            pltpu.VMEM((bb, bm), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        data,
+        jnp.stack(
+            [jnp.asarray(seed, jnp.uint32), jnp.asarray(start, jnp.uint32)]
+        ).reshape(1, 2),
+    )
+    return swx[:n_boot, :m], sw[:n_boot, :m]

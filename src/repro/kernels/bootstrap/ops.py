@@ -1,5 +1,6 @@
 """Bootstrap CI wrapper: kernel (large n) or jnp ref (host scale), plus
-percentile extraction."""
+percentile extraction and the chunked-partials dispatcher used by the
+device-resident statistics backend."""
 
 from __future__ import annotations
 
@@ -7,9 +8,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.bootstrap.bootstrap import bootstrap_means
-from repro.kernels.bootstrap.ref import bootstrap_means_ref
+from repro.kernels.bootstrap.bootstrap import (
+    bootstrap_partials as bootstrap_partials_kernel,
+)
+from repro.kernels.bootstrap.ref import bootstrap_means_ref, bootstrap_partials_ref
 
 
 @functools.partial(
@@ -35,3 +40,60 @@ def bootstrap_ci(
     lo = jnp.quantile(means, alpha)
     hi = jnp.quantile(means, 1.0 - alpha)
     return jnp.mean(data), lo, hi
+
+
+def resolve_partials_mode(mode: str) -> str:
+    """Resolve ``"auto"`` to the execution path this process will use.
+
+    The three concrete modes share the identical weight stream but differ
+    in float accumulation order, so partials from different modes are not
+    bit-mergeable: callers that persist partials (the pallas statistics
+    engine's spill state) record the resolved mode and refuse to merge
+    across modes — e.g. a run spilled on a TPU host must not be resumed
+    float-inexactly on a CPU host.
+    """
+    if mode == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    if mode not in ("kernel", "interpret", "ref"):
+        raise ValueError(f"unknown bootstrap partials mode {mode!r}")
+    return mode
+
+
+def bootstrap_partials(
+    scores: np.ndarray,  # (n, m) float — NaN marks unscorable examples
+    seed: int,
+    start: int,
+    *,
+    n_boot: int = 1000,
+    mode: str = "auto",
+) -> tuple[np.ndarray, np.ndarray]:
+    """Chunked-partials entry point for the ``backend="pallas"`` statistics
+    engine: ``(sum w*x, sum w)`` float32 replicate pairs of shape
+    ``(n_boot, m)`` for one chunk whose row 0 sits at absolute offset
+    ``start``.
+
+    ``mode`` selects the execution path — all three share the identical
+    counter-mixer weight stream (bit-for-bit), they differ only in float
+    accumulation order:
+
+    * ``"auto"``   — the Pallas TPU kernel when a TPU is attached, else the
+      blocked jnp oracle (XLA-compiled; this is the production CPU path).
+    * ``"kernel"`` / ``"interpret"`` — force the kernel (natively, or
+      through the Pallas interpreter for CPU parity tests).
+    * ``"ref"``    — force the blocked jnp oracle.
+    """
+    n, m = np.shape(scores)
+    if n == 0:  # empty chunk: zero partials (the kernel's grid needs >=1 tile)
+        zeros = np.zeros((n_boot, m), np.float32)
+        return zeros, zeros.copy()
+    mode = resolve_partials_mode(mode)
+    x = jnp.asarray(scores, jnp.float32)
+    s = jnp.uint32(seed)
+    o = jnp.uint32(start)
+    if mode == "ref":
+        swx, sw = bootstrap_partials_ref(x, s, o, n_boot=n_boot)
+    else:
+        swx, sw = bootstrap_partials_kernel(
+            x, s, o, n_boot=n_boot, interpret=(mode == "interpret")
+        )
+    return np.asarray(swx), np.asarray(sw)

@@ -7,6 +7,8 @@ bit-for-bit on the weights and to float tolerance on the means.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -62,3 +64,58 @@ def bootstrap_means_ref(
     sum_wx = w @ data.astype(jnp.float32)
     sum_w = jnp.sum(w, axis=1)
     return sum_wx / jnp.maximum(sum_w, 1.0)
+
+
+#: row-block size of the blocked reference; fixed so the float accumulation
+#: order (and therefore the partials, bit-for-bit) is reproducible across runs
+DEFAULT_BLOCK_N = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("n_boot", "block_n"))
+def bootstrap_partials_ref(
+    scores: jax.Array,  # (n, m) — NaN marks unscorable examples
+    seed: jax.Array,    # () uint32
+    start: jax.Array,   # () uint32 — absolute offset of row 0
+    *,
+    n_boot: int,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked oracle for the chunked-partials kernel: ``(sum w*x, sum w)``
+    replicate pairs of shape ``(n_boot, m)``.
+
+    The weight for (replicate b, example p) depends only on
+    ``(seed, start + p, b)`` through :func:`mix_bits`, so partials computed
+    over *any* chunking of a dataset merge into the same replicates —
+    order-independent and resume-safe.  NaN scores get weight zero
+    per-metric (they stay out of both ``sum w*x`` and ``sum w``), matching
+    the host path's NaN filtering.  Streams ``block_n`` rows at a time:
+    peak memory is O(n_boot x block_n), never the (B, n) weight matrix.
+    """
+    n, m = scores.shape
+    n_blocks = (n + block_n - 1) // block_n
+    pad = n_blocks * block_n - n
+    x = jnp.pad(
+        scores.astype(jnp.float32), ((0, pad), (0, 0)),
+        constant_values=jnp.nan,  # padded rows are masked like NaN scores
+    ).reshape(n_blocks, block_n, m)
+    boot = jnp.arange(n_boot, dtype=jnp.uint32)[:, None]
+    offs = jnp.arange(block_n, dtype=jnp.uint32)[None, :]
+
+    def body(carry, blk):
+        swx, sw = carry
+        xb, ib = blk
+        pos = jnp.uint32(start) + ib * jnp.uint32(block_n) + offs
+        w = poisson1_weight(mix_bits(boot, pos, jnp.uint32(seed)))
+        valid = ~jnp.isnan(xb)               # (block_n, m), per-metric mask
+        swx = swx + w @ jnp.where(valid, xb, 0.0)
+        sw = sw + w @ valid.astype(jnp.float32)
+        return (swx, sw), None
+
+    init = (
+        jnp.zeros((n_boot, m), jnp.float32),
+        jnp.zeros((n_boot, m), jnp.float32),
+    )
+    (swx, sw), _ = jax.lax.scan(
+        body, init, (x, jnp.arange(n_blocks, dtype=jnp.uint32))
+    )
+    return swx, sw

@@ -1,8 +1,16 @@
 """Lexical metrics (paper §4.1): exact match, contains, token F1, BLEU,
-ROUGE-L.  Scalar reference implementations plus vectorized batch fronts."""
+ROUGE-L.  Scalar reference implementations plus vectorized batch fronts.
+
+Normalization and tokenization are memoized (bounded LRU): a scoring pass
+runs several lexical metrics over the same response/reference strings, so
+without the cache ``normalize()``'s three regex passes re-run 2–3x per
+example across exact_match / token_f1 / ROUGE-L.  The cache key is the
+raw string; entries are shared across metrics and across streaming chunks
+(references repeat across examples far more often than they miss)."""
 
 from __future__ import annotations
 
+import functools
 import math
 import re
 import string
@@ -13,13 +21,45 @@ import numpy as np
 _PUNCT = str.maketrans("", "", string.punctuation)
 _ARTICLES = re.compile(r"\b(a|an|the)\b")
 _WS = re.compile(r"\s+")
+#: entry bound: cross-metric reuse needs 2n entries (pred + ref per
+#: example) to survive the metric-by-metric sequential scan, so this
+#: covers streaming chunks always and in-memory batches up to ~32k
+#: examples; beyond that the scan pattern degrades to the uncached cost
+_MEMO_SIZE = 65536
+#: byte bound: strings longer than this bypass the cache entirely —
+#: multi-KB responses (streaming summarization) never pin heap, and their
+#: scoring cost is dominated by LCS/n-grams, not the regex passes anyway
+_MEMO_MAX_LEN = 512
+
+
+def _normalize_impl(text: str) -> str:
+    text = text.lower().translate(_PUNCT)
+    text = _ARTICLES.sub(" ", text)
+    return _WS.sub(" ", text).strip()
+
+
+_normalize_cached = functools.lru_cache(maxsize=_MEMO_SIZE)(_normalize_impl)
 
 
 def normalize(text: str) -> str:
     """SQuAD-style normalization: lowercase, strip punctuation/articles."""
-    text = text.lower().translate(_PUNCT)
-    text = _ARTICLES.sub(" ", text)
-    return _WS.sub(" ", text).strip()
+    if len(text) > _MEMO_MAX_LEN:
+        return _normalize_impl(text)
+    return _normalize_cached(text)
+
+
+def _tokens_impl(text: str) -> tuple[str, ...]:
+    return tuple(normalize(text).split())
+
+
+_norm_tokens_cached = functools.lru_cache(maxsize=_MEMO_SIZE)(_tokens_impl)
+
+
+def _norm_tokens(text: str) -> tuple[str, ...]:
+    """Normalized token tuple (immutable, so it can live in the LRU)."""
+    if len(text) > _MEMO_MAX_LEN:
+        return _tokens_impl(text)
+    return _norm_tokens_cached(text)
 
 
 def exact_match(pred: str, ref: str, *, normalized: bool = True) -> float:
@@ -36,8 +76,8 @@ def contains(pred: str, ref: str, *, normalized: bool = True) -> float:
 
 def token_f1(pred: str, ref: str) -> float:
     """Token-level F1 (Rajpurkar et al., 2016)."""
-    p_toks = normalize(pred).split()
-    r_toks = normalize(ref).split()
+    p_toks = _norm_tokens(pred)
+    r_toks = _norm_tokens(ref)
     if not p_toks or not r_toks:
         return float(p_toks == r_toks)
     common = Counter(p_toks) & Counter(r_toks)
@@ -49,15 +89,15 @@ def token_f1(pred: str, ref: str) -> float:
     return 2 * precision * recall / (precision + recall)
 
 
-def _ngrams(tokens: list[str], n: int) -> Counter:
+def _ngrams(tokens: tuple[str, ...], n: int) -> Counter:
     return Counter(tuple(tokens[i : i + n]) for i in range(len(tokens) - n + 1))
 
 
 def bleu(pred: str, ref: str, *, max_n: int = 4, smooth: float = 1.0) -> float:
     """Sentence BLEU with brevity penalty and add-k smoothing
     (Papineni et al., 2002; Lin & Och smoothing)."""
-    p_toks = normalize(pred).split()
-    r_toks = normalize(ref).split()
+    p_toks = _norm_tokens(pred)
+    r_toks = _norm_tokens(ref)
     if not p_toks:
         return 0.0
     log_precisions = []
@@ -77,7 +117,7 @@ def bleu(pred: str, ref: str, *, max_n: int = 4, smooth: float = 1.0) -> float:
     return bp * geo
 
 
-def _lcs_len(a: list[str], b: list[str]) -> int:
+def _lcs_len(a: tuple[str, ...], b: tuple[str, ...]) -> int:
     if not a or not b:
         return 0
     prev = [0] * (len(b) + 1)
@@ -91,8 +131,8 @@ def _lcs_len(a: list[str], b: list[str]) -> int:
 
 def rouge_l(pred: str, ref: str) -> float:
     """ROUGE-L F1 (longest common subsequence; Lin 2004)."""
-    p_toks = normalize(pred).split()
-    r_toks = normalize(ref).split()
+    p_toks = _norm_tokens(pred)
+    r_toks = _norm_tokens(ref)
     lcs = _lcs_len(p_toks, r_toks)
     if lcs == 0:
         return 0.0

@@ -3,10 +3,17 @@ from repro.stats.bootstrap import (
     bca_bootstrap,
     compute_ci,
     percentile_bootstrap,
+    replicate_p_value,
     t_interval,
     wilson_interval,
 )
-from repro.stats.effect import EffectSize, cohens_d, hedges_g, odds_ratio
+from repro.stats.effect import (
+    EffectSize,
+    cohens_d,
+    hedges_g,
+    hedges_g_from_moments,
+    odds_ratio,
+)
 from repro.stats.select import (
     TestRecommendation,
     is_binary,
@@ -22,16 +29,25 @@ from repro.stats.significance import (
     wilcoxon_signed_rank,
 )
 from repro.stats.streaming import (
+    BootstrapEngine,
     MetricAccumulator,
+    NumpyBootstrapEngine,
+    PallasBootstrapEngine,
     PoissonBootstrap,
+    StreamingStats,
+    bootstrap_engine_from_state,
+    make_bootstrap_engine,
     streaming_ci,
 )
 
 __all__ = [
-    "EffectSize", "Interval", "MetricAccumulator", "PoissonBootstrap",
-    "TestRecommendation", "TestResult", "bca_bootstrap", "cohens_d",
-    "compute_ci", "hedges_g", "is_binary", "mcnemar_test", "odds_ratio",
-    "paired_t_test", "percentile_bootstrap", "permutation_test",
-    "recommend_test", "run_recommended", "shapiro_wilk", "streaming_ci",
-    "t_interval", "wilcoxon_signed_rank", "wilson_interval",
+    "BootstrapEngine", "EffectSize", "Interval", "MetricAccumulator",
+    "NumpyBootstrapEngine", "PallasBootstrapEngine", "PoissonBootstrap",
+    "StreamingStats", "TestRecommendation", "TestResult", "bca_bootstrap",
+    "bootstrap_engine_from_state", "cohens_d", "compute_ci", "hedges_g",
+    "hedges_g_from_moments", "is_binary", "make_bootstrap_engine",
+    "mcnemar_test", "odds_ratio", "paired_t_test", "percentile_bootstrap",
+    "permutation_test", "recommend_test", "replicate_p_value",
+    "run_recommended", "shapiro_wilk", "streaming_ci", "t_interval",
+    "wilcoxon_signed_rank", "wilson_interval",
 ]

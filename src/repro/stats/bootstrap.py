@@ -148,6 +148,19 @@ def wilson_interval(successes: int, n: int, *, confidence: float = 0.95) -> Inte
     return Interval(p, lo, hi, "wilson", n)
 
 
+def replicate_p_value(replicates, null: float = 0.0) -> float:
+    """Two-sided bootstrap p-value from a replicate distribution: the
+    smallest alpha at which the percentile interval excludes ``null``
+    (CI-inversion; add-one correction keeps p in (0, 1] at finite B)."""
+    reps = np.asarray(replicates, np.float64)
+    n_boot = reps.size
+    if n_boot == 0:
+        return 1.0
+    p_lo = (1.0 + np.sum(reps <= null)) / (n_boot + 1.0)
+    p_hi = (1.0 + np.sum(reps >= null)) / (n_boot + 1.0)
+    return float(min(1.0, 2.0 * min(p_lo, p_hi)))
+
+
 def compute_ci(
     data,
     *,

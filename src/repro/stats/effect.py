@@ -26,22 +26,49 @@ def _magnitude(d: float) -> str:
     return "large"
 
 
+def _d_from_moments(
+    mean_a: float, var_a: float, n_a: int,
+    mean_b: float, var_b: float, n_b: int,
+) -> float:
+    """Cohen's d from sufficient statistics (single home of the
+    pooled-SD formula; both the array and the streaming-moments fronts
+    delegate here)."""
+    pooled = math.sqrt(
+        ((n_a - 1) * var_a + (n_b - 1) * var_b) / max(n_a + n_b - 2, 1)
+    )
+    return (mean_a - mean_b) / pooled if pooled > 0 else 0.0
+
+
+def _j_correction(n: int) -> float:
+    """Hedges' small-sample correction factor."""
+    return 1.0 - 3.0 / (4.0 * (n - 2) - 1.0) if n > 2 else 1.0
+
+
 def cohens_d(a, b) -> EffectSize:
     a = np.asarray(a, np.float64)
     b = np.asarray(b, np.float64)
     na, nb = len(a), len(b)
-    va = a.var(ddof=1) if na > 1 else 0.0
-    vb = b.var(ddof=1) if nb > 1 else 0.0
-    pooled = math.sqrt(((na - 1) * va + (nb - 1) * vb) / max(na + nb - 2, 1))
-    d = (a.mean() - b.mean()) / pooled if pooled > 0 else 0.0
+    d = _d_from_moments(
+        float(a.mean()), a.var(ddof=1) if na > 1 else 0.0, na,
+        float(b.mean()), b.var(ddof=1) if nb > 1 else 0.0, nb,
+    )
     return EffectSize("cohens_d", float(d), _magnitude(d))
 
 
 def hedges_g(a, b) -> EffectSize:
-    d = cohens_d(a, b).value
-    n = len(a) + len(b)
-    j = 1.0 - 3.0 / (4.0 * (n - 2) - 1.0) if n > 2 else 1.0
-    g = d * j
+    g = cohens_d(a, b).value * _j_correction(len(a) + len(b))
+    return EffectSize("hedges_g", float(g), _magnitude(g))
+
+
+def hedges_g_from_moments(
+    mean_a: float, var_a: float, n_a: int,
+    mean_b: float, var_b: float, n_b: int,
+) -> EffectSize:
+    """Hedges' g from sufficient statistics (streaming runs keep moments,
+    not per-example scores); identical to :func:`hedges_g` on the same
+    data up to float summation order."""
+    d = _d_from_moments(mean_a, var_a, n_a, mean_b, var_b, n_b)
+    g = d * _j_correction(n_a + n_b)
     return EffectSize("hedges_g", float(g), _magnitude(g))
 
 

@@ -18,13 +18,39 @@ keeps the rigor story with O(B) state per metric:
   independent of processing order — merging partial states from a resumed
   run reproduces the uninterrupted result bit-for-bit.
 
-Both accumulators serialize to plain dicts (``state()`` / ``from_state``)
+On top sit the pluggable **bootstrap engines**
+(``StatisticsConfig.backend``) that the streaming pipeline drives — one
+replicate state covering every metric of a task:
+
+* :class:`NumpyBootstrapEngine` (``backend="numpy"``) — one host-Philox
+  :class:`PoissonBootstrap` per metric; the authoritative stream is
+  ``Philox(seed, chunk_start)``, and ``update`` materializes a
+  (B, chunk) float64 weight block per metric.
+* :class:`PallasBootstrapEngine` (``backend="pallas"``) — the
+  chunked-partials kernel in ``repro/kernels/bootstrap``: weights are
+  regenerated on the fly from the murmur3-finalizer counter mixer keyed by
+  ``(seed, absolute example position, replicate)``, one launch covers all
+  metrics of a chunk (a (chunk, n_metrics) score matrix), and nothing of
+  O(B x chunk) ever touches the host heap.  On CPU the same stream runs
+  through the blocked jnp oracle.
+
+Both engines expose identical mergeable ``(sum w*x, sum w)`` state, and —
+because the weight for an example depends only on the seed and the
+example's position, never on the model being evaluated — two models
+evaluated over the same chunk layout share their weight streams
+replicate-for-replicate.  :class:`StreamingStats` carries that state on
+the :class:`~repro.core.stages.EvalResult`, which is what lets
+``repro.core.compare.compare_stream_stats`` build paired-delta bootstrap
+comparisons without ever retaining per-example scores.
+
+All accumulators serialize to plain dicts (``state()`` / ``from_state``)
 so per-chunk partials can spill to a DeltaLite manifest and be merged on
 resume.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import numpy as np
@@ -142,6 +168,228 @@ class PoissonBootstrap:
         boot.sum_wx = np.asarray(state["sum_wx"], np.float64)
         boot.sum_w = np.asarray(state["sum_w"], np.float64)
         return boot
+
+
+# -- pluggable bootstrap engines (StatisticsConfig.backend) ---------------------
+
+
+class BootstrapEngine:
+    """Mergeable multi-metric Poisson-bootstrap replicate state.
+
+    Subclasses own B replicate ``(sum w*x, sum w)`` pairs per metric and
+    differ only in where the weights come from (host Philox vs the device
+    counter-mixer kernel) and how ``update`` is executed.  ``view(metric)``
+    adapts one metric's state to a :class:`PoissonBootstrap` so interval
+    extraction (:func:`streaming_ci`) and paired-delta comparisons share a
+    single code path regardless of backend.
+    """
+
+    backend = ""
+
+    def __init__(self, n_boot: int, seed: int, metrics: tuple[str, ...]):
+        self.n_boot = int(n_boot)
+        self.seed = int(seed)
+        self.metrics = tuple(metrics)
+        self.sum_wx = np.zeros((self.n_boot, len(self.metrics)), np.float64)
+        self.sum_w = np.zeros((self.n_boot, len(self.metrics)), np.float64)
+
+    # -- accumulation ----------------------------------------------------------
+
+    def update(self, scores: dict[str, np.ndarray], start: int) -> None:
+        raise NotImplementedError
+
+    def stream_id(self) -> str:
+        """Identifies the exact float-accumulation variant of the weight
+        stream.  Partials are bit-mergeable only within one stream: the
+        pallas backend resolves this per process (TPU kernel vs blocked
+        CPU oracle), so a spill written on one platform refuses to resume
+        float-inexactly on another."""
+        return self.backend
+
+    def _check_mergeable(self, backend: str, n_boot: int, seed: int,
+                         metrics: tuple[str, ...], stream: str) -> None:
+        ours = (
+            self.backend, self.n_boot, self.seed, self.metrics,
+            self.stream_id(),
+        )
+        theirs = (backend, int(n_boot), int(seed), tuple(metrics), stream)
+        if ours != theirs:
+            raise ValueError(
+                f"cannot merge bootstrap engine states: {ours} != {theirs}"
+            )
+
+    def merge(self, other: "BootstrapEngine") -> "BootstrapEngine":
+        self._check_mergeable(
+            other.backend, other.n_boot, other.seed, other.metrics,
+            other.stream_id(),
+        )
+        self.sum_wx += other.sum_wx
+        self.sum_w += other.sum_w
+        return self
+
+    def merge_state(self, state: dict) -> "BootstrapEngine":
+        """Fold a serialized chunk partial (spill-manifest row) in."""
+        self._check_mergeable(
+            state["backend"], state["n_boot"], state["seed"],
+            tuple(state["metrics"]), state["stream"],
+        )
+        self.sum_wx += np.asarray(state["sum_wx"], np.float64)
+        self.sum_w += np.asarray(state["sum_w"], np.float64)
+        return self
+
+    # -- extraction ------------------------------------------------------------
+
+    def view(self, metric: str) -> PoissonBootstrap:
+        """One metric's replicate state as a :class:`PoissonBootstrap`."""
+        j = self.metrics.index(metric)
+        boot = PoissonBootstrap(self.n_boot, self.seed)
+        boot.sum_wx = self.sum_wx[:, j].copy()
+        boot.sum_w = self.sum_w[:, j].copy()
+        return boot
+
+    # -- serialization ---------------------------------------------------------
+
+    def state(self) -> dict:
+        return {
+            "backend": self.backend,
+            "stream": self.stream_id(),
+            "n_boot": self.n_boot,
+            "seed": self.seed,
+            "metrics": list(self.metrics),
+            "sum_wx": self.sum_wx.tolist(),
+            "sum_w": self.sum_w.tolist(),
+        }
+
+    def spawn(self) -> "BootstrapEngine":
+        """A fresh zero-state engine with this engine's configuration
+        (per-chunk partials that merge into the running state)."""
+        return type(self)(self.n_boot, self.seed, self.metrics)
+
+
+class NumpyBootstrapEngine(BootstrapEngine):
+    """Host backend: ``Philox(seed, chunk_start)`` weight blocks — the
+    exact stream :class:`PoissonBootstrap` has always drawn, kept for
+    backward compatibility and host-scale runs.  Every metric uses the
+    same key, so the (B, chunk) block is drawn once and masked per metric
+    — bit-identical to M independent :class:`PoissonBootstrap` updates at
+    1/M the RNG cost."""
+
+    backend = "numpy"
+
+    def update(self, scores: dict[str, np.ndarray], start: int) -> None:
+        chunk = np.asarray(scores[self.metrics[0]], np.float64).size
+        if chunk == 0:
+            return
+        rng = np.random.Generator(np.random.Philox(key=[self.seed, start]))
+        w = rng.poisson(1.0, (self.n_boot, chunk)).astype(np.float64)
+        for j, m in enumerate(self.metrics):
+            x = np.asarray(scores[m], np.float64)
+            valid = ~np.isnan(x)
+            wm = w * valid[None, :]
+            self.sum_wx[:, j] += wm @ np.where(valid, x, 0.0)
+            self.sum_w[:, j] += wm.sum(axis=1)
+
+
+class PallasBootstrapEngine(BootstrapEngine):
+    """Device backend: one chunked-partials launch per chunk covers every
+    metric; weights come from the kernel's counter mixer keyed by
+    ``(seed, start + i, replicate)`` so partials are order-independent and
+    bit-identical across crash/resume for an unchanged chunk layout."""
+
+    backend = "pallas"
+
+    #: execution path override ("auto" | "kernel" | "interpret" | "ref") —
+    #: class-wide so tests can force the Pallas interpreter
+    mode = "auto"
+
+    def stream_id(self) -> str:
+        from repro.kernels.bootstrap.ops import resolve_partials_mode
+
+        return f"pallas-{resolve_partials_mode(self.mode)}"
+
+    def update(self, scores: dict[str, np.ndarray], start: int) -> None:
+        from repro.kernels.bootstrap.ops import bootstrap_partials
+
+        mat = np.stack(
+            [np.asarray(scores[m], np.float64) for m in self.metrics], axis=1
+        )
+        if mat.shape[0] == 0:
+            return
+        swx, sw = bootstrap_partials(
+            mat, self.seed, start, n_boot=self.n_boot, mode=self.mode
+        )
+        self.sum_wx += swx.astype(np.float64)
+        self.sum_w += sw.astype(np.float64)
+
+
+_ENGINES = {
+    NumpyBootstrapEngine.backend: NumpyBootstrapEngine,
+    PallasBootstrapEngine.backend: PallasBootstrapEngine,
+}
+
+
+def make_bootstrap_engine(
+    backend: str, n_boot: int, seed: int, metrics: tuple[str, ...]
+) -> BootstrapEngine:
+    if backend not in _ENGINES:
+        raise ValueError(
+            f"unknown statistics backend {backend!r}; "
+            f"available: {sorted(_ENGINES)}"
+        )
+    return _ENGINES[backend](n_boot, seed, metrics)
+
+
+def bootstrap_engine_from_state(state: dict) -> BootstrapEngine:
+    eng = make_bootstrap_engine(
+        state["backend"], state["n_boot"], state["seed"],
+        tuple(state["metrics"]),
+    )
+    return eng.merge_state(state)
+
+
+@dataclasses.dataclass
+class StreamingStats:
+    """The streaming run's aggregate statistical state, carried on the
+    :class:`~repro.core.stages.EvalResult` in place of per-example scores.
+
+    ``engine`` is None when the run used an analytical CI (no replicate
+    state was maintained).  ``chunk_size`` and ``n_examples`` identify the
+    chunk layout: two runs are paired-comparable only when seed, B,
+    backend and layout all match — then their weight streams are
+    replicate-for-replicate identical.
+    """
+
+    accs: dict[str, MetricAccumulator]
+    engine: BootstrapEngine | None
+    chunk_size: int
+    n_examples: int
+
+    def comparable_with(self, other: "StreamingStats") -> str | None:
+        """None when paired deltas are valid, else the human-readable
+        reason they are not."""
+        if self.engine is None or other.engine is None:
+            return (
+                "no bootstrap replicate state (analytical ci_method); "
+                "use a bootstrap ci_method to enable paired comparisons"
+            )
+        a, b = self.engine, other.engine
+        if (a.stream_id(), a.n_boot, a.seed) != (
+            b.stream_id(), b.n_boot, b.seed
+        ):
+            return (
+                f"bootstrap streams differ: "
+                f"({a.stream_id()}, B={a.n_boot}, seed={a.seed}) vs "
+                f"({b.stream_id()}, B={b.n_boot}, seed={b.seed})"
+            )
+        if (self.chunk_size, self.n_examples) != (
+            other.chunk_size, other.n_examples
+        ):
+            return (
+                f"chunk layouts differ: "
+                f"(chunk={self.chunk_size}, n={self.n_examples}) vs "
+                f"(chunk={other.chunk_size}, n={other.n_examples})"
+            )
+        return None
 
 
 def streaming_ci(

@@ -1,0 +1,452 @@
+"""Device-resident statistics engine: kernel/host parity, chunked-partials
+merge laws, backend-selectable streaming aggregation, and the streaming
+paired-delta bootstrap (ISSUE 4 tentpole)."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+    compare_stream_stats,
+)
+from repro.data import iter_qa_examples
+from repro.ft import ChunkCrashMiddleware, Fault, SimulatedCrash
+from repro.kernels.bootstrap import (
+    bootstrap_means_ref,
+    bootstrap_partials,
+)
+from repro.stats import (
+    MetricAccumulator,
+    PallasBootstrapEngine,
+    bootstrap_engine_from_state,
+    make_bootstrap_engine,
+    replicate_p_value,
+    streaming_ci,
+)
+
+M_A = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+M_B = EngineModelConfig(provider="anthropic", model_name="claude-3-haiku")
+
+
+def _task(task_id="stream", backend="pallas", n_boot=200, **stream_kw):
+    return EvalTask(
+        task_id=task_id,
+        model=M_A,
+        inference=InferenceConfig(batch_size=32, n_workers=2, cache_dir=""),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=n_boot, ci_method="percentile",
+            backend=backend,
+        ),
+    ).with_streaming(**stream_kw)
+
+
+def _scores(n=500, m=3, nan_every=13, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, m))
+    if nan_every:
+        x[::nan_every, min(1, m - 1)] = np.nan
+    return x
+
+
+# -- kernel / ref parity -------------------------------------------------------
+
+
+def test_partials_ref_reduces_to_means_path():
+    """start=0, single NaN-free metric: partials must reproduce the
+    original means kernel's weight stream exactly."""
+    import jax.numpy as jnp
+
+    x = _scores(400, 1, nan_every=0)
+    swx, sw = bootstrap_partials(x, 42, 0, n_boot=64, mode="ref")
+    means = swx[:, 0] / np.maximum(sw[:, 0], 1.0)
+    ref = np.asarray(
+        bootstrap_means_ref(jnp.asarray(x[:, 0], jnp.float32), 64, 42)
+    )
+    np.testing.assert_allclose(means, ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,m,start", [(300, 2, 0), (500, 3, 1024), (70, 1, 7)])
+def test_partials_kernel_interpret_matches_ref(n, m, start):
+    x = _scores(n, m, nan_every=11, seed=n)
+    k_swx, k_sw = bootstrap_partials(x, 9, start, n_boot=64, mode="interpret")
+    r_swx, r_sw = bootstrap_partials(x, 9, start, n_boot=64, mode="ref")
+    np.testing.assert_allclose(k_swx, r_swx, rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(k_sw, r_sw, rtol=2e-5, atol=1e-3)
+
+
+def test_partials_nan_weight_exclusion():
+    """NaN scores carry zero weight for that metric only."""
+    x = np.array([[1.0, np.nan], [2.0, 5.0], [3.0, np.nan]])
+    swx, sw = bootstrap_partials(x, 3, 0, n_boot=32, mode="ref")
+    # metric 1 only ever sees example 1: every replicate mean is 5 (or
+    # empty when example 1 drew weight 0)
+    nonzero = sw[:, 1] > 0
+    np.testing.assert_allclose(swx[nonzero, 1] / sw[nonzero, 1], 5.0)
+    assert (sw[:, 1] <= sw[:, 0]).all()
+
+
+def test_partials_merge_law_partition_and_permutation():
+    """Weights are keyed by absolute position: partials over any chunking,
+    merged in any order, give the same replicates (float tolerance — the
+    summation order differs across partitions)."""
+    x = _scores(700, 2, nan_every=9)
+    full_swx, full_sw = bootstrap_partials(x, 5, 0, n_boot=128, mode="ref")
+    full = full_swx.astype(np.float64) / np.maximum(
+        full_sw.astype(np.float64), 1.0
+    )
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        cuts = sorted(rng.choice(np.arange(1, 700), size=4, replace=False))
+        bounds = [0, *cuts, 700]
+        parts = [
+            (lo, bootstrap_partials(x[lo:hi], 5, lo, n_boot=128, mode="ref"))
+            for lo, hi in zip(bounds, bounds[1:])
+        ]
+        rng.shuffle(parts)  # merge order must not matter
+        swx = np.zeros((128, 2), np.float64)
+        sw = np.zeros((128, 2), np.float64)
+        for _, (pswx, psw) in parts:
+            swx += pswx
+            sw += psw
+        np.testing.assert_allclose(
+            swx / np.maximum(sw, 1.0), full, rtol=1e-4, atol=1e-6
+        )
+
+
+def test_partials_identical_layout_bitwise_deterministic():
+    """Same chunk layout -> bit-identical partials (the crash/resume
+    guarantee rests on this)."""
+    x = _scores(600, 2)
+    for mode in ("ref", "interpret"):
+        a = bootstrap_partials(x[:256], 5, 0, n_boot=64, mode=mode)
+        b = bootstrap_partials(x[:256], 5, 0, n_boot=64, mode=mode)
+        assert (a[0] == b[0]).all() and (a[1] == b[1]).all()
+
+
+# -- engines -------------------------------------------------------------------
+
+
+def _fill_engine(engine, scores_by_metric, chunk=200):
+    n = len(next(iter(scores_by_metric.values())))
+    for lo in range(0, n, chunk):
+        part = engine.spawn()
+        part.update(
+            {m: v[lo:lo + chunk] for m, v in scores_by_metric.items()}, lo
+        )
+        engine.merge(part)
+    return engine
+
+
+def test_numpy_engine_bit_identical_to_per_metric_poisson_bootstrap():
+    """The engine draws the shared Philox block once and masks per metric;
+    results must equal M independent PoissonBootstrap updates bit-for-bit
+    (spill states from older runs of the same stream stay mergeable)."""
+    from repro.stats import PoissonBootstrap
+
+    rng = np.random.default_rng(11)
+    scores = {"a": rng.random(300), "b": rng.random(300)}
+    scores["b"][::7] = np.nan
+    engine = _fill_engine(
+        make_bootstrap_engine("numpy", 64, 5, ("a", "b")), scores, chunk=128
+    )
+    for j, m in enumerate(("a", "b")):
+        boot = PoissonBootstrap(64, seed=5)
+        for lo in range(0, 300, 128):
+            boot.update(scores[m][lo:lo + 128], lo)
+        assert (engine.sum_wx[:, j] == boot.sum_wx).all()
+        assert (engine.sum_w[:, j] == boot.sum_w).all()
+
+
+def test_pallas_engine_ci_within_mc_tolerance_of_numpy():
+    """Kernel counter-mixer stream vs host Philox stream: different RNGs,
+    same statistics — CI endpoints agree within Monte-Carlo noise."""
+    rng = np.random.default_rng(4)
+    scores = {"m": rng.random(1200)}
+    acc = MetricAccumulator()
+    acc.update(scores["m"])
+    ivs = {}
+    for backend in ("numpy", "pallas"):
+        engine = _fill_engine(
+            make_bootstrap_engine(backend, 1000, 0, ("m",)), scores
+        )
+        ivs[backend] = streaming_ci(acc, engine.view("m"), method="percentile")
+    width = ivs["numpy"].hi - ivs["numpy"].lo
+    assert ivs["pallas"].lo == pytest.approx(ivs["numpy"].lo, abs=0.5 * width)
+    assert ivs["pallas"].hi == pytest.approx(ivs["numpy"].hi, abs=0.5 * width)
+
+
+def test_pallas_interpret_engine_matches_cpu_stream():
+    """interpret=True kernel through the engine == the blocked jnp oracle
+    (same weight stream bit-for-bit)."""
+    rng = np.random.default_rng(6)
+    scores = {"a": rng.random(300), "b": rng.random(300)}
+
+    class InterpretEngine(PallasBootstrapEngine):
+        mode = "interpret"
+
+    ref = _fill_engine(
+        PallasBootstrapEngine(64, 3, ("a", "b")), scores, chunk=128
+    )
+    interp = _fill_engine(
+        InterpretEngine(64, 3, ("a", "b")), scores, chunk=128
+    )
+    np.testing.assert_allclose(ref.sum_wx, interp.sum_wx, rtol=2e-6)
+    np.testing.assert_allclose(ref.sum_w, interp.sum_w, rtol=2e-6)
+
+
+def test_engine_state_roundtrip_and_merge_guards():
+    rng = np.random.default_rng(5)
+    scores = {"a": rng.random(256), "b": rng.random(256)}
+    engine = _fill_engine(
+        make_bootstrap_engine("pallas", 64, 1, ("a", "b")), scores, chunk=100
+    )
+    clone = bootstrap_engine_from_state(engine.state())
+    assert (clone.sum_wx == engine.sum_wx).all()
+    assert (clone.sum_w == engine.sum_w).all()
+    with pytest.raises(ValueError, match="cannot merge"):
+        engine.merge(make_bootstrap_engine("numpy", 64, 1, ("a", "b")))
+    with pytest.raises(ValueError, match="cannot merge"):
+        engine.merge(make_bootstrap_engine("pallas", 64, 2, ("a", "b")))
+    with pytest.raises(ValueError, match="unknown statistics backend"):
+        make_bootstrap_engine("cuda", 64, 1, ("a",))
+
+
+def test_merge_state_rejects_cross_stream_partials():
+    """A spill written by the TPU kernel must not resume float-inexactly
+    through the CPU oracle (and vice versa)."""
+    engine = PallasBootstrapEngine(32, 0, ("a",))
+    state = engine.spawn().state()
+    assert state["stream"] == "pallas-ref"  # CPU test environment
+    state["stream"] = "pallas-kernel"       # as if written on a TPU host
+    with pytest.raises(ValueError, match="cannot merge"):
+        engine.merge_state(state)
+
+
+def test_resume_cross_platform_partials_raise_manifest_mismatch():
+    """The designed cross-platform resume refusal surfaces as the
+    documented non-reusable-spill error, not a bare ValueError."""
+    from repro.core import ManifestMismatch
+    from repro.core.streaming import StreamingPipeline
+
+    engine = PallasBootstrapEngine(16, 0, ("a",))
+    state = engine.spawn().state()
+    state["stream"] = "pallas-kernel"  # spilled on a TPU host
+    acc = MetricAccumulator()
+    acc.update(np.ones(4))
+    row = {"metrics": {"a": acc.state()}, "boot": state}
+    with pytest.raises(ManifestMismatch, match="platform that wrote"):
+        StreamingPipeline._merge_committed(
+            row, {"a": MetricAccumulator()}, engine, [], {},
+            {"calls": 0, "total_cost": 0.0, "pool": {}}, {},
+        )
+
+
+def test_partials_empty_chunk_returns_zero_partials():
+    for mode in ("ref", "interpret"):
+        swx, sw = bootstrap_partials(
+            np.zeros((0, 2)), 0, 0, n_boot=16, mode=mode
+        )
+        assert swx.shape == (16, 2)
+        assert not swx.any() and not sw.any()
+
+
+def test_replicate_p_value_extremes():
+    assert replicate_p_value(np.full(99, 3.0)) == pytest.approx(0.02)
+    assert replicate_p_value(np.array([])) == 1.0
+    sym = np.concatenate([np.arange(-50, 0), np.arange(1, 51)])
+    assert replicate_p_value(sym) > 0.9
+
+
+# -- streaming pipeline integration --------------------------------------------
+
+
+def test_streaming_run_pallas_backend_matches_numpy_within_tolerance():
+    results = {}
+    for backend in ("numpy", "pallas"):
+        with EvalSession() as session:
+            results[backend] = session.run_task(
+                iter_qa_examples(400, seed=3),
+                _task(backend=backend, n_boot=500, max_memory_rows=128),
+            )
+    for m in ("exact_match", "token_f1"):
+        nv, pv = results["numpy"].metrics[m], results["pallas"].metrics[m]
+        assert pv.value == pytest.approx(nv.value, abs=1e-12)  # exact mean
+        width = max(nv.ci[1] - nv.ci[0], 1e-6)
+        assert pv.ci[0] == pytest.approx(nv.ci[0], abs=0.75 * width)
+        assert pv.ci[1] == pytest.approx(nv.ci[1], abs=0.75 * width)
+    log = results["pallas"].logs["streaming"]
+    assert log["stats_backend"] == "pallas"
+    ss = results["pallas"].stream_stats
+    assert ss is not None and ss.engine.backend == "pallas"
+    assert ss.n_examples == 400
+
+
+def test_concurrent_executor_pallas_backend_bit_identical_to_serial():
+    """Chunk workers drive the jitted partials path from several threads;
+    ordered merging must still reproduce the serial bytes."""
+    with EvalSession() as session:
+        serial = session.run_task(
+            iter_qa_examples(300, seed=8),
+            _task(backend="pallas", max_memory_rows=64),
+        )
+    with EvalSession() as session:
+        conc = session.run_task(
+            iter_qa_examples(300, seed=8),
+            _task(backend="pallas", max_memory_rows=64, concurrency=3),
+        )
+    for m, mv in serial.metrics.items():
+        assert conc.metrics[m].value == mv.value
+        assert conc.metrics[m].ci == mv.ci
+    assert (
+        conc.stream_stats.engine.sum_wx == serial.stream_stats.engine.sum_wx
+    ).all()
+
+
+def test_streaming_suite_paired_comparison_resolves_small_diff():
+    """The paired-delta CI must be far tighter than the per-model CIs —
+    that is the entire value of sharing weight streams."""
+    task = _task(backend="pallas", n_boot=400, max_memory_rows=64)
+    suite = (
+        EvalSuite("paired")
+        .add_task(task, lambda: iter_qa_examples(300, seed=12))
+        .sweep_models([M_A, M_B])
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no opt-out, no incompatibility
+        with EvalSession() as session:
+            res = session.run_suite(suite)
+    cmp = res.comparison("stream", "token_f1", *res.models)
+    assert cmp.test.test == "paired_bootstrap"
+    assert cmp.diff_ci[0] <= cmp.diff <= cmp.diff_ci[1]
+    ra = res.result(res.models[0], "stream")
+    per_model_width = (
+        ra.metrics["token_f1"].ci[1] - ra.metrics["token_f1"].ci[0]
+    )
+    assert (cmp.diff_ci[1] - cmp.diff_ci[0]) < per_model_width
+
+
+def test_compare_stream_stats_rejects_mismatched_streams():
+    with EvalSession() as session:
+        r1 = session.run_task(
+            iter_qa_examples(200, seed=3),
+            _task(backend="pallas", max_memory_rows=64),
+        )
+    with EvalSession() as session:
+        r2 = session.run_task(
+            iter_qa_examples(200, seed=3),
+            _task(backend="numpy", max_memory_rows=64),
+        )
+    reason = r1.stream_stats.comparable_with(r2.stream_stats)
+    assert reason is not None and "streams differ" in reason
+    with pytest.raises(ValueError, match="not paired-comparable"):
+        compare_stream_stats("token_f1", r1.stream_stats, r2.stream_stats)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_paired_comparison_bit_identical_across_resume(tmp_path, backend):
+    """Acceptance: a crash-resumed two-model streaming suite reproduces the
+    uninterrupted Comparison matrix bit-for-bit."""
+    def suite_for(spill):
+        task = _task(
+            backend=backend, n_boot=200, max_memory_rows=50,
+            spill_dir=str(spill),
+        )
+        return (
+            EvalSuite("resume")
+            .add_task(task, lambda: iter_qa_examples(250, seed=9))
+            .sweep_models([M_A, M_B])
+        )
+
+    with EvalSession() as session:
+        ref = session.run_suite(suite_for(tmp_path / "ref"))
+
+    crash = ChunkCrashMiddleware([Fault(shard=2, attempt=1)])
+    with EvalSession(middleware=[crash]) as session:
+        with pytest.raises(SimulatedCrash):
+            session.run_suite(suite_for(tmp_path / "run"))
+    with EvalSession() as session:
+        res = session.run_suite(suite_for(tmp_path / "run"))
+    # some chunks were merged from the spill manifest, not recomputed
+    assert any(
+        r.logs["streaming"]["n_resumed_chunks"] > 0
+        for r in res.results.values()
+    )
+
+    for metric in ("exact_match", "token_f1"):
+        c_ref = ref.comparison("stream", metric, *ref.models)
+        c_res = res.comparison("stream", metric, *res.models)
+        assert c_res.diff == c_ref.diff
+        assert c_res.diff_ci == c_ref.diff_ci
+        assert c_res.test.p_value == c_ref.test.p_value
+        assert c_res.test.statistic == c_ref.test.statistic
+        assert c_res.effect.value == c_ref.effect.value
+    for key, r in res.results.items():
+        for m, mv in r.metrics.items():
+            assert mv.value == ref.results[key].metrics[m].value
+            assert mv.ci == ref.results[key].metrics[m].ci
+
+
+# -- satellite regressions -----------------------------------------------------
+
+
+def test_lexical_normalization_memoized():
+    from repro.metrics import lexical
+
+    lexical._normalize_cached.cache_clear()
+    lexical._norm_tokens_cached.cache_clear()
+    preds = [f"The Answer {i}!" for i in range(50)]
+    refs = [f"answer {i}" for i in range(50)]
+    out = {}
+    for name in ("exact_match", "token_f1", "rouge_l"):
+        out[name] = lexical.batch_lexical(name, preds, refs)
+    # token_f1 and rouge_l share one tokenization per distinct string
+    assert lexical._norm_tokens_cached.cache_info().hits >= 2 * len(preds)
+    # memoized results match fresh scalar computation
+    assert out["token_f1"][3] == pytest.approx(
+        lexical.token_f1("The Answer 3!", "answer 3")
+    )
+    assert out["exact_match"].mean() == pytest.approx(1.0)
+    # oversized strings bypass the cache (no heap pinning) but score the same
+    long_pred = "word " * 300  # > _MEMO_MAX_LEN chars
+    before = lexical._norm_tokens_cached.cache_info().currsize
+    assert lexical.token_f1(long_pred, "word") > 0.0
+    assert lexical._norm_tokens_cached.cache_info().currsize <= before + 1
+
+
+def test_score_stage_caches_metric_resolution(monkeypatch):
+    import repro.core.stages as stages_mod
+    from repro.core.stages import ScoreStage
+
+    calls = {"n": 0}
+    real = stages_mod.resolve_metrics
+
+    def counting(cfgs):
+        calls["n"] += 1
+        return real(cfgs)
+
+    monkeypatch.setattr(stages_mod, "resolve_metrics", counting)
+    stage = ScoreStage()
+    task = _task(max_memory_rows=32)
+
+    class _Session:
+        judge_engine = None
+
+    from repro.core.stages import EvalArtifact
+
+    for lo in range(0, 128, 32):  # four "chunks" through one stage object
+        art = EvalArtifact(
+            rows=[{"reference": f"r{i}"} for i in range(lo, lo + 32)],
+            task=task,
+        )
+        art.texts = [f"r{i}" for i in range(lo, lo + 32)]
+        stage.run(art, _Session())
+    assert calls["n"] == 1

@@ -310,14 +310,36 @@ def test_streaming_task_in_suite_with_callable_source(tmp_path):
         .sweep_models([M, m_b])
     )
     with EvalSession() as session:
-        with pytest.warns(UserWarning, match="streaming tasks opt out"):
-            res = session.run_suite(suite)
+        res = session.run_suite(suite)
     assert len(res.results) == 2
     for label in res.models:
         r = res.result(label, "stream")
         assert r.logs["streaming"]["n_examples"] == 150
         assert set(r.metrics) == {"exact_match", "token_f1"}
-    # no per-example scores -> no pairwise comparisons, but the suite runs
+        assert not r.scores  # per-example scores still never materialized
+    # streaming tasks no longer opt out of pairwise significance: the
+    # paired-delta bootstrap over shared weight streams fills the matrix
+    for metric in ("exact_match", "token_f1"):
+        cmp = res.comparison("stream", metric, *res.models)
+        assert cmp.test.test == "paired_bootstrap"
+        assert cmp.n == 150
+        assert 0.0 < cmp.test.p_value <= 1.0
+        assert cmp.diff_ci[0] <= cmp.diff <= cmp.diff_ci[1]
+
+
+def test_streaming_suite_analytical_ci_warns_no_replicates():
+    m_b = EngineModelConfig(provider="anthropic", model_name="claude-3-haiku")
+    suite = (
+        EvalSuite("stream-suite")
+        .add_task(
+            _task(ci_method="analytical", max_memory_rows=64),
+            lambda: iter_qa_examples(120, seed=5),
+        )
+        .sweep_models([M, m_b])
+    )
+    with EvalSession() as session:
+        with pytest.warns(UserWarning, match="not paired-comparable"):
+            res = session.run_suite(suite)
     assert res.comparisons == {"stream": {}}
 
 
