@@ -34,6 +34,7 @@ def main() -> None:
         coverage,
         kernels_bench,
         scaling,
+        serving_throughput,
         streaming_scale,
         suite_overhead,
         throughput,
@@ -66,6 +67,9 @@ def main() -> None:
             smoke=smoke, full=args.full
         ),
         "bootstrap_stats": lambda: bootstrap_stats.run(smoke=smoke),
+        "serving_throughput": lambda: serving_throughput.run(
+            smoke=smoke, full=args.full
+        ),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 

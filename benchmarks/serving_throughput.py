@@ -1,0 +1,239 @@
+"""Shared inference-service benchmark (ISSUE 5 tentpole).
+
+Two workloads against the lock-step baseline (``use_service=False`` — the
+pre-service code path, kept verbatim as ``LockStepInferStage``):
+
+* **multi-task continuous batching** — M streaming tasks share one
+  simulated slot engine (``SimulatedSlotEngine``: n_slots decode slots,
+  fixed per-step wall cost, long-tail output lengths).  Lock-step decodes
+  a gang per call and serializes concurrent callers behind the engine
+  lock, so slots idle whenever a gang is short or skewed; the service's
+  persistent batcher loop refills slots across shards, chunks and tasks.
+  Acceptance: **>= 2x wall-clock** with byte-identical metrics, plus the
+  cross-task slot-occupancy the lock-step path cannot reach.
+* **single-flight dedup** — one streaming task whose chunks repeat the
+  same 60 prompts (cache disabled, all chunks in flight at once): every
+  in-flight duplicate coalesces onto the leader's engine call.
+  Acceptance: **>= 90% dedup** (coalesced / submitted) where the
+  lock-step baseline pays for every repeat.
+
+Emits ``BENCH_serving.json``.
+
+  PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+)
+from repro.data import iter_qa_examples, qa_examples
+
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+API_MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+
+#: slot engine: 8 decode slots, 0.4ms per step, skewed output lengths —
+#: the regime where lock-step gangs pay the straggler price every wave
+SLOT_KW = {"n_slots": 8, "step_ms": 0.4, "wall_clock": True,
+           "min_out": 4, "max_out": 48}
+#: API engine for the dedup workload: flat 60ms calls — wide enough that
+#: every chunk worker's submissions land while the leaders are still in
+#: flight even on a loaded CI machine
+API_KW = {"wall_clock": True, "base_latency_ms": 60.0, "per_token_ms": 0.0}
+
+
+def _task(task_id: str, *, model, use_service: bool, n_workers: int,
+          chunk: int, window: int) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=model,
+        inference=InferenceConfig(
+            batch_size=16, n_workers=n_workers, cache_dir="",
+            use_service=use_service,
+        ),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    ).with_streaming(max_memory_rows=chunk, max_inflight_chunks=window)
+
+
+def _metric_dict(res) -> dict:
+    return {
+        m: {"value": mv.value, "ci": list(mv.ci), "n": mv.n}
+        for m, mv in res.metrics.items()
+    }
+
+
+def _multi_task(n_per_task: int, n_tasks: int, chunk: int, window: int) -> dict:
+    def build_suite(use_service: bool) -> EvalSuite:
+        suite = EvalSuite("serving")
+        for t in range(n_tasks):
+            suite.add_task(
+                _task(
+                    f"serve-{t}", model=SLOT_MODEL,
+                    use_service=use_service, n_workers=4,
+                    chunk=chunk, window=window,
+                ),
+                (lambda t=t: iter_qa_examples(n_per_task, seed=100 + t)),
+            )
+        return suite
+
+    def run(use_service: bool) -> dict:
+        t0 = time.perf_counter()
+        with EvalSession(engine_kwargs=SLOT_KW) as session:
+            res = session.run_suite(
+                build_suite(use_service),
+                parallel_jobs=n_tasks if use_service else 1,
+            )
+            serving = session.serving_stats()
+        wall = time.perf_counter() - t0
+        metrics = {
+            task_id: _metric_dict(res.result(SLOT_MODEL.model_name, task_id))
+            for task_id in res.tasks
+        }
+        out = {"wall_s": wall, "metrics": metrics}
+        if serving:
+            snap = serving[0]
+            out["service"] = {
+                k: snap.get(k)
+                for k in ("mode", "dispatchers", "submitted", "dispatched",
+                          "coalesced", "dedup_rate")
+            }
+            if "batcher" in snap:
+                out["batcher"] = snap["batcher"]
+        return out
+
+    baseline = run(False)
+    service = run(True)
+    n_total = n_per_task * n_tasks
+    return {
+        "n_tasks": n_tasks,
+        "n_examples_total": n_total,
+        "engine": {"model": SLOT_MODEL.model_name, **SLOT_KW},
+        "baseline_wall_s": baseline["wall_s"],
+        "service_wall_s": service["wall_s"],
+        "speedup": baseline["wall_s"] / service["wall_s"],
+        "slot_occupancy": service.get("batcher", {}).get("slot_occupancy"),
+        "tokens_per_step": service.get("batcher", {}).get("tokens_per_step"),
+        "metrics_identical": baseline["metrics"] == service["metrics"],
+        "service": service.get("service"),
+    }
+
+
+def _dedup(n_unique: int, repeats: int, n_workers: int) -> dict:
+    unique = qa_examples(n_unique, seed=7)
+    rows = [r for _ in range(repeats) for r in unique]  # chunk = unique set
+
+    def run(use_service: bool) -> dict:
+        task = _task(
+            "dedup", model=API_MODEL, use_service=use_service,
+            n_workers=n_workers, chunk=n_unique, window=repeats,
+        )
+        t0 = time.perf_counter()
+        with EvalSession(engine_kwargs=API_KW) as session:
+            res = session.run_task(iter(rows), task)
+            acct = dataclasses.asdict(session.accounting)
+            serving = session.serving_stats()
+        return {
+            "wall_s": time.perf_counter() - t0,
+            "engine_calls": acct["engine_calls"],
+            "coalesced": acct["coalesced_requests"],
+            "metrics": _metric_dict(res),
+            "service": serving[0] if serving else {},
+        }
+
+    baseline = run(False)
+    service = run(True)
+    svc = service["service"]
+    return {
+        "n_rows": len(rows),
+        "n_unique_prompts": n_unique,
+        "engine": {"model": API_MODEL.model_name, **API_KW},
+        "baseline_engine_calls": baseline["engine_calls"],
+        "service_engine_calls": service["engine_calls"],
+        "coalesced": service["coalesced"],
+        "dedup_rate": svc.get("dedup_rate", 0.0),
+        "baseline_wall_s": baseline["wall_s"],
+        "service_wall_s": service["wall_s"],
+        "metrics_identical": baseline["metrics"] == service["metrics"],
+    }
+
+
+def run(*, smoke: bool = False, full: bool = False) -> list[str]:
+    if smoke:
+        n_per_task, n_tasks, chunk, window = 100, 3, 25, 4
+        n_unique, repeats, n_workers = 60, 16, 8
+    elif full:
+        n_per_task, n_tasks, chunk, window = 600, 4, 75, 8
+        n_unique, repeats, n_workers = 120, 16, 8
+    else:
+        n_per_task, n_tasks, chunk, window = 250, 3, 50, 4
+        n_unique, repeats, n_workers = 60, 16, 8
+
+    lines = []
+    mt = _multi_task(n_per_task, n_tasks, chunk, window)
+    lines.append(
+        f"serving_multi_task,{mt['service_wall_s'] * 1e6 / mt['n_examples_total']:.1f},"
+        f"speedup={mt['speedup']:.2f}x "
+        f"occupancy={mt['slot_occupancy']} "
+        f"tok/step={mt['tokens_per_step']} "
+        f"identical={mt['metrics_identical']}"
+    )
+    de = _dedup(n_unique, repeats, n_workers)
+    lines.append(
+        f"serving_dedup,{de['service_wall_s'] * 1e6 / de['n_rows']:.1f},"
+        f"dedup={de['dedup_rate']:.1%} "
+        f"calls={de['service_engine_calls']}/{de['baseline_engine_calls']} "
+        f"identical={de['metrics_identical']}"
+    )
+
+    ok = (
+        mt["speedup"] >= 2.0
+        and mt["metrics_identical"]
+        and de["dedup_rate"] >= 0.9
+        and de["metrics_identical"]
+    )
+    payload = {
+        "mode": "smoke" if smoke else ("full" if full else "default"),
+        "multi_task": mt,
+        "dedup": de,
+        "speedup": mt["speedup"],
+        "dedup_rate": de["dedup_rate"],
+        "ok": ok,
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    lines.append(
+        f"serving_accept,0,speedup={mt['speedup']:.2f}x "
+        f"dedup={de['dedup_rate']:.1%} ok={ok}"
+    )
+    if not ok:
+        raise RuntimeError(f"serving acceptance checks failed: {payload}")
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    for line in run(smoke=args.smoke, full=args.full):
+        print(line)
+    print("wrote BENCH_serving.json")
+
+
+if __name__ == "__main__":
+    main()

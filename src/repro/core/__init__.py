@@ -22,12 +22,14 @@ from repro.core.config import (
     cache_key,
 )
 from repro.core.engines import (
+    BatcherStats,
     EngineRegistry,
     InferenceEngine,
     InferenceRequest,
     InferenceResponse,
     LocalJaxEngine,
     SimulatedAPIEngine,
+    SimulatedSlotEngine,
     api_cost,
     create_engine,
     get_engine,
@@ -35,6 +37,7 @@ from repro.core.engines import (
 )
 from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
 from repro.core.runner import EvalRunner
+from repro.core.service import InferenceService, ServiceStats, ServiceTicket
 from repro.core.session import EvalSession, SessionAccounting
 from repro.core.stages import (
     AggregateStage,
@@ -43,6 +46,7 @@ from repro.core.stages import (
     EvalArtifact,
     EvalResult,
     InferStage,
+    LockStepInferStage,
     MetricValue,
     Middleware,
     PrepareStage,
@@ -68,11 +72,13 @@ __all__ = [
     "CostBudgetExceeded", "CostBudgetMiddleware",
     "DataConfig", "EngineModelConfig", "EngineRegistry", "EvalArtifact",
     "EvalResult", "EvalRunner", "EvalSession", "EvalSuite", "EvalTask",
-    "InferStage", "InferenceConfig", "InferenceEngine", "InferenceRequest",
-    "InferenceResponse", "LocalJaxEngine", "ManifestMismatch", "MetricConfig",
+    "BatcherStats", "InferStage", "InferenceConfig", "InferenceEngine",
+    "InferenceRequest", "InferenceResponse", "InferenceService",
+    "LocalJaxEngine", "LockStepInferStage", "ManifestMismatch", "MetricConfig",
     "MetricValue", "Middleware", "PrepareStage", "ProgressMiddleware",
     "ResponseCache", "RunTracker", "ScoreStage", "SessionAccounting",
-    "SimulatedAPIEngine", "Stage", "StaticResponsesStage", "StatisticsConfig",
+    "ServiceStats", "ServiceTicket", "SimulatedAPIEngine",
+    "SimulatedSlotEngine", "Stage", "StaticResponsesStage", "StatisticsConfig",
     "StreamingConfig", "StreamingPipeline", "SuiteJob", "SuiteResult",
     "TokenBucket", "TrackingMiddleware", "api_cost",
     "cache_key", "compare_results", "compare_scores", "compare_stream_stats",

@@ -48,6 +48,15 @@ class InferenceConfig:
     # straggler mitigation (ft/)
     speculative_reissue: bool = False
     straggler_factor: float = 3.0
+    # shared asynchronous inference service (core/service.py):
+    # use_service=False restores the legacy lock-step per-shard path
+    use_service: bool = True
+    #: outstanding-request bound before submit blocks (backpressure)
+    service_queue_depth: int = 256
+    #: single-flight coalescing of identical in-flight cache keys
+    coalesce: bool = True
+    #: batch-formation window for a cold batcher loop (slot engines only)
+    max_batch_wait_ms: float = 2.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,12 @@ For the local JAX engine the same mechanism is *admission control*: the
 "token" budget becomes the KV-residency/step quota of the continuous
 batching scheduler (DESIGN.md §2).
 
+Since the shared :class:`~repro.core.service.InferenceService`, acquisition
+happens centrally in the service dispatchers (immediately before the engine
+call) rather than in per-worker pipeline threads — the limiter objects are
+unchanged, but the ``worker`` index is now the dispatcher index, so budget
+redistribution follows actual dispatch demand.
+
 The clock is injectable so tests run deterministically without sleeping.
 """
 
@@ -109,7 +115,10 @@ class AdaptiveLimiter:
         return self.buckets[worker].acquire(estimated_tokens)
 
     def shares(self) -> list[float]:
-        return [b.r * self.n / self.rpm / self.n for b in self.buckets]
+        """Fraction of the global budget currently granted to each worker
+        (sums to 1 — the rebalance weights are a convex combination of the
+        even split and the demand distribution)."""
+        return [b.r / self.rpm for b in self.buckets]
 
     def _maybe_rebalance(self) -> None:
         with self._lock:
@@ -127,7 +136,17 @@ class AdaptiveLimiter:
                     for d in demand
                 ]
                 for b, w in zip(self.buckets, weights):
-                    b.r = self.rpm * w
-                    b.t = self.tpm * w
+                    # non-blocking: a worker mid-acquire may be *sleeping*
+                    # with its bucket lock held, and we hold the limiter
+                    # lock that every acquire passes through — blocking
+                    # here would stall all workers for the sleep duration.
+                    # A busy bucket keeps its old grant until the next
+                    # window (bounded, self-repairing overshoot).
+                    if b._lock.acquire(blocking=False):
+                        try:
+                            b.r = self.rpm * w
+                            b.t = self.tpm * w
+                        finally:
+                            b._lock.release()
             self._last_counts = [b.acquires for b in self.buckets]
             self._last_rebalance = now

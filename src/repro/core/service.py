@@ -1,0 +1,525 @@
+"""Shared asynchronous inference service: cross-task continuous batching
+with single-flight request coalescing.
+
+Before this module, inference was lock-step per shard: every pipeline
+stage blocked on its own ``engine.infer`` calls, the local JAX engine
+serialized concurrent callers behind one lock (decode slots idling
+whenever a caller's batch had fewer requests than slots), and two
+concurrent chunk workers that missed the cache on the same prompt both
+paid for the call — the duplicate-spend the content-addressable cache
+exists to prevent, leaking back in through concurrency.  The service
+inverts control: tasks, chunks, models and suites **submit**
+:class:`~repro.core.engines.InferenceRequest` objects and get tickets
+(futures) back; dispatch happens centrally —
+
+* **single-flight coalescing** — identical in-flight cache keys share ONE
+  engine call.  The first submitter is the *primary* (its shard is
+  charged the call, the cost, the tokens, and the cache write); later
+  submitters become waiters on the same flight and are counted as
+  ``coalesced``.  The cache prevents duplicate spend across time;
+  single-flight closes the concurrency window the cache cannot see.
+* **central admission** — the per-task rate limiter is acquired by the
+  dispatcher immediately before the engine call, not by worker threads
+  sleeping inside the pipeline, so budget flows to whatever is runnable.
+* **continuous batching** — engines exposing the slot-streaming interface
+  (``supports_streaming``: the local JAX engine, the simulated slot
+  engine) are driven by ONE persistent batcher loop: queued prompts are
+  admitted into decode slots as slots free, so batches form across
+  shards, chunks, tasks and suites instead of inside one shard.
+  API-style engines get a dispatcher-thread pool instead, sized by the
+  pipeline stages currently attached (K concurrent chunk workers with
+  ``n_workers`` each get ~K x n_workers overlapping calls, matching the
+  lock-step path's aggregate concurrency).
+
+Determinism contract: responses are a pure function of the request key
+(prompt, model, provider, temperature, max_tokens) — simulated engines by
+construction, the local engine because greedy decode at temperature 0 is
+batch-composition independent.  Coalescing therefore never changes a
+response byte; it only changes how many engine calls paid for it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+from repro.core.engines import (
+    InferenceEngine,
+    InferenceRequest,
+    InferenceResponse,
+    is_recoverable,
+    retry_with_backoff,
+)
+from repro.core.ratelimit import AdaptiveLimiter
+
+_SENTINEL = object()
+
+
+class _Flight:
+    """One engine call and its waiters (single-flight unit)."""
+
+    __slots__ = ("key", "event", "response", "exc", "attempts")
+
+    def __init__(self, key: str):
+        self.key = key
+        self.event = threading.Event()
+        self.response: InferenceResponse | None = None
+        self.exc: BaseException | None = None
+        self.attempts = 0
+
+
+class ServiceTicket:
+    """Future for one submitted request.  ``primary`` is True for the
+    submission that owns the engine call (and therefore the spend); a
+    coalesced follower shares the response but owns nothing."""
+
+    __slots__ = ("_flight", "primary")
+
+    def __init__(self, flight: _Flight, primary: bool):
+        self._flight = flight
+        self.primary = primary
+
+    def done(self) -> bool:
+        return self._flight.event.is_set()
+
+    @property
+    def attempts(self) -> int:
+        """Engine-call attempts the flight took (retries included)."""
+        return self._flight.attempts
+
+    def result(self, timeout: float | None = None) -> InferenceResponse:
+        if not self._flight.event.wait(timeout):
+            raise TimeoutError(
+                f"inference ticket not resolved within {timeout}s"
+            )
+        if self._flight.exc is not None:
+            raise self._flight.exc
+        assert self._flight.response is not None
+        return self._flight.response
+
+
+@dataclasses.dataclass
+class _Submission:
+    flight: _Flight
+    request: InferenceRequest
+    limiter: Any
+    est_tokens: float
+    max_retries: int
+    retry_delay: float
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    coalesced: int = 0
+    dispatched: int = 0   # engine-call attempts actually issued
+    completed: int = 0
+    retries: int = 0
+    errors: int = 0
+
+    @property
+    def dedup_rate(self) -> float:
+        return self.coalesced / self.submitted if self.submitted else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "dispatched": self.dispatched,
+            "coalesced": self.coalesced,
+            "completed": self.completed,
+            "retries": self.retries,
+            "errors": self.errors,
+            "dedup_rate": round(self.dedup_rate, 4),
+        }
+
+
+class InferenceService:
+    """Session-owned asynchronous dispatch front for one engine.
+
+    ``submit`` never blocks on inference (only on queue backpressure at
+    ``queue_depth`` outstanding requests); ``ServiceTicket.result``
+    gathers.  Construction is cheap — dispatcher threads start lazily on
+    first use and are joined by :meth:`close`.
+    """
+
+    #: absolute ceiling on dispatcher threads per service (the rate
+    #: limiter, not the thread count, is the real admission control)
+    HARD_MAX_DISPATCHERS = 128
+
+    def __init__(
+        self,
+        engine: InferenceEngine,
+        *,
+        queue_depth: int = 256,
+        coalesce: bool = True,
+        max_batch_wait_ms: float = 2.0,
+        n_dispatchers: int = 4,
+        sleep: Callable[[float], None] = time.sleep,
+        name: str = "",
+    ):
+        self.engine = engine
+        self.coalesce = coalesce
+        self.max_batch_wait_ms = max_batch_wait_ms
+        self.name = name
+        self.stats = ServiceStats()
+        self._sleep = sleep
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_depth))
+        self._inflight: dict[str, _Flight] = {}
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._base_dispatchers = max(1, n_dispatchers)
+        self._attached = 0
+        self._closed = False
+        self._broken: BaseException | None = None
+        self._streaming = bool(getattr(engine, "supports_streaming", False))
+        self._wake = threading.Event()
+        self._uniq = itertools.count()
+
+    # -- capacity ---------------------------------------------------------------
+
+    def attach(self, n_workers: int = 1) -> None:
+        """A pipeline stage is about to submit: size the dispatch pool for
+        its configured parallelism.  Batcher-mode engines need no threads
+        beyond the loop — decode slots are the parallelism."""
+        with self._lock:
+            self._check_open()
+            self._attached += max(1, n_workers)
+            self._ensure_dispatchers()
+
+    def detach(self, n_workers: int = 1) -> None:
+        with self._lock:
+            self._attached = max(0, self._attached - max(1, n_workers))
+            # threads never shrink: idle dispatchers just block on the queue
+
+    def _target_threads(self) -> int:
+        if self._streaming:
+            return 1
+        return min(
+            self.HARD_MAX_DISPATCHERS,
+            max(self._base_dispatchers, self._attached),
+        )
+
+    def _ensure_dispatchers(self) -> None:  # caller holds self._lock
+        target = self._target_threads()
+        while len(self._threads) < target:
+            idx = len(self._threads)
+            t = threading.Thread(
+                target=self._batcher_loop if self._streaming
+                else self._dispatch_loop,
+                args=() if self._streaming else (idx,),
+                name=f"infer-service-{self.name or 'engine'}-{idx}",
+                daemon=True,
+            )
+            self._threads.append(t)
+            t.start()
+
+    # -- submission --------------------------------------------------------------
+
+    def submit(
+        self,
+        request: InferenceRequest,
+        *,
+        key: str | None = None,
+        coalesce: bool | None = None,
+        limiter: Any = None,
+        est_tokens: float = 0.0,
+        max_retries: int = 0,
+        retry_delay: float = 1.0,
+    ) -> ServiceTicket:
+        """Enqueue a request; returns a :class:`ServiceTicket` immediately.
+
+        ``key`` is the content-addressable identity of the request (the
+        response-cache key); identical in-flight keys coalesce into one
+        engine call unless coalescing is off.  ``limiter`` (an
+        :class:`~repro.core.ratelimit.AdaptiveLimiter` or a list of
+        :class:`~repro.core.ratelimit.TokenBucket`) is acquired by the
+        dispatcher right before the engine call."""
+        do_coalesce = self.coalesce if coalesce is None else coalesce
+        if key is None:
+            do_coalesce = False
+            key = f"~uniq-{next(self._uniq)}"
+        with self._lock:
+            self._check_open()
+            self.stats.submitted += 1
+            if do_coalesce:
+                flight = self._inflight.get(key)
+                if flight is not None:
+                    self.stats.coalesced += 1
+                    return ServiceTicket(flight, primary=False)
+            flight = _Flight(key)
+            if do_coalesce:
+                self._inflight[key] = flight
+            self._ensure_dispatchers()
+        # outside the lock: a full queue blocks the submitter (backpressure),
+        # never the dispatchers
+        self._queue.put(
+            _Submission(
+                flight, request, limiter, est_tokens, max_retries, retry_delay
+            )
+        )
+        self._wake.set()
+        with self._lock:
+            closed_now = self._closed or self._broken is not None
+        if closed_now:
+            # close() (or a dispatcher crash) may have drained the queue
+            # between our open-check and the put: nobody will read this
+            # submission, so fail it — and any fellow stragglers — rather
+            # than strand the waiters.  During normal operation this
+            # branch is unreachable.
+            self._drain_queue(exc=RuntimeError("InferenceService closed"))
+        return ServiceTicket(flight, primary=True)
+
+    def note_coalesced(self, n: int = 1) -> None:
+        """Record submissions deduplicated *before* reaching the service
+        (e.g. a stage reusing its own ticket for a repeated key), so
+        service-level dedup counters reflect total demand."""
+        with self._lock:
+            self.stats.submitted += n
+            self.stats.coalesced += n
+
+    # -- dispatch ---------------------------------------------------------------
+
+    def _admit(self, sub: _Submission, widx: int) -> None:
+        lim = sub.limiter
+        if lim is None:
+            return
+        if isinstance(lim, AdaptiveLimiter):
+            lim.acquire(widx % lim.n, sub.est_tokens)
+        elif isinstance(lim, (list, tuple)):
+            lim[widx % len(lim)].acquire(sub.est_tokens)
+        else:
+            lim.acquire(sub.est_tokens)
+
+    def _resolve(
+        self,
+        flight: _Flight,
+        response: InferenceResponse | None = None,
+        exc: BaseException | None = None,
+    ) -> None:
+        with self._lock:
+            self._inflight.pop(flight.key, None)
+            self.stats.completed += 1
+            self.stats.retries += max(0, flight.attempts - 1)
+            if exc is not None or (
+                response is not None and response.error is not None
+            ):
+                self.stats.errors += 1
+        flight.response = response
+        flight.exc = exc
+        flight.event.set()
+
+    def _dispatch_loop(self, widx: int) -> None:
+        """Thread-pool dispatch for API-style engines: one request per
+        engine call, retries via :func:`retry_with_backoff`.
+
+        After each call the loop opportunistically drains further queued
+        submissions without re-blocking — one condition-variable wakeup
+        can serve a whole burst, which matters for fast engines where the
+        wakeup itself dominates.  Exactly one stop sentinel is consumed
+        per dispatcher (the loop returns the moment it sees one), so
+        every dispatcher thread still shuts down."""
+        while True:
+            item = self._queue.get()
+            while True:
+                if item is _SENTINEL:
+                    return
+                sub: _Submission = item
+                flight = sub.flight
+                try:
+                    self._admit(sub, widx)
+
+                    def _call(sub=sub, flight=flight) -> InferenceResponse:
+                        flight.attempts += 1
+                        with self._lock:
+                            self.stats.dispatched += 1
+                        return self.engine.infer(sub.request)
+
+                    resp = retry_with_backoff(
+                        _call,
+                        max_retries=sub.max_retries,
+                        base_delay=sub.retry_delay,
+                        sleep=self._sleep,
+                    )
+                    self._resolve(flight, resp)
+                except BaseException as e:  # noqa: BLE001 — waiters must wake
+                    self._resolve(flight, exc=e)
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+
+    def _batcher_loop(self) -> None:
+        """Persistent continuous-batching loop for slot-streaming engines:
+        admit queued prompts into decode slots as slots free, step, deliver
+        completions — one loop for every task the session runs.
+
+        Recoverable errors re-admit with exponential backoff through a
+        scheduled-retry list (the loop itself must never sleep — other
+        slots are decoding); with a no-op injected sleep (virtual-clock
+        sessions) retries are immediate, matching the lock-step path's
+        behaviour under the same injection.  The rate-limiter index
+        round-robins across admissions so list-mode buckets grant their
+        full aggregate budget."""
+        engine = self.engine
+        pending: dict[int, _Submission] = {}
+        retry_at: list[tuple[float, _Submission]] = []
+        wait_s = max(0.0, self.max_batch_wait_ms) / 1000.0
+        real_sleep = self._sleep is time.sleep
+        stop = False
+        admit_rr = 0
+
+        def _dispatch(sub: _Submission) -> None:
+            nonlocal admit_rr
+            try:
+                self._admit(sub, admit_rr)
+                admit_rr += 1
+                sub.flight.attempts += 1
+                with self._lock:
+                    self.stats.dispatched += 1
+                pending[engine.stream_submit(sub.request)] = sub
+            except BaseException as e:
+                # the in-hand submission is in neither `pending` nor the
+                # queue — fail its flight here or its waiters hang; the
+                # outer handler then fails everything else
+                self._resolve(sub.flight, exc=e)
+                raise
+
+        try:
+            while True:
+                was_idle = not pending
+                admitted = 0
+                if retry_at:
+                    # pop one at a time: if a dispatch raises, the entries
+                    # not yet reached are still in retry_at and the crash
+                    # handler below can fail their flights
+                    now = time.monotonic()
+                    i = 0
+                    while i < len(retry_at):
+                        if retry_at[i][0] <= now:
+                            _, sub_r = retry_at.pop(i)
+                            _dispatch(sub_r)
+                            admitted += 1
+                        else:
+                            i += 1
+                while True:
+                    try:
+                        item = self._queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if item is _SENTINEL:
+                        stop = True
+                        break
+                    _dispatch(item)
+                    admitted += 1
+                if stop and not pending and not retry_at:
+                    return
+                if not pending:
+                    self._wake.clear()
+                    self._wake.wait(timeout=0.005 if retry_at else 0.05)
+                    continue
+                if was_idle and admitted and wait_s and not stop:
+                    # batch-formation window: a cold batcher waits briefly
+                    # for co-submitted prompts before spinning up decode
+                    # (injected sleep — a no-op under virtual clocks)
+                    self._sleep(wait_s)
+                    continue
+                for rid, resp in engine.stream_pump():
+                    sub2 = pending.pop(rid, None)
+                    if sub2 is None:
+                        continue
+                    if (
+                        is_recoverable(resp.error)
+                        and sub2.flight.attempts <= sub2.max_retries
+                    ):
+                        delay = (
+                            sub2.retry_delay
+                            * 2.0 ** (sub2.flight.attempts - 1)
+                            if real_sleep
+                            else 0.0
+                        )
+                        retry_at.append((time.monotonic() + delay, sub2))
+                        continue
+                    self._resolve(sub2.flight, resp)
+        except BaseException as e:  # noqa: BLE001
+            # deadlock backstop: a dying batcher loop fails every
+            # outstanding ticket instead of stranding its waiters
+            with self._lock:
+                self._broken = e
+            for sub3 in pending.values():
+                self._resolve(sub3.flight, exc=e)
+            for _, sub3 in retry_at:
+                self._resolve(sub3.flight, exc=e)
+            self._drain_queue(exc=e)
+            raise
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("InferenceService is closed")
+        if self._broken is not None:
+            raise RuntimeError(
+                f"InferenceService dispatch failed: {self._broken!r}"
+            )
+
+    def _drain_queue(self, exc: BaseException) -> None:
+        """Fail every queued submission; stop sentinels are preserved
+        (re-enqueued) so dispatchers racing this drain still shut down."""
+        sentinels = 0
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _SENTINEL:
+                sentinels += 1
+            else:
+                self._resolve(item.flight, exc=exc)
+        for _ in range(sentinels):
+            self._queue.put(_SENTINEL)
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain and stop: queued work is dispatched to completion (FIFO —
+        the stop sentinels sit behind it), in-flight decode finishes, then
+        dispatcher threads exit and are joined."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            threads = list(self._threads)
+        for _ in threads:
+            self._queue.put(_SENTINEL)
+        self._wake.set()
+        for t in threads:
+            t.join(timeout=timeout)
+        # a submit racing close may have enqueued behind the sentinels:
+        # fail those tickets rather than strand their waiters
+        self._drain_queue(exc=RuntimeError("InferenceService closed"))
+
+    def __enter__(self) -> "InferenceService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- introspection -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Service counters plus (for slot engines) the batcher's
+        occupancy/throughput counters."""
+        with self._lock:
+            d = {
+                "engine": self.name,
+                "mode": "batcher" if self._streaming else "threads",
+                "dispatchers": len(self._threads),
+                "inflight": len(self._inflight),
+                **self.stats.as_dict(),
+            }
+        batcher = self.engine.serving_stats()
+        if batcher:
+            d["batcher"] = batcher
+        return d

@@ -9,6 +9,10 @@ resource once and reuses it across tasks:
   :class:`EngineModelConfig` (``session.engines``),
 * **response caches** — one :class:`ResponseCache` handle per
   ``(cache_dir, policy)``,
+* **inference services** — one :class:`~repro.core.service.
+  InferenceService` per engine (``session.service_for``): the submit/
+  gather front that coalesces identical in-flight requests and batches
+  across every task/chunk/suite using that engine,
 * **limiters / worker pools** — one per inference configuration,
 * **accounting** — session-level totals (engine calls, tokens, cost,
   cache traffic) across every task run.
@@ -31,6 +35,7 @@ vectors into the pairwise significance machinery of
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
 from typing import Any, Iterable, Sequence
@@ -39,6 +44,7 @@ from repro.core.cache import ResponseCache
 from repro.core.config import CachePolicy, EngineModelConfig, EvalTask, InferenceConfig
 from repro.core.engines import EngineRegistry, InferenceEngine
 from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
+from repro.core.service import InferenceService
 from repro.core.stages import (
     EvalArtifact,
     EvalResult,
@@ -69,6 +75,9 @@ class SessionAccounting:
     cost_usd: float = 0.0
     cache_hits: int = 0
     cache_misses: int = 0
+    #: submissions answered by an in-flight twin's engine call (the
+    #: InferenceService's single-flight dedup): real requests, zero spend
+    coalesced_requests: int = 0
     wall_s: float = 0.0
 
     def __post_init__(self) -> None:
@@ -101,6 +110,9 @@ class EvalSession:
         self._caches: dict[tuple[str, CachePolicy], ResponseCache] = {}
         self._limiters: dict[tuple, Any] = {}
         self._pools: dict[tuple, WorkerPool] = {}
+        #: one InferenceService per engine: the single-flight/batching
+        #: domain spans every task, chunk and suite using that engine
+        self._services: dict[tuple, InferenceService] = {}
         # get-or-create must be atomic: concurrent chunk workers asking for
         # the same cache/limiter/pool must share ONE instance — a duplicate
         # ResponseCache handle would fragment the key set and the hit/miss
@@ -117,6 +129,40 @@ class EvalSession:
     def engine_for(self, model: EngineModelConfig) -> InferenceEngine:
         self._check_open()
         return self.engines.get(model, **self._engine_kwargs)
+
+    def service_for(
+        self, model: EngineModelConfig, inf: InferenceConfig
+    ) -> InferenceService:
+        """Get-or-create the shared :class:`InferenceService` for this
+        engine.  Dispatch capacity scales with the stages attached to it
+        (``InferenceService.attach``); queue depth, the coalescing default
+        and the batch-formation window come from the first inference
+        config that touches the engine."""
+        self._check_open()
+        key = (model, json.dumps(self._engine_kwargs, sort_keys=True, default=str))
+        with self._res_lock:
+            svc = self._services.get(key)
+            if svc is None:
+                engine = self.engines.get(model, **self._engine_kwargs)
+                svc = InferenceService(
+                    engine,
+                    queue_depth=inf.service_queue_depth,
+                    coalesce=inf.coalesce,
+                    max_batch_wait_ms=inf.max_batch_wait_ms,
+                    n_dispatchers=inf.n_workers,
+                    sleep=self.sleep,
+                    name=f"{model.provider}:{model.model_name}",
+                )
+                self._services[key] = svc
+        return svc
+
+    def serving_stats(self) -> list[dict]:
+        """Per-service snapshots (submission/coalescing counters, and the
+        batcher occupancy counters for slot engines) — surfaced in
+        :class:`~repro.core.suite.SuiteResult` reports."""
+        with self._res_lock:
+            services = list(self._services.values())
+        return [s.snapshot() for s in services]
 
     def cache_for(self, inf: InferenceConfig) -> ResponseCache | None:
         if not inf.cache_dir or inf.cache_policy == CachePolicy.DISABLED:
@@ -231,29 +277,59 @@ class EvalSession:
         return result
 
     def run_suite(
-        self, suite: EvalSuite, *, stages: Sequence[Stage] | None = None
+        self,
+        suite: EvalSuite,
+        *,
+        stages: Sequence[Stage] | None = None,
+        parallel_jobs: int = 1,
     ) -> SuiteResult:
         """Run every (model, task) job of the suite, reusing session
         resources, and compute the pairwise significance matrix for every
-        metric shared across models."""
+        metric shared across models.
+
+        ``parallel_jobs > 1`` runs that many jobs concurrently on a thread
+        pool.  Session resources are already safe under concurrent tasks
+        (locked get-or-create, locked accounting), and the shared
+        InferenceService turns the overlap into cross-task batching and
+        single-flight dedup — jobs sharing an engine fill its decode slots
+        together instead of draining it per shard.  Each job's result is
+        computed exactly as in a sequential run; middleware hooks may fire
+        from worker threads."""
         self._check_open()
         results: dict[tuple[str, str], EvalResult] = {}
         jobs = suite.jobs()
-        for job in jobs:
+
+        def _run_job(job):
             # a callable source yields a fresh iterator per job (streaming
             # tasks swept across models consume their source once per run)
             rows = job.rows() if callable(job.rows) else job.rows
-            results[(job.model_label, job.task.task_id)] = self.run_task(
-                rows, job.task, stages=stages
+            return (
+                (job.model_label, job.task.task_id),
+                self.run_task(rows, job.task, stages=stages),
             )
+
+        if parallel_jobs <= 1:
+            for job in jobs:
+                k, v = _run_job(job)
+                results[k] = v
+        else:
+            from concurrent.futures import ThreadPoolExecutor
+
+            with ThreadPoolExecutor(max_workers=parallel_jobs) as ex:
+                for k, v in ex.map(_run_job, jobs):
+                    results[k] = v
         comparisons = build_comparisons(suite, results)
+        accounting = self.accounting.as_dict()
+        serving = self.serving_stats()
+        if serving:
+            accounting["serving"] = serving
         return SuiteResult(
             name=suite.name,
             models=suite.model_labels(),
             tasks=suite.task_ids(),
             results=results,
             comparisons=comparisons,
-            accounting=self.accounting.as_dict(),
+            accounting=accounting,
         )
 
     # -- lifecycle ---------------------------------------------------------------
@@ -265,6 +341,11 @@ class EvalSession:
     def close(self) -> None:
         if self._closed:
             return
+        # services drain (queued work dispatches, in-flight decode
+        # finishes, dispatcher threads join) before their engines go away
+        for svc in self._services.values():
+            svc.close()
+        self._services.clear()
         self.engines.shutdown()
         self._caches.clear()
         self._limiters.clear()

@@ -29,7 +29,7 @@ from typing import Any, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.cache import CacheEntry
-from repro.core.config import CachePolicy, EvalTask
+from repro.core.config import CachePolicy, EvalTask, cache_key
 from repro.core.engines import (
     InferenceRequest,
     InferenceResponse,
@@ -172,9 +172,9 @@ class _ShardStats:
     (``art.engine_stats`` / ``art.cache_stats``) sum only the winning
     attempt per shard — deterministic, parity with a serial run — while
     ``session.accounting`` receives every attempt's calls and cost as the
-    shard finishes (see :meth:`InferStage.run`): a speculative loser's
-    inference really happened and really cost money, and the cost-budget
-    guard must see it.
+    shard finishes (see :meth:`LockStepInferStage.run`): a speculative
+    loser's inference really happened and really cost money, and the
+    cost-budget guard must see it.
     """
 
     calls: int = 0
@@ -182,18 +182,54 @@ class _ShardStats:
     hits: int = 0
     misses: int = 0
     writes: int = 0
+    #: submissions that coalesced onto another submission's flight
+    #: (service path only): answered, but nobody paid twice
+    coalesced: int = 0
 
 
-class InferStage:
-    """Sharded inference over the session worker pool: per-worker rate
-    limiting, content-addressable caching, retries and speculative re-issue.
+def _sum_shard_stats(parts) -> _ShardStats:
+    totals = _ShardStats()
+    for st in parts:
+        for f in dataclasses.fields(_ShardStats):
+            setattr(
+                totals, f.name, getattr(totals, f.name) + getattr(st, f.name)
+            )
+    return totals
 
-    Engine / cache / limiter / pool are session-owned and shared across
-    tasks — and, in concurrent streaming, across chunk workers running
-    this stage in parallel.  Per-task ``engine_stats`` / ``cache_stats``
-    are therefore counted locally per shard (not as deltas over the shared
-    counters), which reproduces the legacy per-call numbers exactly in a
-    fresh session and stays exact under concurrency.
+
+def _publish_infer_stats(
+    art: EvalArtifact, cache, totals: _ShardStats, pool: dict
+) -> None:
+    """Assemble ``art.cache_stats`` / ``art.engine_stats`` from summed
+    shard stats — shared by the service and lock-step paths so their
+    result-stat semantics cannot drift apart."""
+    if cache is not None:
+        stats = cache.stats()  # entries/version stay session-absolute
+        h, m = totals.hits, totals.misses
+        stats.update(
+            hits=h, misses=m, writes=totals.writes,
+            hit_rate=h / (h + m) if h + m else 0.0,
+        )
+        art.cache_stats = stats
+    else:
+        art.cache_stats = {}
+    art.engine_stats = {
+        "calls": totals.calls,
+        "total_cost": totals.cost,
+        "coalesced": totals.coalesced,
+        "pool": pool,
+    }
+
+
+class LockStepInferStage:
+    """The legacy inference path: sharded lock-step execution over the
+    session worker pool, with per-worker rate limiting at the call site.
+
+    Kept as the benchmark baseline and as the escape hatch behind
+    ``InferenceConfig.use_service=False``.  :class:`InferStage` (the
+    default) routes the same shard/stats accounting through the shared
+    :class:`~repro.core.service.InferenceService` instead, so batches form
+    across shards, chunks, tasks and suites rather than within one shard.
     """
 
     name = "infer"
@@ -309,16 +345,10 @@ class InferStage:
 
         n_cached = 0
         in_tok = out_tok = 0
-        totals = _ShardStats()
         pool_stats = PoolStats()
         shard_results = pool.map_shards(run_shard, shards, stats_out=pool_stats)
         for sr in shard_results:
-            rows, st = sr.value
-            for f in dataclasses.fields(_ShardStats):
-                setattr(
-                    totals, f.name,
-                    getattr(totals, f.name) + getattr(st, f.name),
-                )
+            rows, _st = sr.value
             for i, resp, cached in rows:
                 responses[i] = resp
                 if resp.error is not None:
@@ -328,29 +358,213 @@ class InferStage:
                 else:
                     in_tok += resp.input_tokens
                     out_tok += resp.output_tokens
+        totals = _sum_shard_stats(sr.value[1] for sr in shard_results)
 
         art.responses = responses
         art.texts = [
             r.text if r is not None and r.error is None else "" for r in responses
         ]
         art.failures = failures
-        if cache is not None:
-            stats = cache.stats()  # entries/version stay session-absolute
-            h, m = totals.hits, totals.misses
-            stats.update(
-                hits=h, misses=m, writes=totals.writes,
-                hit_rate=h / (h + m) if h + m else 0.0,
-            )
-            art.cache_stats = stats
-        else:
-            art.cache_stats = {}
-        art.engine_stats = {
-            "calls": totals.calls,
-            "total_cost": totals.cost,
-            "pool": dataclasses.asdict(pool_stats),
-        }
+        _publish_infer_stats(
+            art, cache, totals, dataclasses.asdict(pool_stats)
+        )
 
         acct = session.accounting
+        with acct.lock:
+            acct.input_tokens += in_tok
+            acct.output_tokens += out_tok
+            if cache is not None:
+                acct.cache_hits += n_cached
+                acct.cache_misses += len(prompts) - n_cached
+        return art
+
+
+class InferStage:
+    """Submit/gather inference through the session's shared
+    :class:`~repro.core.service.InferenceService`.
+
+    Every cache miss becomes a service submission *immediately* — before
+    any response is gathered — so in-flight batches span shards (and, via
+    the shared per-engine service, chunks, tasks and models).  Identical
+    in-flight cache keys single-flight: one engine call, N waiters, and
+    the spend (call count, cost, tokens, cache write) is credited to
+    exactly one shard — the primary submitter's.
+
+    Per-shard stats accounting is preserved exactly: the same shard
+    layout, the same local-counting discipline (`_ShardStats`), and in a
+    run without concurrent duplicates the same calls/cost/hits/misses/
+    writes as :class:`LockStepInferStage`, which remains available behind
+    ``InferenceConfig.use_service=False``.
+
+    Shard-level *speculative re-issue* is intentionally subsumed rather
+    than re-implemented: a speculative twin of an in-flight engine call is
+    precisely the duplicate spend single-flight exists to eliminate, so a
+    re-issued chunk's submissions coalesce onto the original flights
+    instead of racing them.  Stuck-call mitigation at the request level is
+    ``max_retries`` (dispatched centrally); chunk-level speculation still
+    covers the non-inference portion of a chunk's work.
+    """
+
+    name = "infer"
+
+    def __init__(self) -> None:
+        self._lockstep = LockStepInferStage()
+
+    def run(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        if not art.task.inference.use_service:
+            return self._lockstep.run(art, session)
+        return self._run_service(art, session)
+
+    def _run_service(self, art: EvalArtifact, session: Any) -> EvalArtifact:
+        task = art.task
+        inf = task.inference
+        model = task.model
+        prompts = art.prompts
+        session.engine_for(model)  # engine init parity with the legacy path
+        service = session.service_for(model, inf)
+        cache = session.cache_for(inf)
+        limiter = session.limiter_for(inf)
+
+        count_lookups = cache is not None and cache.policy not in (
+            CachePolicy.DISABLED, CachePolicy.WRITE_ONLY,
+        )
+        shards = [
+            list(range(i, min(i + inf.batch_size, len(prompts))))
+            for i in range(0, len(prompts), inf.batch_size)
+        ]
+        responses: list[InferenceResponse | None] = [None] * len(prompts)
+        failures: list[dict] = []
+        acct = session.accounting
+        plans: list[tuple[_ShardStats, list]] = []
+        #: gather cursor over the flattened plan entries, so an aborted
+        #: gather can sweep the spend of ungathered flights
+        gathered = 0
+        n_cached = 0
+        in_tok = out_tok = 0
+
+        #: stage-local single-flight: the first occurrence of a key in this
+        #: stage submits; later occurrences share its ticket.  This keeps
+        #: intra-task dedup *deterministic* (independent of dispatch
+        #: timing), while the service-level flight table handles the
+        #: inherently-racy cross-stage case (concurrent chunks/tasks).
+        local: dict[str, Any] = {}
+
+        service.attach(inf.n_workers)
+        try:
+            # -- submit phase: cache lookups count per shard exactly as the
+            # lock-step path counts them; misses go straight to the service
+            for idxs in shards:
+                st = _ShardStats()
+                pending: list[tuple[int, str, Any, bool]] = []
+                plans.append((st, pending))
+                for i in idxs:
+                    key = cache_key(
+                        prompts[i], model.model_name, model.provider,
+                        model.temperature, model.max_tokens,
+                    )
+                    if cache is not None:
+                        hit = cache.lookup(key)
+                        if hit is not None:
+                            st.hits += 1
+                            n_cached += 1
+                            responses[i] = InferenceResponse(
+                                text=hit.response_text,
+                                input_tokens=hit.input_tokens or 0,
+                                output_tokens=hit.output_tokens or 0,
+                                latency_ms=0.0,
+                            )
+                            continue
+                        if count_lookups:
+                            st.misses += 1
+                    if inf.coalesce and key in local:
+                        service.note_coalesced()
+                        pending.append((i, key, local[key], False))
+                        continue
+                    est = len(prompts[i].split()) + model.max_tokens
+                    ticket = service.submit(
+                        InferenceRequest(
+                            prompts[i], model.max_tokens, model.temperature
+                        ),
+                        key=key,
+                        coalesce=inf.coalesce,
+                        limiter=limiter,
+                        est_tokens=est,
+                        max_retries=inf.max_retries,
+                        retry_delay=inf.retry_delay,
+                    )
+                    local[key] = ticket
+                    pending.append((i, key, ticket, True))
+
+            # -- gather phase: per-shard stats, primary submissions only —
+            # a coalesced follower's spend belongs to its leader's shard
+            for st, pending in plans:
+                new_entries: list[CacheEntry] = []
+                for i, key, ticket, owner in pending:
+                    resp = ticket.result()
+                    gathered += 1
+                    responses[i] = resp
+                    primary = owner and ticket.primary
+                    if primary:
+                        st.calls += ticket.attempts
+                        st.cost += resp.cost_usd
+                    else:
+                        st.coalesced += 1
+                    if resp.error is not None:
+                        failures.append({"index": i, "error": resp.error})
+                    elif primary:
+                        in_tok += resp.input_tokens
+                        out_tok += resp.output_tokens
+                        if cache is not None:
+                            new_entries.append(
+                                CacheEntry(
+                                    prompt_hash=key,
+                                    model_name=model.model_name,
+                                    provider=model.provider,
+                                    prompt_text=prompts[i],
+                                    response_text=resp.text,
+                                    input_tokens=resp.input_tokens,
+                                    output_tokens=resp.output_tokens,
+                                    latency_ms=resp.latency_ms,
+                                    created_at=time.time(),
+                                )
+                            )
+                if new_entries:
+                    st.writes += cache.put(new_entries)
+        finally:
+            service.detach(inf.n_workers)
+            # spend reaches the session accounting even if the gather
+            # aborts mid-shard (REPLAY miss, dispatcher exception): sweep
+            # the flights that already resolved but were never gathered —
+            # their engine calls happened and cost money.  Calls still in
+            # flight at abort time resolve in the service afterwards; only
+            # those escape per-task accounting.
+            flat = [
+                (st, entry) for st, pending in plans for entry in pending
+            ]
+            for st, (i, key, ticket, owner) in flat[gathered:]:
+                if not (owner and ticket.primary and ticket.done()):
+                    continue
+                try:
+                    resp = ticket.result(0.0)
+                except BaseException:  # noqa: BLE001 — failed flight: no spend
+                    continue
+                st.calls += ticket.attempts
+                st.cost += resp.cost_usd
+            with acct.lock:
+                for st, _ in plans:
+                    acct.engine_calls += st.calls
+                    acct.cost_usd += st.cost
+                    acct.coalesced_requests += st.coalesced
+
+        totals = _sum_shard_stats(st for st, _ in plans)
+
+        art.responses = responses
+        art.texts = [
+            r.text if r is not None and r.error is None else ""
+            for r in responses
+        ]
+        art.failures = failures
+        _publish_infer_stats(art, cache, totals, {})
         with acct.lock:
             acct.input_tokens += in_tok
             acct.output_tokens += out_tok

@@ -132,7 +132,7 @@ class StreamingPipeline:
 
         failures: list[dict] = []
         timing: dict[str, float] = {}
-        engine_stats = {"calls": 0, "total_cost": 0.0, "pool": {}}
+        engine_stats = {"calls": 0, "total_cost": 0.0, "coalesced": 0, "pool": {}}
         cache_stats: dict = {}
         n_examples = n_chunks = n_resumed = 0
         max_resident = 0
@@ -393,7 +393,7 @@ class ConcurrentStreamingExecutor:
 
         failures: list[dict] = []
         timing: dict[str, float] = {}
-        engine_stats = {"calls": 0, "total_cost": 0.0, "pool": {}}
+        engine_stats = {"calls": 0, "total_cost": 0.0, "coalesced": 0, "pool": {}}
         cache_stats: dict = {}
         n_examples = n_chunks = n_resumed = 0
         resident = {"rows": 0, "max": 0}
@@ -658,6 +658,7 @@ def _merge_failures(acc: list[dict], new: list[dict]) -> None:
 def _merge_engine_stats(total: dict, delta: dict) -> None:
     total["calls"] += delta.get("calls") or 0
     total["total_cost"] += delta.get("total_cost", 0.0)
+    total["coalesced"] = total.get("coalesced", 0) + (delta.get("coalesced") or 0)
     for k, v in delta.get("pool", {}).items():
         total["pool"][k] = total["pool"].get(k, 0) + v
 

@@ -323,6 +323,30 @@ class SuiteResult:
                         f"| {verdict} |"
                     )
             lines.append("")
-        acct = ", ".join(f"{k}={v}" for k, v in self.accounting.items())
+        serving = self.accounting.get("serving") or []
+        if serving:
+            lines.append("## Inference service")
+            lines.append("")
+            lines.append(
+                "| engine | mode | submitted | dispatched | coalesced "
+                "| dedup | occupancy | tok/step | admissions | recompiles |"
+            )
+            lines.append("|---" * 10 + "|")
+            for s in serving:
+                b = s.get("batcher") or {}
+                lines.append(
+                    f"| {s.get('engine', '?')} | {s.get('mode', '?')} "
+                    f"| {s.get('submitted', 0)} | {s.get('dispatched', 0)} "
+                    f"| {s.get('coalesced', 0)} "
+                    f"| {s.get('dedup_rate', 0.0):.1%} "
+                    f"| {b.get('slot_occupancy', '—')} "
+                    f"| {b.get('tokens_per_step', '—')} "
+                    f"| {b.get('admissions', '—')} "
+                    f"| {b.get('prefill_recompiles', '—')} |"
+                )
+            lines.append("")
+        acct = ", ".join(
+            f"{k}={v}" for k, v in self.accounting.items() if k != "serving"
+        )
         lines.append(f"_session accounting: {acct}_")
         return "\n".join(lines)

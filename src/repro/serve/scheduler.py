@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.engines import BatcherStats
 from repro.models.params import init_params, is_spec
 from repro.serve import steps as steps_lib
 
@@ -107,6 +108,10 @@ class ContinuousBatcher:
         self.completions: list[Completion] = []
         self.steps_run = 0
         self.key = jax.random.key(0)
+        #: occupancy/throughput counters for the persistent streaming mode
+        #: (surfaced through the InferenceService into session accounting)
+        self.stats = BatcherStats(n_slots=n_slots)
+        self._seen_prompt_lens: set[int] = set()
 
     # -- cache row insertion ---------------------------------------------------
 
@@ -125,6 +130,19 @@ class ContinuousBatcher:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @property
+    def slots_busy(self) -> int:
+        """Number of decode slots currently occupied."""
+        return sum(1 for f in self.slot_free if not f)
+
+    def drain_completions(self) -> list[Completion]:
+        """Pop (and return) completions accumulated so far — the streaming
+        counterpart to reading ``self.completions`` after
+        :meth:`run_to_completion`."""
+        out = self.completions
+        self.completions = []
+        return out
+
     def _admit(self, req: Request) -> None:
         if self.admission is not None:
             est = len(req.prompt_tokens) + req.max_new_tokens
@@ -137,6 +155,12 @@ class ContinuousBatcher:
             req = self.queue.pop(0)
             self._admit(req)
             ptoks = req.prompt_tokens
+            self.stats.admissions += 1
+            if len(ptoks) not in self._seen_prompt_lens:
+                # exact-length prefill: each new prompt length compiles a
+                # fresh prefill program (callers bucket lengths to bound it)
+                self._seen_prompt_lens.add(len(ptoks))
+                self.stats.prefill_recompiles += 1
             # Exact-length prefill: bucketed (right-padded) prefill would be
             # fine for attention caches (padding is never attended) but
             # corrupts SSM recurrent state, so prompts are prefetched at their
@@ -178,6 +202,7 @@ class ContinuousBatcher:
         self.slot_free[slot] = True
         self.slot_req[slot] = None
         self.slot_tokens[slot] = []
+        self.stats.completions += 1
 
     def step(self) -> int:
         """One scheduler iteration; returns number of active slots stepped."""
@@ -199,6 +224,9 @@ class ContinuousBatcher:
         if not active:
             return 0
 
+        self.stats.steps += 1
+        self.stats.active_slot_steps += len(active)
+        self.stats.tokens_generated += len(active)
         tokens = jnp.asarray(self.cur_tokens)
         positions = jnp.asarray(self.slot_pos)
         logits, self.cache = self._decode(self.params, tokens, self.cache, positions)

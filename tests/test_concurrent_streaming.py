@@ -66,10 +66,22 @@ def test_golden_parity_concurrent_vs_serial_bitwise():
         assert set(conc.metrics) == set(serial.metrics)
         for m, mv in serial.metrics.items():
             assert _mv_tuple(conc.metrics[m]) == _mv_tuple(mv), (window, m)
-        assert conc.engine_stats["calls"] == serial.engine_stats["calls"]
-        assert conc.engine_stats["total_cost"] == pytest.approx(
-            serial.engine_stats["total_cost"]
+        # engine-call accounting: total demand (paid calls + coalesced
+        # waiters) is conserved.  Concurrent windows may pay *fewer* calls
+        # than serial when duplicate prompts from different chunks are in
+        # flight together — the inference service single-flights them —
+        # so calls is upper-bounded by serial, never above it.
+        conc_demand = (
+            conc.engine_stats["calls"] + conc.engine_stats["coalesced"]
         )
+        serial_demand = (
+            serial.engine_stats["calls"] + serial.engine_stats["coalesced"]
+        )
+        assert conc_demand == serial_demand
+        assert conc.engine_stats["calls"] <= serial.engine_stats["calls"]
+        assert conc.engine_stats["total_cost"] <= serial.engine_stats[
+            "total_cost"
+        ] * (1 + 1e-9)
         log = conc.logs["streaming"]
         assert log["n_examples"] == 240
         assert log["n_chunks"] == 5

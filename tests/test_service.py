@@ -1,0 +1,416 @@
+"""Shared asynchronous inference service (ISSUE 5): single-flight
+coalescing, duplicate-spend regression, golden parity of every execution
+mode vs the lock-step baseline, batcher-loop dispatch, drain/shutdown,
+retry accounting, parallel suite jobs, serving counters in reports."""
+
+import dataclasses
+import threading
+
+import pytest
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    InferenceRequest,
+    InferenceService,
+    MetricConfig,
+    SimulatedAPIEngine,
+    StatisticsConfig,
+)
+from repro.data import mixed_examples, qa_examples
+
+API_MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+
+
+def _task(
+    task_id="svc",
+    model=API_MODEL,
+    cache_dir="",
+    use_service=True,
+    n_workers=4,
+    **inf_kw,
+):
+    return EvalTask(
+        task_id=task_id,
+        model=model,
+        inference=InferenceConfig(
+            batch_size=8, n_workers=n_workers, cache_dir=cache_dir,
+            use_service=use_service, **inf_kw,
+        ),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    )
+
+
+def _mv_tuple(mv):
+    return (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored)
+
+
+def _cmp_tuple(c):
+    return (c.diff, c.diff_ci, c.test.p_value, c.effect.value)
+
+
+class GatedEngine(SimulatedAPIEngine):
+    """Engine whose calls block on an event — makes in-flight overlap
+    deterministic for single-flight tests."""
+
+    def __init__(self, model, gate, **kw):
+        super().__init__(model, **kw)
+        self.gate = gate
+
+    def infer(self, request):
+        assert self.gate.wait(10.0), "test gate never opened"
+        return super().infer(request)
+
+
+# -- single flight -------------------------------------------------------------
+
+
+def test_single_flight_one_engine_call_n_waiters():
+    gate = threading.Event()
+    eng = GatedEngine(API_MODEL, gate)
+    eng.initialize()
+    svc = InferenceService(eng, n_dispatchers=4, name="gated")
+    req = InferenceRequest("what is the capital of France", 16, 0.0)
+    tickets = [svc.submit(req, key="k1") for _ in range(5)]
+    assert tickets[0].primary
+    assert not any(t.primary for t in tickets[1:])
+    gate.set()
+    texts = {t.result(timeout=10.0).text for t in tickets}
+    assert len(texts) == 1
+    assert eng.calls == 1  # one engine call, five waiters
+    snap = svc.snapshot()
+    assert snap["submitted"] == 5 and snap["coalesced"] == 4
+    assert snap["dispatched"] == 1
+    assert snap["dedup_rate"] == pytest.approx(0.8)
+    svc.close()
+
+
+def test_coalesce_disabled_pays_per_submission():
+    gate = threading.Event()
+    eng = GatedEngine(API_MODEL, gate)
+    eng.initialize()
+    svc = InferenceService(eng, n_dispatchers=4, coalesce=False)
+    req = InferenceRequest("same prompt twice", 16, 0.0)
+    t1 = svc.submit(req, key="k")
+    t2 = svc.submit(req, key="k")
+    assert t1.primary and t2.primary
+    gate.set()
+    t1.result(timeout=10.0), t2.result(timeout=10.0)
+    assert eng.calls == 2
+    svc.close()
+
+
+def test_completed_flight_does_not_coalesce():
+    eng = SimulatedAPIEngine(API_MODEL)
+    eng.initialize()
+    svc = InferenceService(eng, n_dispatchers=2)
+    req = InferenceRequest("one then later the same", 16, 0.0)
+    t1 = svc.submit(req, key="k")
+    t1.result(timeout=10.0)
+    t2 = svc.submit(req, key="k")  # flight finished: new engine call
+    t2.result(timeout=10.0)
+    assert t2.primary and eng.calls == 2
+    svc.close()
+
+
+# -- the duplicate-spend regression (satellite #1) ------------------------------
+
+
+def test_duplicate_spend_race_two_chunk_workers(tmp_path):
+    """Two concurrent chunk workers missing the cache on the same prompts
+    must result in exactly one engine call and one cost increment per
+    unique prompt.  The lock-step path (main's behaviour) pays twice."""
+    rows = qa_examples(8, seed=3)
+    source = rows + rows  # chunk 0 and chunk 1 are identical prompt sets
+    kw = {"wall_clock": True, "base_latency_ms": 60.0, "per_token_ms": 0.0}
+
+    def run(use_service):
+        task = _task(use_service=use_service).with_streaming(
+            max_memory_rows=8, max_inflight_chunks=2
+        )
+        with EvalSession(engine_kwargs=kw) as session:
+            res = session.run_task(iter(source), task)
+            acct = dataclasses.asdict(session.accounting)
+        return res, acct
+
+    svc_res, svc_acct = run(True)
+    lock_res, lock_acct = run(False)
+
+    # lock-step: both chunks pay — the paper's duplicate-spend leak
+    assert lock_acct["engine_calls"] == 16
+    # service: one flight per unique prompt, the twin chunk coalesces
+    assert svc_acct["engine_calls"] == 8
+    assert svc_acct["coalesced_requests"] == 8
+    assert svc_acct["cost_usd"] == pytest.approx(lock_acct["cost_usd"] / 2)
+    # identical evaluation output either way
+    for m, mv in lock_res.metrics.items():
+        assert _mv_tuple(svc_res.metrics[m]) == _mv_tuple(mv)
+
+
+# -- golden parity (acceptance) -------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "stream_kw",
+    [
+        None,                                           # in-memory
+        {"max_memory_rows": 20},                        # serial streaming
+        {"max_memory_rows": 20, "concurrency": 4},      # concurrent streaming
+    ],
+    ids=["memory", "serial-stream", "concurrent-stream"],
+)
+def test_golden_parity_service_vs_lockstep(stream_kw, tmp_path):
+    """In-memory, serial streaming and concurrent streaming through the
+    InferenceService produce byte-identical metrics, CIs and comparison
+    matrices to the lock-step path."""
+    rows = mixed_examples(80, seed=5)
+
+    def build_suite(use_service, tag):
+        task = _task(
+            task_id="parity", use_service=use_service,
+            cache_dir=str(tmp_path / f"cache-{tag}-{use_service}"),
+        )
+        if stream_kw is not None:
+            task = task.with_streaming(**stream_kw)
+        src = (lambda: iter(rows)) if stream_kw is not None else rows
+        return (
+            EvalSuite(f"parity-{use_service}")
+            .add_task(task, src)
+            .sweep_models([
+                API_MODEL,
+                EngineModelConfig(provider="anthropic",
+                                  model_name="claude-3-haiku"),
+            ])
+        )
+
+    with EvalSession() as session:
+        lock = session.run_suite(build_suite(False, "a"))
+    with EvalSession() as session:
+        svc = session.run_suite(build_suite(True, "b"))
+
+    for key, lock_res in lock.results.items():
+        svc_res = svc.results[key]
+        assert set(svc_res.metrics) == set(lock_res.metrics)
+        for m, mv in lock_res.metrics.items():
+            assert _mv_tuple(svc_res.metrics[m]) == _mv_tuple(mv), (key, m)
+    assert set(svc.comparisons) == set(lock.comparisons)
+    for task_id, metrics in lock.comparisons.items():
+        assert set(svc.comparisons[task_id]) == set(metrics)
+        for metric, cells in metrics.items():
+            for pair, cmp in cells.items():
+                assert _cmp_tuple(svc.comparisons[task_id][metric][pair]) == (
+                    _cmp_tuple(cmp)
+                ), (task_id, metric, pair)
+
+
+def test_slot_engine_service_vs_lockstep_parity():
+    """The batcher-loop dispatch (continuous batching) returns the same
+    responses as lock-step gang decode on the simulated slot engine."""
+    rows = mixed_examples(40, seed=7)
+    kw = {"n_slots": 4, "step_ms": 0.0}
+    with EvalSession(engine_kwargs=kw) as session:
+        lock = session.run_task(
+            rows, _task(model=SLOT_MODEL, use_service=False)
+        )
+    with EvalSession(engine_kwargs=kw) as session:
+        svc = session.run_task(rows, _task(model=SLOT_MODEL))
+        snaps = session.serving_stats()
+    assert lock.responses == svc.responses
+    for m, mv in lock.metrics.items():
+        assert _mv_tuple(svc.metrics[m]) == _mv_tuple(mv)
+    (snap,) = snaps
+    assert snap["mode"] == "batcher"
+    b = snap["batcher"]
+    assert b["admissions"] == snap["dispatched"]
+    assert b["completions"] == snap["completed"]
+    assert 0.0 < b["slot_occupancy"] <= 1.0
+    assert 0.0 < b["tokens_per_step"] <= 4.0
+
+
+# -- dispatch mechanics ---------------------------------------------------------
+
+
+def test_queue_backpressure_small_depth():
+    task = _task(service_queue_depth=2)
+    rows = qa_examples(40, seed=11)
+    with EvalSession(
+        engine_kwargs={"wall_clock": True, "base_latency_ms": 1.0,
+                       "per_token_ms": 0.0}
+    ) as session:
+        res = session.run_task(rows, task)
+    assert res.engine_stats["calls"] == 40
+    assert not res.failures
+
+
+def test_retry_accounting_through_service():
+    """Recoverable failures retry inside the dispatcher; attempts are
+    billed to the owning shard exactly as the lock-step path bills them."""
+    rows = qa_examples(9, seed=13)
+    task = _task(max_retries=2, retry_delay=0.0)
+    with EvalSession(engine_kwargs={"fail_every": 3}) as session:
+        res = session.run_task(rows, task)
+        acct_calls = session.accounting.engine_calls
+    assert not res.failures  # every 429 recovered on retry
+    assert res.engine_stats["calls"] > 9  # retries counted as attempts
+    assert acct_calls == res.engine_stats["calls"]
+
+
+def test_unrecoverable_errors_recorded_as_failures():
+    rows = qa_examples(6, seed=17)
+    task = _task(max_retries=0)
+    with EvalSession(engine_kwargs={"fail_every": 3}) as session:
+        res = session.run_task(rows, task)
+    assert len(res.failures) == 2  # calls 3 and 6 fail, no retries allowed
+    assert all(f["error"] == "rate_limited_429" for f in res.failures)
+
+
+def test_close_drains_inflight_work():
+    with EvalSession(
+        engine_kwargs={"wall_clock": True, "base_latency_ms": 20.0,
+                       "per_token_ms": 0.0}
+    ) as session:
+        inf = InferenceConfig(n_workers=4)
+        svc = session.service_for(API_MODEL, inf)
+        tickets = [
+            svc.submit(InferenceRequest(f"drain me {i}", 8, 0.0), key=None)
+            for i in range(6)
+        ]
+        session.close()  # must drain queued work, then join dispatchers
+        assert all(t.done() for t in tickets)
+        assert all(t.result(0.0).error is None for t in tickets)
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit(InferenceRequest("late", 8, 0.0))
+
+
+def test_attach_scales_dispatchers_and_detach_keeps_them():
+    eng = SimulatedAPIEngine(API_MODEL)
+    eng.initialize()
+    svc = InferenceService(eng, n_dispatchers=2)
+    svc.attach(2)
+    svc.attach(6)
+    assert svc.snapshot()["dispatchers"] == 8
+    svc.detach(6)
+    svc.detach(2)
+    assert svc.snapshot()["dispatchers"] == 8  # threads never shrink
+    svc.close()
+
+
+# -- suite integration ----------------------------------------------------------
+
+
+def test_parallel_suite_jobs_match_sequential(tmp_path):
+    rows = mixed_examples(40, seed=19)
+    models = [
+        API_MODEL,
+        EngineModelConfig(provider="anthropic", model_name="claude-3-haiku"),
+    ]
+
+    def build():
+        return (
+            EvalSuite("par")
+            .add_task(_task(task_id="qa"), rows)
+            .sweep_models(models)
+        )
+
+    with EvalSession() as session:
+        seq = session.run_suite(build())
+    with EvalSession() as session:
+        par = session.run_suite(build(), parallel_jobs=2)
+    for key, res in seq.results.items():
+        for m, mv in res.metrics.items():
+            assert _mv_tuple(par.results[key].metrics[m]) == _mv_tuple(mv)
+    for task_id, metrics in seq.comparisons.items():
+        for metric, cells in metrics.items():
+            for pair, cmp in cells.items():
+                assert _cmp_tuple(
+                    par.comparisons[task_id][metric][pair]
+                ) == _cmp_tuple(cmp)
+
+
+def test_suite_report_surfaces_serving_counters():
+    rows = mixed_examples(20, seed=23)
+    suite = EvalSuite("rep").add_task(_task(task_id="qa"), rows)
+    with EvalSession() as session:
+        res = session.run_suite(suite)
+    serving = res.accounting["serving"]
+    assert serving and serving[0]["submitted"] == 20
+    assert "coalesced_requests" in res.accounting
+    md = res.to_markdown()
+    assert "## Inference service" in md
+    assert "openai:gpt-4o-mini" in md
+    assert "dedup" in md
+    # accounting line still renders without the nested serving blob
+    assert "_session accounting:" in md and "'serving'" not in md
+
+
+@pytest.mark.stress
+def test_service_counter_exactness_under_contention():
+    """Many threads hammering one service with overlapping keys: no
+    submission is lost, every ticket resolves, exactly one primary per
+    flight, and submitted == dispatched + coalesced."""
+    eng = SimulatedAPIEngine(API_MODEL)
+    eng.initialize()
+    svc = InferenceService(eng, n_dispatchers=8, queue_depth=64)
+    n_threads, per_thread, n_keys = 12, 50, 25
+    results = [[] for _ in range(n_threads)]
+
+    def worker(w):
+        for i in range(per_thread):
+            k = f"key-{(w * per_thread + i) % n_keys}"
+            t = svc.submit(
+                InferenceRequest(f"prompt for {k}", 8, 0.0), key=k
+            )
+            results[w].append((k, t))
+
+    threads = [
+        threading.Thread(target=worker, args=(w,)) for w in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    texts = {}
+    for w in range(n_threads):
+        for k, t in results[w]:
+            resp = t.result(timeout=30.0)
+            assert resp.error is None
+            texts.setdefault(k, set()).add(resp.text)
+    assert all(len(v) == 1 for v in texts.values())  # one text per key
+    st = svc.stats
+    total = n_threads * per_thread
+    assert st.submitted == total
+    assert st.dispatched + st.coalesced == total
+    assert st.completed == st.dispatched
+    assert st.dispatched == eng.calls
+    svc.close()
+
+
+def test_batcher_admission_round_robins_limiter_buckets():
+    """The batcher loop must spread admission across the per-worker
+    bucket list — pinning worker 0 would cap a slot engine at 1/n of the
+    configured budget (regression)."""
+    from repro.core import EngineModelConfig, SimulatedSlotEngine, TokenBucket
+
+    eng = SimulatedSlotEngine(SLOT_MODEL, n_slots=4, step_ms=0.0)
+    eng.initialize()
+    buckets = [TokenBucket(1e9, 1e12, 4, sleep=lambda s: None)
+               for _ in range(4)]
+    svc = InferenceService(eng, name="slots")
+    tickets = [
+        svc.submit(
+            InferenceRequest(f"spread me {i}", 8, 0.0),
+            key=str(i), limiter=buckets, est_tokens=10.0,
+        )
+        for i in range(12)
+    ]
+    for t in tickets:
+        assert t.result(timeout=30.0).error is None
+    assert [b.acquires for b in buckets] == [3, 3, 3, 3]
+    svc.close()

@@ -127,14 +127,23 @@ def test_runner_shim_matches_session_path(tmp_path):
             sv.value, sv.ci, sv.ci_method, sv.n, sv.n_unscored
         )
     assert r_shim.failures == r_sess.failures
-    # per-call stats: same calls/cost/pool shape despite shared session pool
-    assert r_shim.engine_stats["calls"] == r_sess.engine_stats["calls"] == 25
+    # per-call stats: identical between shim and session.  The inference
+    # service deduplicates repeated prompts within a task (mixed_examples
+    # repeats 2 of the 25), so unique work is billed once and the rest is
+    # accounted as coalesced — deterministically, via the stage-local
+    # single-flight table.
+    assert r_shim.engine_stats["calls"] == r_sess.engine_stats["calls"]
+    assert (
+        r_sess.engine_stats["calls"] + r_sess.engine_stats["coalesced"] == 25
+    )
     assert r_shim.engine_stats["total_cost"] == pytest.approx(
         r_sess.engine_stats["total_cost"]
     )
     assert r_shim.engine_stats["pool"] == r_sess.engine_stats["pool"]
     assert r_shim.cache_stats["hits"] == r_sess.cache_stats["hits"] == 0
-    assert r_shim.cache_stats["writes"] == r_sess.cache_stats["writes"] == 25
+    # one cache write per unique answered prompt
+    assert r_shim.cache_stats["writes"] == r_sess.cache_stats["writes"]
+    assert r_sess.cache_stats["writes"] == r_sess.engine_stats["calls"]
 
 
 def test_rescore_stage_swap_zero_engine_calls(tmp_path):

@@ -111,6 +111,37 @@ def test_scheduler_multiplexes_slots(rng):
     assert sched.steps_run >= 8
 
 
+def test_scheduler_occupancy_counters(rng):
+    """Persistent-mode counters: admissions, occupancy, tokens/step,
+    prompt-length recompile tracking, incremental completion draining."""
+    sched, _ = _scheduler(n_slots=2)
+    for i in range(5):
+        # two distinct prompt lengths -> exactly 2 prefill recompiles
+        sched.submit(
+            Request(i, prompt_tokens=[5, 6, 7][: 2 + i % 2], max_new_tokens=4)
+        )
+    drained: list = []
+    while sched.queue or sched.slots_busy:
+        assert 0 <= sched.slots_busy <= 2
+        sched.step()
+        drained.extend(sched.drain_completions())
+    drained.extend(sched.run_to_completion())  # flush terminal slots
+    drained.extend(sched.drain_completions())
+    seen = {c.request_id for c in drained}
+    assert seen == set(range(5))
+    st = sched.stats
+    assert st.admissions == 5
+    assert st.completions >= 5
+    assert st.prefill_recompiles == 2
+    assert st.steps == sched.steps_run
+    assert 0.0 < st.occupancy <= 1.0
+    assert 0.0 < st.tokens_per_step <= 2.0
+    assert st.tokens_generated == st.active_slot_steps
+    d = st.as_dict()
+    assert d["n_slots"] == 2 and d["admissions"] == 5
+    assert sched.completions == []  # drained incrementally
+
+
 def test_scheduler_greedy_deterministic(rng):
     s1, _ = _scheduler()
     s2, _ = _scheduler()
