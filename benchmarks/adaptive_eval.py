@@ -1,0 +1,177 @@
+"""Adaptive vs exhaustive evaluation (ISSUE 6 tentpole).
+
+A suite of clearly-separated simulated models is evaluated twice:
+
+* **exhaustive** — every example of every task under every model, the
+  paper's baseline regime;
+* **adaptive** — :func:`repro.core.budget.run_adaptive_suite` with a
+  budget large enough to never bind: tasks stop the moment their pairwise
+  verdict is certified by the anytime-valid confidence sequence.
+
+Acceptance (hard-fail): the adaptive run certifies the **same verdicts**
+the exhaustive run's significance tests reach, while consuming
+**>= 40% fewer examples** (and correspondingly less wall-clock).
+
+Emits ``BENCH_adaptive.json``.
+
+  PYTHONPATH=src python -m benchmarks.adaptive_eval [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import (
+    BudgetConfig,
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+    run_adaptive_suite,
+)
+from repro.data import iter_qa_examples, iter_summarization_examples
+
+M_STRONG = EngineModelConfig(provider="openai", model_name="gpt-4o")
+M_WEAK = EngineModelConfig(provider="openai", model_name="gpt-3.5-turbo")
+ALPHA = 0.05
+#: acceptance floor: adaptive must consume this fraction fewer examples
+MIN_SAVINGS = 0.40
+
+
+def _task(task_id: str, chunk: int, spill: str) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        inference=InferenceConfig(batch_size=32, n_workers=2, cache_dir=""),
+        metrics=(MetricConfig("token_f1"),),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    ).with_streaming(max_memory_rows=chunk, spill_dir=spill)
+
+
+def _suite(name: str, n: int, chunk: int, spill_root: str) -> EvalSuite:
+    return (
+        EvalSuite(name)
+        .add_task(
+            _task("qa", chunk, f"{spill_root}/qa"),
+            lambda: iter_qa_examples(n),
+        )
+        .add_task(
+            _task("summarization", chunk, f"{spill_root}/sum"),
+            lambda: iter_summarization_examples(n),
+        )
+        .sweep_models([M_STRONG, M_WEAK])
+    )
+
+
+def _verdict_from_comparison(cmp) -> str:
+    """The exhaustive regime's answer, in adaptive vocabulary."""
+    if cmp.test.p_value >= ALPHA:
+        return "undecided"
+    return "a_better" if cmp.diff > 0 else "b_better"
+
+
+def run(*, smoke: bool = False, full: bool = False) -> list[str]:
+    import tempfile
+
+    if smoke:
+        n, chunk, seed_round = 2500, 128, 256
+    elif full:
+        n, chunk, seed_round = 20_000, 512, 512
+    else:
+        n, chunk, seed_round = 8000, 256, 256
+    pair = f"{M_STRONG.model_name} vs {M_WEAK.model_name}"
+
+    with tempfile.TemporaryDirectory() as root:
+        t0 = time.perf_counter()
+        with EvalSession() as session:
+            ex = session.run_suite(_suite("exhaustive", n, chunk, f"{root}/ex"))
+            exhaustive_examples = session.accounting.engine_calls
+        exhaustive_wall = time.perf_counter() - t0
+
+        budget = BudgetConfig(
+            total_examples=4 * n,           # never binds: savings come from
+            round_examples=seed_round,      # certification, not rationing
+            min_examples=seed_round,
+            alpha=ALPHA,
+            metric="token_f1",
+        )
+        t0 = time.perf_counter()
+        with EvalSession() as session:
+            ad = run_adaptive_suite(
+                session, _suite("adaptive", n, chunk, f"{root}/ad"), budget
+            )
+            adaptive_examples = session.accounting.engine_calls
+        adaptive_wall = time.perf_counter() - t0
+
+    tasks = {}
+    verdicts_match = True
+    for tid in ex.tasks:
+        want = _verdict_from_comparison(
+            ex.comparison(tid, "token_f1", M_STRONG.model_name,
+                          M_WEAK.model_name)
+        )
+        got = ad.adaptive["tasks"][tid]["verdicts"].get(pair, "undecided")
+        verdicts_match = verdicts_match and want == got
+        tasks[tid] = {
+            "exhaustive_verdict": want,
+            "adaptive_verdict": got,
+            "consumed": ad.adaptive["tasks"][tid]["consumed"],
+            "available": n,
+            "n_at_stop": ad.adaptive["tasks"][tid]["n_at_stop"],
+            "half_width": ad.adaptive["tasks"][tid]["half_width"],
+            "reason": ad.adaptive["tasks"][tid]["reason"],
+        }
+
+    savings = 1.0 - adaptive_examples / exhaustive_examples
+    wall_savings = 1.0 - adaptive_wall / exhaustive_wall
+    ok = verdicts_match and savings >= MIN_SAVINGS
+    payload = {
+        "mode": "smoke" if smoke else ("full" if full else "default"),
+        "n_per_task": n,
+        "exhaustive_examples": exhaustive_examples,
+        "adaptive_examples": adaptive_examples,
+        "example_savings": savings,
+        "exhaustive_wall_s": exhaustive_wall,
+        "adaptive_wall_s": adaptive_wall,
+        "wall_savings": wall_savings,
+        "rounds": ad.adaptive["budget"]["rounds"],
+        "verdicts_match": verdicts_match,
+        "tasks": tasks,
+        "min_savings_floor": MIN_SAVINGS,
+        "ok": ok,
+    }
+    with open("BENCH_adaptive.json", "w") as f:
+        json.dump(payload, f, indent=1)
+
+    lines = [
+        f"adaptive_eval,{adaptive_wall * 1e6 / max(adaptive_examples, 1):.1f},"
+        f"examples={adaptive_examples}/{exhaustive_examples} "
+        f"savings={savings:.1%} wall_savings={wall_savings:.1%} "
+        f"verdicts_match={verdicts_match}",
+        f"adaptive_accept,0,savings={savings:.1%} "
+        f"floor={MIN_SAVINGS:.0%} ok={ok}",
+    ]
+    if not ok:
+        raise RuntimeError(f"adaptive acceptance checks failed: {payload}")
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    for line in run(smoke=args.smoke, full=args.full):
+        print(line)
+    print("wrote BENCH_adaptive.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ def main() -> None:
     smoke = args.smoke
 
     from benchmarks import (
+        adaptive_eval,
         bootstrap_stats,
         caching,
         concurrent_streaming,
@@ -68,6 +69,9 @@ def main() -> None:
         ),
         "bootstrap_stats": lambda: bootstrap_stats.run(smoke=smoke),
         "serving_throughput": lambda: serving_throughput.run(
+            smoke=smoke, full=args.full
+        ),
+        "adaptive_eval": lambda: adaptive_eval.run(
             smoke=smoke, full=args.full
         ),
     }

@@ -1,0 +1,101 @@
+"""Adaptive evaluation: stop when the statistics say so.
+
+Two simulated models are compared on two streaming tasks.  Instead of
+scoring every example, the budget scheduler samples in rounds, watches the
+anytime-valid confidence sequence on the paired score difference, and
+stops each task the moment a verdict is certified — then a per-task
+stopping rule is shown on its own, including the bit-identical resume of
+a stopped run.
+
+  PYTHONPATH=src python examples/adaptive_eval.py
+"""
+
+import tempfile
+
+from repro.core import (
+    BudgetConfig,
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+    run_adaptive_suite,
+)
+from repro.data import iter_qa_examples, iter_summarization_examples
+
+N_AVAILABLE = 20_000  # per task per model — far more than needed
+
+
+def _task(task_id: str, spill_root: str) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        inference=InferenceConfig(batch_size=32, n_workers=4, cache_dir=""),
+        metrics=(MetricConfig("token_f1"),),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=500, ci_method="percentile"
+        ),
+    ).with_streaming(
+        max_memory_rows=256, spill_dir=f"{spill_root}/{task_id}"
+    )
+
+
+def main() -> None:
+    spill_root = tempfile.mkdtemp()
+
+    # -- suite-level budget scheduler -----------------------------------------
+    suite = (
+        EvalSuite("adaptive-demo")
+        .add_task(_task("qa", spill_root), lambda: iter_qa_examples(N_AVAILABLE))
+        .add_task(
+            _task("summarization", spill_root),
+            lambda: iter_summarization_examples(N_AVAILABLE),
+        )
+        .sweep_models([
+            EngineModelConfig(provider="openai", model_name="gpt-4o"),
+            EngineModelConfig(provider="openai", model_name="gpt-3.5-turbo"),
+        ])
+    )
+    budget = BudgetConfig(
+        total_examples=10_000,   # fresh-inference budget across all arms
+        round_examples=512,
+        min_examples=512,
+        metric="token_f1",
+    )
+    with EvalSession() as session:
+        res = run_adaptive_suite(session, suite, budget)
+
+    b = res.adaptive["budget"]
+    print(f"budget: {b['spent']} / {b['total_examples']} examples "
+          f"over {b['rounds']} round(s)\n")
+    for tid, t in res.adaptive["tasks"].items():
+        consumed = max(t["consumed"].values())
+        print(f"  {tid:15s} {t['reason']:10s} "
+              f"consumed {consumed}/{N_AVAILABLE} per arm "
+              f"({1 - consumed / N_AVAILABLE:.0%} saved)  {t['verdicts']}")
+
+    # -- per-task stopping rule, and resume of a stopped run ------------------
+    task = _task("solo", spill_root).with_stopping(
+        target_half_width=0.02, min_examples=512
+    )
+    with EvalSession() as session:
+        first = session.run_task(iter_qa_examples(N_AVAILABLE), task)
+    ad = first.logs["adaptive"]
+    print(f"\nsolo task stopped: {ad['reason']} at n={ad['n_examples']} "
+          f"(half-width {ad['half_width']:.4f})")
+
+    with EvalSession() as session:
+        again = session.run_task(iter_qa_examples(N_AVAILABLE), task)
+        replay_calls = session.accounting.engine_calls
+    same = all(
+        again.metrics[m].value == mv.value and again.metrics[m].ci == mv.ci
+        for m, mv in first.metrics.items()
+    )
+    print(f"resume: {replay_calls} new engine calls, "
+          f"bit-identical={same}, stop replayed at "
+          f"chunk {again.logs['adaptive']['stop_chunk']}")
+
+
+if __name__ == "__main__":
+    main()

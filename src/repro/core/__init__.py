@@ -3,6 +3,7 @@ LLM evaluation — config system, session-owned shared resources, the
 composable stage pipeline, metric computation, statistical aggregation,
 multi-model suite comparison, tracking."""
 
+from repro.core.budget import BudgetConfig, run_adaptive_suite
 from repro.core.cache import CacheEntry, CacheMiss, ResponseCache
 from repro.core.compare import (
     Comparison,
@@ -67,7 +68,8 @@ from repro.core.suite import EvalSuite, SuiteJob, SuiteResult
 from repro.core.tracking import RunTracker
 
 __all__ = [
-    "AdaptiveLimiter", "AggregateStage", "CacheEntry", "CacheMiss",
+    "AdaptiveLimiter", "AggregateStage", "BudgetConfig", "CacheEntry",
+    "CacheMiss",
     "CachePolicy", "Comparison", "ConcurrentStreamingExecutor",
     "CostBudgetExceeded", "CostBudgetMiddleware",
     "DataConfig", "EngineModelConfig", "EngineRegistry", "EvalArtifact",
@@ -84,4 +86,5 @@ __all__ = [
     "cache_key", "compare_results", "compare_scores", "compare_stream_stats",
     "create_engine",
     "default_stages", "get_engine", "rescore_stages", "retry_with_backoff",
+    "run_adaptive_suite",
 ]

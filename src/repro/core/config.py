@@ -12,6 +12,8 @@ import hashlib
 import json
 from typing import Any
 
+from repro.stats.sequential import StoppingRule
+
 
 class CachePolicy(str, enum.Enum):
     ENABLED = "enabled"      # lookup before inference, cache new responses
@@ -112,6 +114,14 @@ class StreamingConfig:
     spill_dir: str = ""               # "" = no spill, run is not resumable
     resume: bool = True               # skip chunks already in the manifest
     max_inflight_chunks: int = 1      # >1 = concurrent chunk execution
+    #: explicit cap on examples consumed from the source (0 = unbounded).
+    #: Unlike silently slicing the source, a declared cap lets a resumed
+    #: run distinguish "I stopped at my cap" (committed chunks past it are
+    #: fine — a later run with a larger cap will merge them) from "the
+    #: data source shrank" (refused).  The budget scheduler
+    #: (:mod:`repro.core.budget`) raises this cap round by round; it is
+    #: excluded from the resume key like the other execution knobs.
+    max_examples: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +140,12 @@ class EvalTask:
     statistics: StatisticsConfig = StatisticsConfig()
     data: DataConfig = DataConfig()
     streaming: StreamingConfig = StreamingConfig()
+    #: per-task adaptive early stopping (:mod:`repro.stats.sequential`):
+    #: when enabled, the streaming pipelines consult the rule after every
+    #: merged chunk and terminate sampling once it fires.  The rule's
+    #: statistical fields are validated against the spill manifest on
+    #: resume — one manifest, one certification regime.
+    stopping: StoppingRule = StoppingRule()
 
     def with_model(self, model: "EngineModelConfig") -> "EvalTask":
         """Rebind the task to another model (used by suite model sweeps)."""
@@ -146,6 +162,17 @@ class EvalTask:
             kw["max_inflight_chunks"] = kw.pop("concurrency")
         return dataclasses.replace(
             self, streaming=dataclasses.replace(self.streaming, **kw)
+        )
+
+    def with_stopping(self, **kw: Any) -> "EvalTask":
+        """Enable (or reconfigure) adaptive early stopping, e.g.
+        ``task.with_stopping(target_half_width=0.02, min_examples=512)``.
+        Unspecified fields keep their current values; requires streaming
+        execution to have any effect (the in-memory path scores every row
+        it was given)."""
+        kw.setdefault("enabled", True)
+        return dataclasses.replace(
+            self, stopping=dataclasses.replace(self.stopping, **kw)
         )
 
     def with_metrics(self, *metrics: "MetricConfig") -> "EvalTask":

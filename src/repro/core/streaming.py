@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import time
 from typing import Any, Iterable, Iterator
@@ -84,6 +85,133 @@ class ManifestMismatch(RuntimeError):
     source differs from the run that wrote the manifest."""
 
 
+class _StopTracker:
+    """Adaptive early-stopping state for one streaming run (both
+    pipelines).  Owns the three manifest-backed invariants:
+
+    * **one regime per manifest** — the stopping rule's fingerprint is
+      committed as the manifest's regime row before any adaptive chunk
+      commits; resuming with a different rule (or flipping adaptive
+      mode on/off over existing chunks) refuses with a remediation hint
+      instead of silently mixing certification regimes.
+    * **one stop per run** — the first firing of the rule commits a stop
+      row (first-committer-wins for racing drivers); the stop point then
+      becomes part of the resume contract.
+    * **bit-identical replay** — a resumed run re-consults the rule after
+      every merged chunk (committed chunks replay the same accumulator
+      states, so the same decision sequence), and any disagreement with
+      the recorded stop row is a :class:`ManifestMismatch`, never a
+      silent re-opening of sampling.
+    """
+
+    def __init__(
+        self,
+        task: EvalTask,
+        manifest: ChunkManifest | None,
+        completed: dict[int, dict],
+    ):
+        self.rule = task.stopping if task.stopping.enabled else None
+        self.manifest = manifest
+        self.stopped = False
+        self.decision: dict | None = None
+        self.recorded: dict | None = None
+        if manifest is None:
+            return
+        fp = self.rule.fingerprint() if self.rule is not None else ""
+        row = manifest.regime_row()
+        if row is None and self.rule is not None:
+            if completed:
+                raise ManifestMismatch(
+                    f"manifest {manifest.run_key} has {len(completed)} "
+                    "committed chunk(s) but no certification-regime row — "
+                    "it was written by a run without adaptive stopping. "
+                    "Resume without a stopping rule, or clear the spill "
+                    "dir to start an adaptive run"
+                )
+            if not manifest.try_record_regime({"rule": fp}):
+                row = manifest.regime_row()  # lost the race: validate
+        if row is not None and row.get("rule") != fp:
+            ours = f"rule {fp}" if self.rule is not None else "stopping disabled"
+            raise ManifestMismatch(
+                f"manifest {manifest.run_key} was written under "
+                f"certification regime {row.get('rule')!r} but this run has "
+                f"{ours} — resuming would mix stopping regimes. Resume with "
+                "the original StoppingRule, or clear the spill dir to "
+                "re-certify under the new rule"
+            )
+        if self.rule is not None:
+            self.recorded = manifest.stop_row()
+
+    def after_chunk(
+        self, ci: int, accs: dict[str, MetricAccumulator], n_examples: int
+    ) -> bool:
+        """Consult the rule after chunk ``ci`` merged; True = stop now.
+        Validates (or commits) the manifest stop row as a side effect."""
+        if self.rule is None:
+            return False
+        d = self.rule.should_stop(accs, n_examples)
+        rec = self.recorded
+        if not d.stop:
+            if rec is not None and int(rec["stop_chunk"]) == ci:
+                raise ManifestMismatch(
+                    f"manifest records a certified stop at chunk {ci} "
+                    f"(n={rec['n_examples']}, reason={rec['reason']!r}) but "
+                    "this run's rule does not fire there — was the data "
+                    "source or the rule changed?"
+                )
+            return False
+        state = {
+            "stop_chunk": ci,
+            "n_examples": n_examples,
+            "reason": d.reason,
+            "metric": d.metric,
+            "half_width": d.half_width,
+            "rule": self.rule.fingerprint(),
+        }
+        if rec is None and self.manifest is not None:
+            if not self.manifest.try_record_stop(state):
+                rec = self.manifest.stop_row()  # lost the race: validate
+        if rec is not None and (
+            int(rec["stop_chunk"]),
+            int(rec["n_examples"]),
+            rec["reason"],
+        ) != (ci, n_examples, d.reason):
+            raise ManifestMismatch(
+                f"stop decision diverged from the manifest: recorded "
+                f"chunk {rec['stop_chunk']} n={rec['n_examples']} "
+                f"reason={rec['reason']!r}, this run fired at chunk {ci} "
+                f"n={n_examples} reason={d.reason!r} — was the data source "
+                "or the rule changed?"
+            )
+        self.stopped = True
+        self.decision = state
+        return True
+
+    def finish(self) -> None:
+        """Source exhausted without the rule firing — legal, unless the
+        manifest promised a stop this run never reached."""
+        if self.recorded is not None and not self.stopped:
+            raise ManifestMismatch(
+                f"manifest records a certified stop at chunk "
+                f"{self.recorded['stop_chunk']} "
+                f"(n={self.recorded['n_examples']}) that this run never "
+                "reached — was the data source shortened?"
+            )
+
+    def info(self) -> dict | None:
+        """``logs['adaptive']`` payload, or None when stopping is off."""
+        if self.rule is None:
+            return None
+        out = {
+            "enabled": True,
+            "stopped": self.stopped,
+            "rule": self.rule.fingerprint(),
+        }
+        if self.decision is not None:
+            out.update(self.decision)
+        return out
+
+
 class StreamingPipeline:
     def __init__(
         self,
@@ -91,10 +219,12 @@ class StreamingPipeline:
         chunk_size: int = 1024,
         spill_dir: str = "",
         resume: bool = True,
+        max_examples: int = 0,
     ):
         self.chunk_size = chunk_size
         self.spill_dir = spill_dir
         self.resume = resume
+        self.max_examples = max_examples
 
     @classmethod
     def from_task(cls, task: EvalTask) -> "StreamingPipeline":
@@ -103,11 +233,14 @@ class StreamingPipeline:
             chunk_size=s.max_memory_rows,
             spill_dir=s.spill_dir,
             resume=s.resume,
+            max_examples=s.max_examples,
         )
 
     def run(
         self, source: Iterable[dict], task: EvalTask, session: Any
     ) -> EvalResult:
+        if self.max_examples > 0:
+            source = itertools.islice(source, self.max_examples)
         stages = [PrepareStage(), InferStage(), ScoreStage()]
         stats_cfg = task.statistics
         names = [name for name, _ in resolve_metrics(task.metrics)]
@@ -129,6 +262,7 @@ class StreamingPipeline:
         completed = (
             manifest.completed() if manifest is not None and self.resume else {}
         )
+        stopper = _StopTracker(task, manifest, completed)
 
         failures: list[dict] = []
         timing: dict[str, float] = {}
@@ -164,6 +298,11 @@ class StreamingPipeline:
                 )
                 n_resumed += 1
                 start += len(chunk)
+                # resumed chunks replay the identical decision sequence:
+                # a recorded stop fires here again, bit-identically, and
+                # the source iterator is never advanced past it
+                if stopper.after_chunk(ci, accs, n_examples):
+                    break
                 continue
 
             art = EvalArtifact(rows=chunk, task=task)
@@ -214,11 +353,22 @@ class StreamingPipeline:
                 mw.on_chunk_end(ci, state, session)
             start += len(chunk)
             del art, chunk  # chunk state dies here: O(chunk) memory
+            # the stop check sits after the manifest commit: the chunk that
+            # satisfied the rule is durable before sampling closes, so a
+            # crash here resumes straight to the same certified stop
+            if stopper.after_chunk(ci, accs, n_examples):
+                break
 
-        if completed:
+        stopper.finish()
+        capped = 0 < self.max_examples <= n_examples
+        if completed and not stopper.stopped and not capped:
             # committed chunks beyond the end of the source: the data source
             # shrank by an exact chunk multiple — same class of error as a
             # mid-chunk mismatch, so refuse rather than silently under-count
+            # (after a certified stop, leftover rows are the in-flight
+            # chunks a concurrent run committed past the stop point; after
+            # reaching a declared max_examples cap, they are a larger prior
+            # cap's chunks — both deterministically excluded, never merged)
             raise ManifestMismatch(
                 f"manifest has {len(completed)} committed chunk(s) "
                 f"({sorted(completed)}) beyond the end of the data source "
@@ -232,6 +382,19 @@ class StreamingPipeline:
         if cache_stats:
             h, mi = cache_stats.get("hits", 0), cache_stats.get("misses", 0)
             cache_stats["hit_rate"] = h / (h + mi) if h + mi else 0.0
+        logs = {
+            "streaming": {
+                "n_examples": n_examples,
+                "n_chunks": n_chunks,
+                "n_resumed_chunks": n_resumed,
+                "chunk_size": self.chunk_size,
+                "max_resident_rows": max_resident,
+                "spill_dir": self.spill_dir,
+                "stats_backend": stats_cfg.backend if use_boot else "",
+            }
+        }
+        if stopper.info() is not None:
+            logs["adaptive"] = stopper.info()
         return EvalResult(
             task_id=task.task_id,
             metrics=metrics,
@@ -241,17 +404,7 @@ class StreamingPipeline:
             cache_stats=cache_stats,
             engine_stats=engine_stats,
             timing=timing,
-            logs={
-                "streaming": {
-                    "n_examples": n_examples,
-                    "n_chunks": n_chunks,
-                    "n_resumed_chunks": n_resumed,
-                    "chunk_size": self.chunk_size,
-                    "max_resident_rows": max_resident,
-                    "spill_dir": self.spill_dir,
-                    "stats_backend": stats_cfg.backend if use_boot else "",
-                }
-            },
+            logs=logs,
             stream_stats=StreamingStats(
                 accs=accs, engine=engine,
                 chunk_size=self.chunk_size, n_examples=n_examples,
@@ -345,11 +498,13 @@ class ConcurrentStreamingExecutor:
         window: int = 2,
         spill_dir: str = "",
         resume: bool = True,
+        max_examples: int = 0,
     ):
         self.chunk_size = chunk_size
         self.window = max(1, window)
         self.spill_dir = spill_dir
         self.resume = resume
+        self.max_examples = max_examples
 
     @classmethod
     def from_task(cls, task: EvalTask) -> "ConcurrentStreamingExecutor":
@@ -359,11 +514,14 @@ class ConcurrentStreamingExecutor:
             window=s.max_inflight_chunks,
             spill_dir=s.spill_dir,
             resume=s.resume,
+            max_examples=s.max_examples,
         )
 
     def run(
         self, source: Iterable[dict], task: EvalTask, session: Any
     ) -> EvalResult:
+        if self.max_examples > 0:
+            source = itertools.islice(source, self.max_examples)
         stages = [PrepareStage(), InferStage(), ScoreStage()]
         stats_cfg = task.statistics
         names = [name for name, _ in resolve_metrics(task.metrics)]
@@ -381,6 +539,7 @@ class ConcurrentStreamingExecutor:
         completed = (
             manifest.completed() if manifest is not None and self.resume else {}
         )
+        stopper = _StopTracker(task, manifest, completed)
 
         inf = task.inference
         chunk_pool = WorkerPool(
@@ -438,6 +597,13 @@ class ConcurrentStreamingExecutor:
                 else:
                     for mw in session.middleware:
                         mw.on_chunk_end(out.index, out.state, session)
+                # the ordered merge folds chunk i only after 0..i-1, so the
+                # rule observes the exact accumulator sequence of the serial
+                # pipeline and fires at the same chunk — in-flight chunks
+                # past the stop drain (committing their manifest rows) but
+                # are never merged
+                if stopper.after_chunk(out.index, accs, n_examples):
+                    break
         finally:
             # a middleware abort (cost budget, crash injection) or a merge
             # error must join the chunk workers NOW, not at GC: in-flight
@@ -446,7 +612,9 @@ class ConcurrentStreamingExecutor:
             # so no worker keeps spending against the session afterwards
             stream.close()
 
-        if completed:
+        stopper.finish()
+        capped = 0 < self.max_examples <= n_examples
+        if completed and not stopper.stopped and not capped:
             raise ManifestMismatch(
                 f"manifest has {len(completed)} committed chunk(s) "
                 f"({sorted(completed)}) beyond the end of the data source "
@@ -460,6 +628,21 @@ class ConcurrentStreamingExecutor:
         if cache_stats:
             h, mi = cache_stats.get("hits", 0), cache_stats.get("misses", 0)
             cache_stats["hit_rate"] = h / (h + mi) if h + mi else 0.0
+        logs = {
+            "streaming": {
+                "n_examples": n_examples,
+                "n_chunks": n_chunks,
+                "n_resumed_chunks": n_resumed,
+                "chunk_size": self.chunk_size,
+                "max_inflight_chunks": self.window,
+                "max_resident_rows": resident["max"],
+                "spill_dir": self.spill_dir,
+                "chunk_pool": dataclasses.asdict(chunk_pool.stats),
+                "stats_backend": stats_cfg.backend if use_boot else "",
+            }
+        }
+        if stopper.info() is not None:
+            logs["adaptive"] = stopper.info()
         return EvalResult(
             task_id=task.task_id,
             metrics=metrics,
@@ -469,19 +652,7 @@ class ConcurrentStreamingExecutor:
             cache_stats=cache_stats,
             engine_stats=engine_stats,
             timing=timing,
-            logs={
-                "streaming": {
-                    "n_examples": n_examples,
-                    "n_chunks": n_chunks,
-                    "n_resumed_chunks": n_resumed,
-                    "chunk_size": self.chunk_size,
-                    "max_inflight_chunks": self.window,
-                    "max_resident_rows": resident["max"],
-                    "spill_dir": self.spill_dir,
-                    "chunk_pool": dataclasses.asdict(chunk_pool.stats),
-                    "stats_backend": stats_cfg.backend if use_boot else "",
-                }
-            },
+            logs=logs,
             stream_stats=StreamingStats(
                 accs=accs, engine=engine,
                 chunk_size=self.chunk_size, n_examples=n_examples,
@@ -633,9 +804,14 @@ def _run_key(task: EvalTask) -> str:
     Execution-strategy knobs (the whole InferenceConfig: worker count,
     batching, caching, rate limits; spill location; resume flag) are
     normalized away so a restart may legitimately retune them without
-    orphaning committed work."""
+    orphaning committed work.  The stopping rule is also popped: chunk
+    partials are reusable across rules (the rule decides *when sampling
+    closes*, not what any chunk computed), but the manifest's regime row
+    pins the certification regime — resuming with a changed rule is an
+    explicit :class:`ManifestMismatch`, never a silent fresh directory."""
     payload = json.loads(task.to_json())
     payload.pop("inference", None)
+    payload.pop("stopping", None)
     payload["streaming"] = {"max_memory_rows": task.streaming.max_memory_rows}
     return hashlib.sha256(
         json.dumps(payload, sort_keys=True).encode()

@@ -22,6 +22,7 @@ text/markdown reports for regression dashboards.
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Callable, Iterable, Sequence, Union
 
@@ -231,6 +232,10 @@ class SuiteResult:
     results: dict[tuple[str, str], EvalResult]
     comparisons: ComparisonMatrix
     accounting: dict
+    #: adaptive-run payload from :func:`repro.core.budget.
+    #: run_adaptive_suite` (empty for exhaustive runs): per-task consumed
+    #: examples, certified verdicts, stop reasons and the budget spent
+    adaptive: dict = dataclasses.field(default_factory=dict)
 
     # -- lookups -----------------------------------------------------------------
 
@@ -322,6 +327,41 @@ class SuiteResult:
                         f"| {cmp.test.test} | {cmp.test.p_value:.4g} "
                         f"| {verdict} |"
                     )
+            lines.append("")
+        if self.adaptive:
+            b = self.adaptive.get("budget", {})
+            lines.append("## Adaptive evaluation")
+            lines.append("")
+            lines.append(
+                f"budget: {b.get('spent', 0)} / {b.get('total_examples', 0)} "
+                f"examples spent over {b.get('rounds', 0)} round(s) "
+                f"(alpha={b.get('alpha', 0)}, margin={b.get('margin', 0)})"
+            )
+            lines.append("")
+            lines.append(
+                "| task | metric | consumed | exhausted | outcome "
+                "| n at stop | half-width | certified verdicts |"
+            )
+            lines.append("|---" * 8 + "|")
+            for tid in self.tasks:
+                t = self.adaptive.get("tasks", {}).get(tid)
+                if t is None:
+                    continue
+                consumed = ", ".join(
+                    f"{lab}: {n}" for lab, n in t.get("consumed", {}).items()
+                )
+                verdicts = "; ".join(
+                    f"{pair}: {v}" for pair, v in t.get("verdicts", {}).items()
+                ) or "—"
+                hw = t.get("half_width", float("inf"))
+                hw_s = f"{hw:.4f}" if math.isfinite(hw) else "inf"
+                lines.append(
+                    f"| {tid} | {t.get('metric', '?')} | {consumed} "
+                    f"| {'yes' if t.get('exhausted') else 'no'} "
+                    f"| {t.get('reason') or 'open'} "
+                    f"| {t.get('n_at_stop', 0)} "
+                    f"| {hw_s} | {verdicts} |"
+                )
             lines.append("")
         serving = self.accounting.get("serving") or []
         if serving:

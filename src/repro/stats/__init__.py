@@ -14,6 +14,18 @@ from repro.stats.effect import (
     hedges_g_from_moments,
     odds_ratio,
 )
+from repro.stats.sequential import (
+    SeqInterval,
+    SequentialComparison,
+    StopDecision,
+    StoppingRule,
+    certify_verdict,
+    mixture_half_width,
+    paired_delta_variance,
+    rho_opt,
+    sequential_ci,
+    sequential_compare,
+)
 from repro.stats.select import (
     TestRecommendation,
     is_binary,
@@ -43,11 +55,15 @@ from repro.stats.streaming import (
 __all__ = [
     "BootstrapEngine", "EffectSize", "Interval", "MetricAccumulator",
     "NumpyBootstrapEngine", "PallasBootstrapEngine", "PoissonBootstrap",
+    "SeqInterval", "SequentialComparison", "StopDecision", "StoppingRule",
     "StreamingStats", "TestRecommendation", "TestResult", "bca_bootstrap",
-    "bootstrap_engine_from_state", "cohens_d", "compute_ci", "hedges_g",
+    "bootstrap_engine_from_state", "certify_verdict", "cohens_d",
+    "compute_ci", "hedges_g",
     "hedges_g_from_moments", "is_binary", "make_bootstrap_engine",
-    "mcnemar_test", "odds_ratio", "paired_t_test", "percentile_bootstrap",
-    "permutation_test", "recommend_test", "replicate_p_value",
-    "run_recommended", "shapiro_wilk", "streaming_ci", "t_interval",
+    "mcnemar_test", "mixture_half_width", "odds_ratio",
+    "paired_delta_variance", "paired_t_test", "percentile_bootstrap",
+    "permutation_test", "recommend_test", "replicate_p_value", "rho_opt",
+    "run_recommended", "sequential_ci", "sequential_compare",
+    "shapiro_wilk", "streaming_ci", "t_interval",
     "wilcoxon_signed_rank", "wilson_interval",
 ]

@@ -26,16 +26,27 @@ from repro.storage.deltalite import DeltaLite
 
 
 class ChunkManifest:
+    #: reserved (negative) chunk_id keys for run-level adaptive metadata:
+    #: the certification-regime row (stopping-rule fingerprint, written
+    #: before the first chunk of an adaptive run) and the stop-decision
+    #: row (written exactly once, when the rule fires).  Kept in the same
+    #: ACID table as the chunk rows so a stop commit is atomic with the
+    #: chunk commits it summarizes.
+    REGIME_KEY = -2
+    STOP_KEY = -1
+
     def __init__(self, root: str, run_key: str):
         self.run_key = run_key
         self.path = os.path.join(root, run_key)
         self.table = DeltaLite(self.path, key_column="chunk_id")
 
     def completed(self) -> dict[int, dict]:
-        """chunk_id -> committed state row (latest wins on duplicates)."""
+        """chunk_id -> committed state row (latest wins on duplicates).
+        Reserved metadata rows (negative ids) are excluded — read them
+        through :meth:`stop_row` / :meth:`regime_row`."""
         out: dict[int, dict] = {}
         for row in self.table.read():
-            if row.get("run_key") == self.run_key:
+            if row.get("run_key") == self.run_key and int(row["chunk_id"]) >= 0:
                 out[int(row["chunk_id"])] = row
         return out
 
@@ -67,3 +78,26 @@ class ChunkManifest:
         if row is not None and row.get("run_key") != self.run_key:
             return None
         return row
+
+    # -- adaptive-run metadata rows -------------------------------------------
+
+    def regime_row(self) -> dict | None:
+        """The committed certification-regime row, or None."""
+        return self.get(self.REGIME_KEY)
+
+    def try_record_regime(self, state: dict) -> bool:
+        """First-committer-wins commit of the certification regime (the
+        stopping-rule fingerprint).  Exactly one regime row ever exists;
+        racing adaptive drivers resolve through the conditional append and
+        losers re-read and validate."""
+        return self.try_record(self.REGIME_KEY, state)
+
+    def stop_row(self) -> dict | None:
+        """The committed stop decision, or None (run never stopped)."""
+        return self.get(self.STOP_KEY)
+
+    def try_record_stop(self, state: dict) -> bool:
+        """First-committer-wins commit of the stop decision.  The stop
+        point is part of the resume contract: once committed, every resume
+        terminates at exactly this chunk and never re-opens sampling."""
+        return self.try_record(self.STOP_KEY, state)
