@@ -35,6 +35,8 @@ from repro.core import (
 )
 from repro.data import iter_qa_examples, iter_summarization_examples
 
+from benchmarks import artifacts
+
 M_STRONG = EngineModelConfig(provider="openai", model_name="gpt-4o")
 M_WEAK = EngineModelConfig(provider="openai", model_name="gpt-3.5-turbo")
 ALPHA = 0.05
@@ -145,8 +147,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         "min_savings_floor": MIN_SAVINGS,
         "ok": ok,
     }
-    with open("BENCH_adaptive.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_adaptive.json", payload)
 
     lines = [
         f"adaptive_eval,{adaptive_wall * 1e6 / max(adaptive_examples, 1):.1f},"
@@ -170,7 +171,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(smoke=args.smoke, full=args.full):
         print(line)
-    print("wrote BENCH_adaptive.json")
+    print(f"wrote {artifacts.bench_path('BENCH_adaptive.json')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,39 @@
+"""Benchmark artifact output directory.
+
+Every suite that emits a ``BENCH_*.json`` payload writes it through
+:func:`write_bench`, so ``python -m benchmarks.run --out DIR`` collects
+the artifacts in one clean directory instead of littering the repo root
+(and CI's regression gate diffs that directory against the committed
+baselines in ``benchmarks/baselines/``).  The default stays the current
+working directory for bare ``python -m benchmarks.<suite>`` runs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+_OUT_DIR = pathlib.Path(".")
+
+
+def set_out_dir(path: str | pathlib.Path) -> pathlib.Path:
+    global _OUT_DIR
+    _OUT_DIR = pathlib.Path(path)
+    _OUT_DIR.mkdir(parents=True, exist_ok=True)
+    return _OUT_DIR
+
+
+def out_dir() -> pathlib.Path:
+    return _OUT_DIR
+
+
+def bench_path(name: str) -> pathlib.Path:
+    return _OUT_DIR / name
+
+
+def write_bench(name: str, payload: Any) -> pathlib.Path:
+    path = bench_path(name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path

@@ -28,6 +28,8 @@ import json
 import multiprocessing as mp
 import time
 
+from benchmarks import artifacts
+
 #: the acceptance point: device/blocked backend must cut wall-clock >= 5x
 #: and peak host allocation >= 10x vs the (B, n) weight-matrix path here
 ACCEPT_N, ACCEPT_B = 100_000, 2_000
@@ -217,8 +219,7 @@ def run(*, smoke: bool = False) -> list[str]:
             ),
         },
     }
-    with open("BENCH_stats.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_stats.json", payload)
 
     if not payload["acceptance"]["ok"]:
         raise RuntimeError(
@@ -235,7 +236,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(smoke=args.smoke):
         print(line)
-    print("wrote BENCH_stats.json")
+    print(f"wrote {artifacts.bench_path('BENCH_stats.json')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,201 @@
+"""Benchmark regression gate.
+
+Diffs fresh ``BENCH_*.json`` smoke artifacts (``python -m benchmarks.run
+--smoke --out DIR``) against the committed baselines in
+``benchmarks/baselines/`` and fails CI when performance or contracts
+regress:
+
+* **gauges** — machine-portable RATIO metrics only (speedups, dedup
+  rates, example savings): a fresh value more than ``--tolerance``
+  (default 20%) below its baseline fails.  Absolute wall seconds are
+  never compared — the committed baselines come from a different machine
+  than the CI runner, and only ratios survive that move.
+* **contracts** — every boolean acceptance flag in the fresh payloads
+  (``ok``, ``*identical*``, ``bounded``, ``no_rerun``, ``*match*``):
+  any ``False`` fails regardless of baselines.
+* **coverage** — a baseline artifact whose fresh counterpart is missing
+  fails (a suite silently dropping out of the smoke run is itself a
+  regression); a fresh artifact without a baseline is only noted, so new
+  benchmarks can land before their baseline is committed.
+
+Writes a JSON diff report (``--report``) for the CI artifact upload and
+exits non-zero on any failure.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      --fresh bench-artifacts [--baselines benchmarks/baselines] \\
+      [--report bench-artifacts/regression_report.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Any
+
+#: ratio metrics compared against baseline, per artifact (dotted paths).
+#: Higher is better for every gauge listed here.
+GAUGES: dict[str, list[str]] = {
+    "BENCH_serving.json": [
+        "speedup",
+        "dedup_rate",
+        "replica_scaling.speedup_2",
+        "replica_scaling.speedup_4",
+    ],
+    "BENCH_concurrency.json": ["speedup_at_4_inflight"],
+    "BENCH_suite.json": ["speedup"],
+    "BENCH_stats.json": ["acceptance.speedup"],
+    "BENCH_adaptive.json": ["example_savings"],
+    "BENCH_streaming.json": [],  # contract flags only
+}
+
+#: boolean keys treated as acceptance contracts when False
+def _is_contract_key(key: str) -> bool:
+    return (
+        key == "ok"
+        or "identical" in key
+        or "match" in key
+        or key in ("bounded", "no_rerun", "resumable", "parity")
+    )
+
+
+def _lookup(payload: Any, dotted: str) -> Any:
+    cur = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _contract_violations(payload: Any, prefix: str = "") -> list[str]:
+    out: list[str] = []
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if isinstance(v, bool):
+                if _is_contract_key(k) and v is False:
+                    out.append(path)
+            elif isinstance(v, (dict, list)):
+                out.extend(_contract_violations(v, path))
+    elif isinstance(payload, list):
+        for i, v in enumerate(payload):
+            out.extend(_contract_violations(v, f"{prefix}[{i}]"))
+    return out
+
+
+def check(
+    fresh_dir: pathlib.Path,
+    baseline_dir: pathlib.Path,
+    tolerance: float,
+) -> dict:
+    failures: list[str] = []
+    notes: list[str] = []
+    gauges: list[dict] = []
+
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    if not baselines:
+        failures.append(f"no baselines found under {baseline_dir}")
+    if not fresh_files:
+        failures.append(f"no fresh artifacts found under {fresh_dir}")
+
+    fresh_payloads: dict[str, Any] = {}
+    for path in fresh_files:
+        try:
+            fresh_payloads[path.name] = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            failures.append(f"{path.name}: unreadable fresh artifact ({e})")
+
+    # contracts: every boolean acceptance flag in every fresh payload
+    for name, payload in sorted(fresh_payloads.items()):
+        for path in _contract_violations(payload):
+            failures.append(f"{name}: contract flag {path} is False")
+
+    for bpath in baselines:
+        name = bpath.name
+        base = json.loads(bpath.read_text())
+        if name not in fresh_payloads:
+            failures.append(
+                f"{name}: baseline exists but the smoke run produced no "
+                f"fresh artifact"
+            )
+            continue
+        fresh = fresh_payloads[name]
+        for dotted in GAUGES.get(name, []):
+            bval, fval = _lookup(base, dotted), _lookup(fresh, dotted)
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                notes.append(f"{name}: baseline lacks gauge {dotted}")
+                continue
+            if not isinstance(fval, (int, float)) or isinstance(fval, bool):
+                failures.append(
+                    f"{name}: gauge {dotted} missing from fresh artifact "
+                    f"(baseline {bval:.3f})"
+                )
+                continue
+            floor = bval * (1.0 - tolerance)
+            entry = {
+                "artifact": name, "gauge": dotted,
+                "baseline": bval, "fresh": fval,
+                "floor": floor, "ok": fval >= floor,
+            }
+            gauges.append(entry)
+            if not entry["ok"]:
+                failures.append(
+                    f"{name}: {dotted} regressed {bval:.3f} -> {fval:.3f} "
+                    f"(floor {floor:.3f} at {tolerance:.0%} tolerance)"
+                )
+
+    for name in sorted(set(fresh_payloads) - {b.name for b in baselines}):
+        notes.append(
+            f"{name}: no committed baseline — commit "
+            f"benchmarks/baselines/{name} to gate it"
+        )
+
+    return {
+        "ok": not failures,
+        "tolerance": tolerance,
+        "failures": failures,
+        "notes": notes,
+        "gauges": gauges,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fresh", required=True,
+                   help="directory with fresh BENCH_*.json artifacts")
+    p.add_argument("--baselines", default="benchmarks/baselines")
+    p.add_argument("--report", default="",
+                   help="where to write the JSON diff report")
+    p.add_argument("--tolerance", type=float, default=0.20,
+                   help="allowed relative drop per gauge (default 0.20)")
+    args = p.parse_args()
+
+    report = check(
+        pathlib.Path(args.fresh), pathlib.Path(args.baselines),
+        args.tolerance,
+    )
+    if args.report:
+        out = pathlib.Path(args.report)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2))
+        print(f"wrote {out}")
+    for g in report["gauges"]:
+        mark = "ok " if g["ok"] else "REGRESSED"
+        print(
+            f"{mark} {g['artifact']}:{g['gauge']} "
+            f"baseline={g['baseline']:.3f} fresh={g['fresh']:.3f}"
+        )
+    for n in report["notes"]:
+        print(f"note: {n}")
+    if not report["ok"]:
+        for f in report["failures"]:
+            print(f"FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"benchmark regression gate passed ({len(report['gauges'])} gauges)")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,8 @@ from repro.core import (
 )
 from repro.data import iter_qa_examples
 
+from benchmarks import artifacts
+
 MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
 
 #: wall-clock latency model: small but real sleeps, so chunk-level
@@ -135,8 +137,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         "byte_identical_metrics": identical,
         "ok": ok,
     }
-    with open("BENCH_concurrency.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_concurrency.json", payload)
 
     lines.append(
         f"concurrent_streaming_accept,0,"
@@ -157,7 +158,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(smoke=args.smoke, full=args.full):
         print(line)
-    print("wrote BENCH_concurrency.json")
+    print(f"wrote {artifacts.bench_path('BENCH_concurrency.json')}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@ original sample counts (slower); the default sizes finish in minutes on
 CPU; ``--smoke`` shrinks every suite to CI-friendly sizes (a couple of
 minutes total) while still emitting the ``BENCH_*.json`` artifacts.
 
-  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only fig2_scaling,...]
+  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--out DIR] \
+      [--only fig2_scaling,...]
 """
 
 from __future__ import annotations
@@ -21,10 +22,18 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="CI sizes: fast run of every suite + BENCH artifacts")
     p.add_argument("--only", default="")
+    p.add_argument("--out", default="",
+                   help="directory for BENCH_*.json artifacts "
+                        "(default: current directory)")
     args = p.parse_args()
     if args.full and args.smoke:
         p.error("--full and --smoke are mutually exclusive")
     smoke = args.smoke
+    if args.out:
+        from benchmarks import artifacts
+
+        print(f"# artifacts -> {artifacts.set_out_dir(args.out)}",
+              file=sys.stderr)
 
     from benchmarks import (
         adaptive_eval,

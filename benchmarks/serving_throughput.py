@@ -17,6 +17,15 @@ pre-service code path, kept verbatim as ``LockStepInferStage``):
   Acceptance: **>= 90% dedup** (coalesced / submitted) where the
   lock-step baseline pays for every repeat.
 
+* **replica scaling** — the same multi-task suite (two models, so the
+  pairwise significance matrix is exercised too) served by 1, 2 and 4
+  data-parallel replicas per engine.  Each replica is its own slot
+  engine behind one submit queue (``InferenceConfig.n_replicas``), so
+  suite throughput should scale near-linearly while the routing stays
+  stats-plane-invisible.  Acceptance: **>= 1.7x at 2 replicas, >= 3x at
+  4**, with metrics, CIs and significance matrices byte-identical to the
+  1-replica run.
+
 Emits ``BENCH_serving.json``.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke|--full]
@@ -39,6 +48,8 @@ from repro.core import (
 )
 from repro.data import iter_qa_examples, qa_examples
 
+from benchmarks import artifacts
+
 SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
 API_MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
 
@@ -53,13 +64,13 @@ API_KW = {"wall_clock": True, "base_latency_ms": 60.0, "per_token_ms": 0.0}
 
 
 def _task(task_id: str, *, model, use_service: bool, n_workers: int,
-          chunk: int, window: int) -> EvalTask:
+          chunk: int, window: int, n_replicas: int = 1) -> EvalTask:
     return EvalTask(
         task_id=task_id,
         model=model,
         inference=InferenceConfig(
             batch_size=16, n_workers=n_workers, cache_dir="",
-            use_service=use_service,
+            use_service=use_service, n_replicas=n_replicas,
         ),
         metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
         statistics=StatisticsConfig(
@@ -75,7 +86,9 @@ def _metric_dict(res) -> dict:
     }
 
 
-def _multi_task(n_per_task: int, n_tasks: int, chunk: int, window: int) -> dict:
+def _multi_task(
+    n_per_task: int, n_tasks: int, chunk: int, window: int, trials: int = 3,
+) -> dict:
     def build_suite(use_service: bool) -> EvalSuite:
         suite = EvalSuite("serving")
         for t in range(n_tasks):
@@ -114,8 +127,17 @@ def _multi_task(n_per_task: int, n_tasks: int, chunk: int, window: int) -> dict:
                 out["batcher"] = snap["batcher"]
         return out
 
-    baseline = run(False)
-    service = run(True)
+    # min-wall over trials on BOTH sides: the lock-step reference
+    # serializes behind the engine lock, so its wall is scheduling-noise
+    # sensitive and a single sample makes the speedup ratio flaky
+    def best_of(use_service: bool) -> dict:
+        attempts = [run(use_service) for _ in range(trials)]
+        for r in attempts[1:]:
+            assert r["metrics"] == attempts[0]["metrics"]
+        return min(attempts, key=lambda r: r["wall_s"])
+
+    baseline = best_of(False)
+    service = best_of(True)
     n_total = n_per_task * n_tasks
     return {
         "n_tasks": n_tasks,
@@ -128,6 +150,122 @@ def _multi_task(n_per_task: int, n_tasks: int, chunk: int, window: int) -> dict:
         "tokens_per_step": service.get("batcher", {}).get("tokens_per_step"),
         "metrics_identical": baseline["metrics"] == service["metrics"],
         "service": service.get("service"),
+    }
+
+
+#: replica-scaling engine: slower steps than SLOT_KW so decode wall
+#: dominates host-side scoring (the regime where adding replicas is the
+#: only lever left), and a narrow output-length band so the end-of-run
+#: tail does not idle a large fleet
+REPLICA_SLOT_KW = {"n_slots": 8, "step_ms": 2.5, "wall_clock": True,
+                   "min_out": 24, "max_out": 40}
+SLOT_MODEL_B = EngineModelConfig(provider="slotsim", model_name="slot-sim-b")
+
+
+def _cmp_cell(c) -> dict:
+    return {
+        "diff": c.diff, "diff_ci": list(c.diff_ci),
+        "p_value": c.test.p_value, "effect": c.effect.value,
+    }
+
+
+def _replica_scaling(
+    n_per_task: int, n_tasks: int, chunk: int, window: int,
+    counts: tuple[int, ...] = (1, 2, 4),
+    trials: int = 3,
+) -> dict:
+    """Same suite, growing replica fleet: wall-clock must scale and the
+    statistics plane must not move a byte.
+
+    Each fleet size is timed ``trials`` times and the fastest wall is
+    kept (for the 1-replica base too): a single run is only a few
+    seconds, so hundreds of ms of host noise can eat the scaling ratio;
+    min-wall is the standard noise-floor estimator.  Every trial must
+    still produce byte-identical statistics."""
+
+    def build_suite(n_replicas: int) -> EvalSuite:
+        suite = EvalSuite(f"replicas-{n_replicas}")
+        for t in range(n_tasks):
+            suite.add_task(
+                _task(
+                    f"scale-{t}", model=SLOT_MODEL, use_service=True,
+                    n_workers=4, chunk=chunk, window=window,
+                    n_replicas=n_replicas,
+                ),
+                (lambda t=t: iter_qa_examples(n_per_task, seed=300 + t)),
+            )
+        return suite.sweep_models([SLOT_MODEL, SLOT_MODEL_B])
+
+    def run(n_replicas: int) -> dict:
+        t0 = time.perf_counter()
+        with EvalSession(engine_kwargs=REPLICA_SLOT_KW) as session:
+            res = session.run_suite(
+                build_suite(n_replicas), parallel_jobs=n_tasks * 2
+            )
+            serving = session.serving_stats()
+        wall = time.perf_counter() - t0
+        metrics = {
+            f"{model}|{task_id}": _metric_dict(res.results[(model, task_id)])
+            for (model, task_id) in res.results
+        }
+        comparisons = {
+            task_id: {
+                metric: {
+                    "|".join(pair): _cmp_cell(cell)
+                    for pair, cell in cells.items()
+                }
+                for metric, cells in metrics_.items()
+            }
+            for task_id, metrics_ in res.comparisons.items()
+        }
+        assert all(s["replicas"] == n_replicas for s in serving)
+        occ = [
+            s["batcher"]["slot_occupancy"] for s in serving if "batcher" in s
+        ]
+        return {
+            "wall_s": wall,
+            "metrics": metrics,
+            "comparisons": comparisons,
+            "occupancy": sum(occ) / len(occ) if occ else None,
+        }
+
+    identical = True
+
+    def best_of(n_replicas: int) -> dict:
+        nonlocal identical
+        attempts = [run(n_replicas) for _ in range(trials)]
+        for r in attempts[1:]:
+            identical = identical and (
+                r["metrics"] == attempts[0]["metrics"]
+                and r["comparisons"] == attempts[0]["comparisons"]
+            )
+        return min(attempts, key=lambda r: r["wall_s"])
+
+    runs = {n: best_of(n) for n in counts}
+    base = runs[counts[0]]
+    per_replica = {}
+    for n, r in runs.items():
+        identical = identical and (
+            r["metrics"] == base["metrics"]
+            and r["comparisons"] == base["comparisons"]
+        )
+        per_replica[str(n)] = {
+            "wall_s": r["wall_s"],
+            "speedup": base["wall_s"] / r["wall_s"],
+            "occupancy": r["occupancy"],
+        }
+    speedup_2 = per_replica.get("2", {}).get("speedup", 0.0)
+    speedup_4 = per_replica.get("4", {}).get("speedup", 0.0)
+    return {
+        "n_tasks": n_tasks,
+        "n_models": 2,
+        "n_examples_total": n_per_task * n_tasks * 2,
+        "engine": {"model": SLOT_MODEL.model_name, **REPLICA_SLOT_KW},
+        "per_replica": per_replica,
+        "speedup_2": speedup_2,
+        "speedup_4": speedup_4,
+        "byte_identical_stats": identical,
+        "ok": speedup_2 >= 1.7 and speedup_4 >= 3.0 and identical,
     }
 
 
@@ -174,12 +312,15 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
     if smoke:
         n_per_task, n_tasks, chunk, window = 100, 3, 25, 4
         n_unique, repeats, n_workers = 60, 16, 8
+        rs_per_task, rs_tasks, rs_chunk, rs_window = 150, 2, 30, 4
     elif full:
         n_per_task, n_tasks, chunk, window = 600, 4, 75, 8
         n_unique, repeats, n_workers = 120, 16, 8
+        rs_per_task, rs_tasks, rs_chunk, rs_window = 240, 3, 60, 8
     else:
         n_per_task, n_tasks, chunk, window = 250, 3, 50, 4
         n_unique, repeats, n_workers = 60, 16, 8
+        rs_per_task, rs_tasks, rs_chunk, rs_window = 150, 2, 30, 4
 
     lines = []
     mt = _multi_task(n_per_task, n_tasks, chunk, window)
@@ -198,25 +339,36 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         f"identical={de['metrics_identical']}"
     )
 
+    rs = _replica_scaling(rs_per_task, rs_tasks, rs_chunk, rs_window)
+    rs_us = rs["per_replica"]["4"]["wall_s"] * 1e6 / rs["n_examples_total"]
+    lines.append(
+        f"serving_replicas,{rs_us:.1f},"
+        f"speedup@2={rs['speedup_2']:.2f}x speedup@4={rs['speedup_4']:.2f}x "
+        f"identical={rs['byte_identical_stats']}"
+    )
+
     ok = (
         mt["speedup"] >= 2.0
         and mt["metrics_identical"]
         and de["dedup_rate"] >= 0.9
         and de["metrics_identical"]
+        and rs["ok"]
     )
     payload = {
         "mode": "smoke" if smoke else ("full" if full else "default"),
         "multi_task": mt,
         "dedup": de,
+        "replica_scaling": rs,
         "speedup": mt["speedup"],
         "dedup_rate": de["dedup_rate"],
         "ok": ok,
     }
-    with open("BENCH_serving.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_serving.json", payload)
     lines.append(
         f"serving_accept,0,speedup={mt['speedup']:.2f}x "
-        f"dedup={de['dedup_rate']:.1%} ok={ok}"
+        f"dedup={de['dedup_rate']:.1%} "
+        f"replicas@2={rs['speedup_2']:.2f}x @4={rs['speedup_4']:.2f}x "
+        f"ok={ok}"
     )
     if not ok:
         raise RuntimeError(f"serving acceptance checks failed: {payload}")
@@ -232,7 +384,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(smoke=args.smoke, full=args.full):
         print(line)
-    print("wrote BENCH_serving.json")
+    print(f"wrote {artifacts.bench_path('BENCH_serving.json')}")
 
 
 if __name__ == "__main__":

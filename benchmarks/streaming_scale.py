@@ -33,6 +33,8 @@ from repro.core import (
 from repro.data import iter_qa_examples, qa_examples
 from repro.ft import ChunkCrashMiddleware, Fault, SimulatedCrash
 
+from benchmarks import artifacts
+
 MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
 
 
@@ -191,8 +193,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         "ci_crosscheck": xcheck,
         "resume": resume,
     }
-    with open("BENCH_streaming.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_streaming.json", payload)
 
     lines.append(
         f"streaming_scale_bounded,0,peaks_mb="
@@ -220,7 +221,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(smoke=args.smoke, full=args.full):
         print(line)
-    print("wrote BENCH_streaming.json")
+    print(f"wrote {artifacts.bench_path('BENCH_streaming.json')}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,8 @@ from repro.core import (
 from repro.core.engines import LocalJaxEngine
 from repro.data import mixed_examples
 
+from benchmarks import artifacts
+
 MODELS = {
     "api": [
         EngineModelConfig(provider="openai", model_name="gpt-4o-mini"),
@@ -127,8 +129,7 @@ def run(*, local: bool = False, n_tasks: int = 3) -> list[str]:
         "engine_inits_runner": runner_inits.count,
         "engine_inits_session": session_inits.count,
     }
-    with open("BENCH_suite.json", "w") as f:
-        json.dump(payload, f, indent=1)
+    artifacts.write_bench("BENCH_suite.json", payload)
 
     return [
         f"suite_overhead_runner,{runner_s * 1e6 / n_jobs:.0f},"
@@ -150,7 +151,7 @@ def main() -> None:
     args = p.parse_args()
     for line in run(local=args.local, n_tasks=args.n_tasks):
         print(line)
-    print("wrote BENCH_suite.json")
+    print(f"wrote {artifacts.bench_path('BENCH_suite.json')}")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,22 @@ class InferenceConfig:
     coalesce: bool = True
     #: batch-formation window for a cold batcher loop (slot engines only)
     max_batch_wait_ms: float = 2.0
+    #: data-parallel engine replicas behind one service front: each gets
+    #: its own engine instance (own batcher / decode slots; local engines
+    #: additionally get their own device group from the mesh) while the
+    #: flight table stays global — identical in-flight prompts still pay
+    #: one engine call no matter which replica serves them.  Responses are
+    #: a pure function of the request, so replica count never changes a
+    #: metric byte.
+    n_replicas: int = 1
+    #: replica-placement policy: least_loaded | prefix_affinity | round_robin
+    routing: str = "least_loaded"
+    #: prompt-prefix bytes hashed by the prefix_affinity policy
+    routing_prefix_len: int = 64
+    #: per-step prefill admissions cap for slot engines (0 = unlimited):
+    #: disaggregates prefill from decode so a long-prompt backlog queues
+    #: for a prefill slot instead of stalling every decode step
+    max_prefills_per_step: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -102,6 +102,10 @@ class BatcherStats:
     #: one program per length; callers bound this by bucketing prompts)
     prefill_recompiles: int = 0
     completions: int = 0
+    #: admissions pushed past the current step by the per-step prefill cap
+    #: (prefill/decode disaggregation: decode keeps stepping, the prompt
+    #: waits one step for a prefill slot instead of stalling the gang)
+    prefills_deferred: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -119,9 +123,11 @@ class BatcherStats:
             "admissions": self.admissions,
             "completions": self.completions,
             "tokens_generated": self.tokens_generated,
+            "active_slot_steps": self.active_slot_steps,
             "tokens_per_step": round(self.tokens_per_step, 3),
             "slot_occupancy": round(self.occupancy, 4),
             "prefill_recompiles": self.prefill_recompiles,
+            "prefills_deferred": self.prefills_deferred,
         }
 
 
@@ -315,6 +321,7 @@ class SimulatedSlotEngine(InferenceEngine):
         wall_clock: bool = False,
         min_out: int = 4,
         max_out: int = 48,
+        max_prefills_per_step: int = 0,
     ):
         self.model = model
         self.n_slots = n_slots
@@ -322,6 +329,9 @@ class SimulatedSlotEngine(InferenceEngine):
         self.wall_clock = wall_clock
         self.min_out = min_out
         self.max_out = max_out
+        #: 0 = unlimited; otherwise at most this many queued prompts are
+        #: prefilled into free slots per pump (prefill/decode split)
+        self.max_prefills_per_step = max_prefills_per_step
         self.calls = 0
         self.total_cost = 0.0
         self.initialized = False
@@ -414,12 +424,24 @@ class SimulatedSlotEngine(InferenceEngine):
         with self._lock:
             return bool(self._queue) or any(s is not None for s in self._slots)
 
+    def slots_busy(self) -> int:
+        with self._lock:
+            return sum(1 for s in self._slots if s is not None) + len(self._queue)
+
     def stream_pump(self) -> list[tuple[int, InferenceResponse]]:
         with self._lock:
+            admitted = 0
             for i, s in enumerate(self._slots):
                 if s is None and self._queue:
+                    if (
+                        self.max_prefills_per_step
+                        and admitted >= self.max_prefills_per_step
+                    ):
+                        self.stats.prefills_deferred += len(self._queue)
+                        break
                     rid, req, out_len = self._queue.pop(0)
                     self._account_admission(req)
+                    admitted += 1
                     self._slots[i] = {
                         "rid": rid, "req": req, "left": out_len,
                         "out": out_len, "start_step": self.stats.steps,
@@ -475,10 +497,16 @@ class LocalJaxEngine(InferenceEngine):
     supports_streaming = True
 
     def __init__(self, model: EngineModelConfig, *, n_slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, devices: Any = None,
+                 max_prefills_per_step: int = 0):
         self.model_cfg = model
         self.n_slots = n_slots
         self.max_len = max_len
+        #: replica placement: None = default device; one device = pinned
+        #: data-parallel replica; several devices = tensor-parallel replica
+        #: over a ("data","model") mesh built from this group
+        self.devices = tuple(devices) if devices else None
+        self.max_prefills_per_step = max_prefills_per_step
         self.initialized = False
         self._scheduler = None
         self._tokenizer = None
@@ -507,11 +535,23 @@ class LocalJaxEngine(InferenceEngine):
         params = pm.init_params(
             jax.random.key(self.model_cfg.seed), model.param_specs()
         )
+        device = rules = None
+        if self.devices and len(self.devices) == 1:
+            device = self.devices[0]
+        elif self.devices:
+            from repro.launch.mesh import make_replica_mesh
+            from repro.sharding import SERVE_RULES, ShardingRules
+
+            rules = ShardingRules(
+                SERVE_RULES, make_replica_mesh(self.devices)
+            )
         self._scheduler = ContinuousBatcher(
             model, cfg, params,
             n_slots=self.n_slots, max_len=self.max_len,
             eos_id=self._tokenizer.eos_id,
             temperature=self.model_cfg.temperature,
+            max_prefills_per_step=self.max_prefills_per_step,
+            device=device, rules=rules,
         )
         self.initialized = True
 
@@ -605,6 +645,13 @@ class LocalJaxEngine(InferenceEngine):
                 and (sched.queue or sched.slots_busy or sched.completions)
             )
 
+    def slots_busy(self) -> int:
+        with self._lock:
+            sched = self._scheduler
+            if sched is None:
+                return 0
+            return sched.slots_busy + len(sched.queue)
+
     def serving_stats(self) -> dict:
         with self._lock:
             if self._scheduler is None:
@@ -632,14 +679,22 @@ class EngineRegistry:
     """
 
     def __init__(self) -> None:
-        self._engines: dict[tuple[EngineModelConfig, str], InferenceEngine] = {}
+        self._engines: dict[
+            tuple[EngineModelConfig, int, str], InferenceEngine
+        ] = {}
         self.initializations = 0
         # concurrent chunk workers may request the same engine at once;
         # initialization must happen exactly once per config
         self._lock = threading.Lock()
 
-    def get(self, model: EngineModelConfig, **kw: Any) -> InferenceEngine:
-        key = (model, json.dumps(kw, sort_keys=True, default=str))
+    def get(
+        self, model: EngineModelConfig, *, replica: int = 0, **kw: Any
+    ) -> InferenceEngine:
+        """``replica`` distinguishes otherwise-identical data-parallel
+        engine instances: replica i of a model is its own engine (own
+        batcher, own decode slots), while repeated lookups of the same
+        (model, replica, kwargs) still amortize to one initialization."""
+        key = (model, replica, json.dumps(kw, sort_keys=True, default=str))
         with self._lock:
             engine = self._engines.get(key)
             if engine is None:

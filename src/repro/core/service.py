@@ -1,5 +1,6 @@
 """Shared asynchronous inference service: cross-task continuous batching
-with single-flight request coalescing.
+with single-flight request coalescing, fanned out across N data-parallel
+engine replicas.
 
 Before this module, inference was lock-step per shard: every pipeline
 stage blocked on its own ``engine.infer`` calls, the local JAX engine
@@ -18,34 +19,44 @@ inverts control: tasks, chunks, models and suites **submit**
   submitters become waiters on the same flight and are counted as
   ``coalesced``.  The cache prevents duplicate spend across time;
   single-flight closes the concurrency window the cache cannot see.
+  The flight table is **global across replicas**: a duplicate coalesces
+  onto the original flight no matter which replica serves it.
 * **central admission** — the per-task rate limiter is acquired by the
   dispatcher immediately before the engine call, not by worker threads
   sleeping inside the pipeline, so budget flows to whatever is runnable.
 * **continuous batching** — engines exposing the slot-streaming interface
   (``supports_streaming``: the local JAX engine, the simulated slot
-  engine) are driven by ONE persistent batcher loop: queued prompts are
-  admitted into decode slots as slots free, so batches form across
-  shards, chunks, tasks and suites instead of inside one shard.
-  API-style engines get a dispatcher-thread pool instead, sized by the
-  pipeline stages currently attached (K concurrent chunk workers with
-  ``n_workers`` each get ~K x n_workers overlapping calls, matching the
-  lock-step path's aggregate concurrency).
+  engine) are driven by ONE persistent batcher loop *per replica*:
+  queued prompts are admitted into decode slots as slots free, so
+  batches form across shards, chunks, tasks and suites instead of
+  inside one shard.  API-style engines get a dispatcher-thread pool per
+  replica instead, sized by the pipeline stages currently attached.
+* **replica routing** — with ``n_replicas > 1`` one submit queue fans
+  out to N engine replicas through a :class:`ReplicaRouter`.  Policies:
+  ``least_loaded`` (fewest outstanding requests — busy decode slots plus
+  backlog), ``prefix_affinity`` (prompt-prefix hash, so shared few-shot
+  headers land on the same batcher and its warmed prefixes), and
+  ``round_robin``.  Routing is *stats-plane-invisible*: responses are a
+  pure function of the request, so placement never changes a byte of
+  evaluation output (see the determinism contract below).
 
 Determinism contract: responses are a pure function of the request key
 (prompt, model, provider, temperature, max_tokens) — simulated engines by
 construction, the local engine because greedy decode at temperature 0 is
-batch-composition independent.  Coalescing therefore never changes a
-response byte; it only changes how many engine calls paid for it.
+batch-composition independent.  Coalescing and routing therefore never
+change a response byte; they only change how many engine calls paid for
+it and which replica served it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import queue
 import threading
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 from repro.core.engines import (
     InferenceEngine,
@@ -110,6 +121,7 @@ class _Submission:
     est_tokens: float
     max_retries: int
     retry_delay: float
+    replica: "_Replica | None" = None
 
 
 @dataclasses.dataclass
@@ -137,23 +149,160 @@ class ServiceStats:
         }
 
 
-class InferenceService:
-    """Session-owned asynchronous dispatch front for one engine.
+# -- replicas -------------------------------------------------------------------
 
-    ``submit`` never blocks on inference (only on queue backpressure at
-    ``queue_depth`` outstanding requests); ``ServiceTicket.result``
-    gathers.  Construction is cheap — dispatcher threads start lazily on
-    first use and are joined by :meth:`close`.
+
+class _Replica:
+    """One engine replica behind the shared submit front: its own FIFO
+    queue, its own dispatcher threads (one batcher loop for slot engines,
+    a thread pool for API engines), and its own ServiceStats slice.
+    Counter fields are guarded by the owning service's lock."""
+
+    __slots__ = (
+        "index", "engine", "queue", "wake", "threads",
+        "routed", "outstanding", "dispatched", "completed", "errors",
+        "broken",
+    )
+
+    def __init__(self, index: int, engine: InferenceEngine, depth: int):
+        self.index = index
+        self.engine = engine
+        self.queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self.wake = threading.Event()
+        self.threads: list[threading.Thread] = []
+        self.routed = 0        # submissions ever routed here
+        self.outstanding = 0   # routed but not yet resolved
+        self.dispatched = 0
+        self.completed = 0
+        self.errors = 0
+        self.broken: BaseException | None = None
+
+    def busy_slots(self) -> int:
+        sched = getattr(self.engine, "slots_busy", None)
+        if callable(sched):
+            return sched()
+        return 0
+
+    def stats_dict(self) -> dict:
+        d = {
+            "index": self.index,
+            "routed": self.routed,
+            "outstanding": self.outstanding,
+            "dispatched": self.dispatched,
+            "completed": self.completed,
+            "errors": self.errors,
+            "broken": self.broken is not None,
+        }
+        batcher = self.engine.serving_stats()
+        if batcher:
+            d["batcher"] = batcher
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaView:
+    """Router-visible load snapshot of one (alive) replica."""
+
+    index: int
+    queued: int        # submissions waiting in the replica's service queue
+    outstanding: int   # routed but unresolved (includes in-engine backlog)
+    busy_slots: int = 0
+
+    @property
+    def load(self) -> int:
+        return self.queued + self.outstanding
+
+
+class ReplicaRouter:
+    """Pluggable replica-placement policy.
+
+    ``route`` picks among the *alive* replicas only; ties break on the
+    lowest index so placement is deterministic given fixed stats.
+
+    * ``least_loaded`` — fewest outstanding requests (busy decode slots
+      plus queued backlog; the service counts routed-but-unresolved, which
+      covers both).
+    * ``prefix_affinity`` — stable hash of the first ``prefix_len``
+      characters of the prompt: requests sharing a few-shot header or
+      system prompt land on the same batcher (and, downstream, the same
+      warmed prefix cache), independent of load.
+    * ``round_robin`` — strict rotation.
     """
 
-    #: absolute ceiling on dispatcher threads per service (the rate
+    POLICIES = ("least_loaded", "prefix_affinity", "round_robin")
+
+    def __init__(self, policy: str = "least_loaded", prefix_len: int = 64):
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"unknown routing policy {policy!r}; one of {self.POLICIES}"
+            )
+        self.policy = policy
+        self.prefix_len = prefix_len
+        self._rr = 0  # guarded by the owning service's lock
+
+    def route(self, prompt: str, views: Sequence[ReplicaView]) -> int:
+        """Replica index for ``prompt`` among the given (alive) views."""
+        if not views:
+            raise RuntimeError("no alive replicas to route to")
+        if len(views) == 1:
+            return views[0].index
+        if self.policy == "least_loaded":
+            return min(views, key=lambda v: (v.load, v.index)).index
+        if self.policy == "prefix_affinity":
+            h = hashlib.sha256(
+                prompt[: self.prefix_len].encode("utf-8", "replace")
+            ).digest()
+            return views[int.from_bytes(h[:8], "big") % len(views)].index
+        pick = views[self._rr % len(views)].index
+        self._rr += 1
+        return pick
+
+
+def aggregate_batcher_stats(parts: Sequence[dict]) -> dict:
+    """Fleet-level BatcherStats: counters sum across replicas; occupancy
+    is re-derived as total active slot-steps over total slot-step
+    capacity, and tokens/step is per (replica, step)."""
+    parts = [p for p in parts if p]
+    if not parts:
+        return {}
+    agg = {
+        k: sum(p.get(k, 0) for p in parts)
+        for k in (
+            "n_slots", "steps", "admissions", "completions",
+            "tokens_generated", "active_slot_steps", "prefill_recompiles",
+            "prefills_deferred",
+        )
+    }
+    cap = sum(p.get("steps", 0) * p.get("n_slots", 0) for p in parts)
+    agg["slot_occupancy"] = round(
+        agg["active_slot_steps"] / cap if cap else 0.0, 4
+    )
+    agg["tokens_per_step"] = round(
+        agg["tokens_generated"] / agg["steps"] if agg["steps"] else 0.0, 3
+    )
+    return agg
+
+
+class InferenceService:
+    """Session-owned asynchronous dispatch front for one engine (or N
+    data-parallel replicas of it).
+
+    ``submit`` never blocks on inference (only on queue backpressure at
+    ``queue_depth`` outstanding requests per replica);
+    ``ServiceTicket.result`` gathers.  Construction is cheap — dispatcher
+    threads start lazily on first use and are joined by :meth:`close`.
+    """
+
+    #: absolute ceiling on dispatcher threads per replica (the rate
     #: limiter, not the thread count, is the real admission control)
     HARD_MAX_DISPATCHERS = 128
 
     def __init__(
         self,
-        engine: InferenceEngine,
+        engine: InferenceEngine | None = None,
         *,
+        engines: Sequence[InferenceEngine] | None = None,
+        routing: "str | ReplicaRouter" = "least_loaded",
         queue_depth: int = 256,
         coalesce: bool = True,
         max_batch_wait_ms: float = 2.0,
@@ -161,30 +310,50 @@ class InferenceService:
         sleep: Callable[[float], None] = time.sleep,
         name: str = "",
     ):
-        self.engine = engine
+        fleet = list(engines) if engines else []
+        if engine is not None and not fleet:
+            fleet = [engine]
+        if not fleet:
+            raise ValueError("InferenceService needs at least one engine")
+        streaming = {bool(getattr(e, "supports_streaming", False)) for e in fleet}
+        if len(streaming) != 1:
+            raise ValueError(
+                "replica fleet mixes streaming and non-streaming engines"
+            )
+        #: replica-0 engine, kept as ``self.engine`` for single-replica
+        #: callers and introspection compatibility
+        self.engine = fleet[0]
         self.coalesce = coalesce
         self.max_batch_wait_ms = max_batch_wait_ms
         self.name = name
         self.stats = ServiceStats()
+        self.router = (
+            routing if isinstance(routing, ReplicaRouter)
+            else ReplicaRouter(routing)
+        )
         self._sleep = sleep
-        self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_depth))
+        self.replicas = [
+            _Replica(i, e, queue_depth) for i, e in enumerate(fleet)
+        ]
         self._inflight: dict[str, _Flight] = {}
         self._lock = threading.Lock()
-        self._threads: list[threading.Thread] = []
         self._base_dispatchers = max(1, n_dispatchers)
         self._attached = 0
         self._closed = False
         self._broken: BaseException | None = None
-        self._streaming = bool(getattr(engine, "supports_streaming", False))
-        self._wake = threading.Event()
+        self._streaming = streaming.pop()
         self._uniq = itertools.count()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
 
     # -- capacity ---------------------------------------------------------------
 
     def attach(self, n_workers: int = 1) -> None:
         """A pipeline stage is about to submit: size the dispatch pool for
         its configured parallelism.  Batcher-mode engines need no threads
-        beyond the loop — decode slots are the parallelism."""
+        beyond one loop per replica — decode slots are the parallelism."""
         with self._lock:
             self._check_open()
             self._attached += max(1, n_workers)
@@ -195,7 +364,7 @@ class InferenceService:
             self._attached = max(0, self._attached - max(1, n_workers))
             # threads never shrink: idle dispatchers just block on the queue
 
-    def _target_threads(self) -> int:
+    def _threads_per_replica(self) -> int:
         if self._streaming:
             return 1
         return min(
@@ -204,20 +373,36 @@ class InferenceService:
         )
 
     def _ensure_dispatchers(self) -> None:  # caller holds self._lock
-        target = self._target_threads()
-        while len(self._threads) < target:
-            idx = len(self._threads)
-            t = threading.Thread(
-                target=self._batcher_loop if self._streaming
-                else self._dispatch_loop,
-                args=() if self._streaming else (idx,),
-                name=f"infer-service-{self.name or 'engine'}-{idx}",
-                daemon=True,
-            )
-            self._threads.append(t)
-            t.start()
+        target = self._threads_per_replica()
+        for rep in self.replicas:
+            while len(rep.threads) < target:
+                idx = len(rep.threads)
+                t = threading.Thread(
+                    target=self._batcher_loop if self._streaming
+                    else self._dispatch_loop,
+                    args=(rep,) if self._streaming else (rep, idx),
+                    name=(
+                        f"infer-service-{self.name or 'engine'}"
+                        f"-r{rep.index}-{idx}"
+                    ),
+                    daemon=True,
+                )
+                rep.threads.append(t)
+                t.start()
 
     # -- submission --------------------------------------------------------------
+
+    def _alive_views(self) -> list[ReplicaView]:  # caller holds self._lock
+        return [
+            ReplicaView(
+                index=r.index,
+                queued=r.queue.qsize(),
+                outstanding=r.outstanding,
+                busy_slots=r.busy_slots(),
+            )
+            for r in self.replicas
+            if r.broken is None
+        ]
 
     def submit(
         self,
@@ -234,10 +419,11 @@ class InferenceService:
 
         ``key`` is the content-addressable identity of the request (the
         response-cache key); identical in-flight keys coalesce into one
-        engine call unless coalescing is off.  ``limiter`` (an
-        :class:`~repro.core.ratelimit.AdaptiveLimiter` or a list of
-        :class:`~repro.core.ratelimit.TokenBucket`) is acquired by the
-        dispatcher right before the engine call."""
+        engine call unless coalescing is off — the flight table is checked
+        *before* routing, so the dedup is global across replicas.
+        ``limiter`` (an :class:`~repro.core.ratelimit.AdaptiveLimiter` or
+        a list of :class:`~repro.core.ratelimit.TokenBucket`) is acquired
+        by the dispatcher right before the engine call."""
         do_coalesce = self.coalesce if coalesce is None else coalesce
         if key is None:
             do_coalesce = False
@@ -250,27 +436,44 @@ class InferenceService:
                 if flight is not None:
                     self.stats.coalesced += 1
                     return ServiceTicket(flight, primary=False)
+            views = self._alive_views()
+            if not views:
+                self.stats.submitted -= 1
+                raise RuntimeError(
+                    f"InferenceService {self.name!r}: all "
+                    f"{self.n_replicas} replicas failed "
+                    f"(first failure: {self.replicas[0].broken!r})"
+                )
             flight = _Flight(key)
             if do_coalesce:
                 self._inflight[key] = flight
+            rep = self.replicas[self.router.route(request.prompt, views)]
+            rep.routed += 1
+            rep.outstanding += 1
             self._ensure_dispatchers()
-        # outside the lock: a full queue blocks the submitter (backpressure),
-        # never the dispatchers
-        self._queue.put(
+        # outside the lock: a full replica queue blocks the submitter
+        # (backpressure), never the dispatchers
+        rep.queue.put(
             _Submission(
-                flight, request, limiter, est_tokens, max_retries, retry_delay
+                flight, request, limiter, est_tokens, max_retries,
+                retry_delay, replica=rep,
             )
         )
-        self._wake.set()
+        rep.wake.set()
         with self._lock:
-            closed_now = self._closed or self._broken is not None
-        if closed_now:
+            dead_now = (
+                self._closed or self._broken is not None
+                or rep.broken is not None
+            )
+        if dead_now:
             # close() (or a dispatcher crash) may have drained the queue
             # between our open-check and the put: nobody will read this
             # submission, so fail it — and any fellow stragglers — rather
             # than strand the waiters.  During normal operation this
             # branch is unreachable.
-            self._drain_queue(exc=RuntimeError("InferenceService closed"))
+            self._drain_replica(
+                rep, exc=rep.broken or RuntimeError("InferenceService closed")
+            )
         return ServiceTicket(flight, primary=True)
 
     def note_coalesced(self, n: int = 1) -> None:
@@ -296,25 +499,42 @@ class InferenceService:
 
     def _resolve(
         self,
-        flight: _Flight,
+        sub_or_flight: "_Submission | _Flight",
         response: InferenceResponse | None = None,
         exc: BaseException | None = None,
     ) -> None:
+        if isinstance(sub_or_flight, _Submission):
+            flight = sub_or_flight.flight
+            rep = sub_or_flight.replica
+        else:
+            flight, rep = sub_or_flight, None
         with self._lock:
             self._inflight.pop(flight.key, None)
             self.stats.completed += 1
             self.stats.retries += max(0, flight.attempts - 1)
-            if exc is not None or (
+            failed = exc is not None or (
                 response is not None and response.error is not None
-            ):
+            )
+            if failed:
                 self.stats.errors += 1
+            if rep is not None:
+                rep.outstanding = max(0, rep.outstanding - 1)
+                rep.completed += 1
+                if failed:
+                    rep.errors += 1
         flight.response = response
         flight.exc = exc
         flight.event.set()
 
-    def _dispatch_loop(self, widx: int) -> None:
+    def _count_dispatch(self, rep: _Replica) -> None:
+        with self._lock:
+            self.stats.dispatched += 1
+            rep.dispatched += 1
+
+    def _dispatch_loop(self, rep: _Replica, widx: int) -> None:
         """Thread-pool dispatch for API-style engines: one request per
-        engine call, retries via :func:`retry_with_backoff`.
+        engine call against this thread's replica, retries via
+        :func:`retry_with_backoff`.
 
         After each call the loop opportunistically drains further queued
         submissions without re-blocking — one condition-variable wakeup
@@ -323,20 +543,18 @@ class InferenceService:
         per dispatcher (the loop returns the moment it sees one), so
         every dispatcher thread still shuts down."""
         while True:
-            item = self._queue.get()
+            item = rep.queue.get()
             while True:
                 if item is _SENTINEL:
                     return
                 sub: _Submission = item
-                flight = sub.flight
                 try:
                     self._admit(sub, widx)
 
-                    def _call(sub=sub, flight=flight) -> InferenceResponse:
-                        flight.attempts += 1
-                        with self._lock:
-                            self.stats.dispatched += 1
-                        return self.engine.infer(sub.request)
+                    def _call(sub=sub) -> InferenceResponse:
+                        sub.flight.attempts += 1
+                        self._count_dispatch(rep)
+                        return rep.engine.infer(sub.request)
 
                     resp = retry_with_backoff(
                         _call,
@@ -344,18 +562,19 @@ class InferenceService:
                         base_delay=sub.retry_delay,
                         sleep=self._sleep,
                     )
-                    self._resolve(flight, resp)
+                    self._resolve(sub, resp)
                 except BaseException as e:  # noqa: BLE001 — waiters must wake
-                    self._resolve(flight, exc=e)
+                    self._resolve(sub, exc=e)
                 try:
-                    item = self._queue.get_nowait()
+                    item = rep.queue.get_nowait()
                 except queue.Empty:
                     break
 
-    def _batcher_loop(self) -> None:
-        """Persistent continuous-batching loop for slot-streaming engines:
-        admit queued prompts into decode slots as slots free, step, deliver
-        completions — one loop for every task the session runs.
+    def _batcher_loop(self, rep: _Replica) -> None:
+        """Persistent continuous-batching loop for one slot-streaming
+        replica: admit queued prompts into decode slots as slots free,
+        step, deliver completions — one loop per replica, shared by every
+        task the session runs.
 
         Recoverable errors re-admit with exponential backoff through a
         scheduled-retry list (the loop itself must never sleep — other
@@ -363,8 +582,13 @@ class InferenceService:
         sessions) retries are immediate, matching the lock-step path's
         behaviour under the same injection.  The rate-limiter index
         round-robins across admissions so list-mode buckets grant their
-        full aggregate budget."""
-        engine = self.engine
+        full aggregate budget.
+
+        A dying loop fails only ITS replica: pending/queued tickets get
+        the exception, the replica is marked broken so the router stops
+        placing work on it, and the service stays up as long as one
+        replica survives."""
+        engine = rep.engine
         pending: dict[int, _Submission] = {}
         retry_at: list[tuple[float, _Submission]] = []
         wait_s = max(0.0, self.max_batch_wait_ms) / 1000.0
@@ -378,14 +602,13 @@ class InferenceService:
                 self._admit(sub, admit_rr)
                 admit_rr += 1
                 sub.flight.attempts += 1
-                with self._lock:
-                    self.stats.dispatched += 1
+                self._count_dispatch(rep)
                 pending[engine.stream_submit(sub.request)] = sub
             except BaseException as e:
                 # the in-hand submission is in neither `pending` nor the
                 # queue — fail its flight here or its waiters hang; the
                 # outer handler then fails everything else
-                self._resolve(sub.flight, exc=e)
+                self._resolve(sub, exc=e)
                 raise
 
         try:
@@ -407,7 +630,7 @@ class InferenceService:
                             i += 1
                 while True:
                     try:
-                        item = self._queue.get_nowait()
+                        item = rep.queue.get_nowait()
                     except queue.Empty:
                         break
                     if item is _SENTINEL:
@@ -418,8 +641,8 @@ class InferenceService:
                 if stop and not pending and not retry_at:
                     return
                 if not pending:
-                    self._wake.clear()
-                    self._wake.wait(timeout=0.005 if retry_at else 0.05)
+                    rep.wake.clear()
+                    rep.wake.wait(timeout=0.005 if retry_at else 0.05)
                     continue
                 if was_idle and admitted and wait_s and not stop:
                     # batch-formation window: a cold batcher waits briefly
@@ -443,18 +666,23 @@ class InferenceService:
                         )
                         retry_at.append((time.monotonic() + delay, sub2))
                         continue
-                    self._resolve(sub2.flight, resp)
+                    self._resolve(sub2, resp)
         except BaseException as e:  # noqa: BLE001
-            # deadlock backstop: a dying batcher loop fails every
-            # outstanding ticket instead of stranding its waiters
+            # replica-failure drain: a dying batcher loop fails every
+            # outstanding ticket IT owns instead of stranding its waiters,
+            # and quarantines the replica from further routing.  Only when
+            # the whole fleet is dead does the service itself go broken.
             with self._lock:
-                self._broken = e
+                rep.broken = e
+                if all(r.broken is not None for r in self.replicas):
+                    self._broken = e
             for sub3 in pending.values():
-                self._resolve(sub3.flight, exc=e)
+                self._resolve(sub3, exc=e)
             for _, sub3 in retry_at:
-                self._resolve(sub3.flight, exc=e)
-            self._drain_queue(exc=e)
-            raise
+                self._resolve(sub3, exc=e)
+            self._drain_replica(rep, exc=e)
+            # handled: every waiter got the exception and the router now
+            # skips this replica — exit the loop thread cleanly
 
     # -- lifecycle ---------------------------------------------------------------
 
@@ -466,21 +694,26 @@ class InferenceService:
                 f"InferenceService dispatch failed: {self._broken!r}"
             )
 
-    def _drain_queue(self, exc: BaseException) -> None:
-        """Fail every queued submission; stop sentinels are preserved
-        (re-enqueued) so dispatchers racing this drain still shut down."""
+    def _drain_replica(self, rep: _Replica, exc: BaseException) -> None:
+        """Fail every submission queued on one replica; stop sentinels are
+        preserved (re-enqueued) so dispatchers racing this drain still
+        shut down."""
         sentinels = 0
         while True:
             try:
-                item = self._queue.get_nowait()
+                item = rep.queue.get_nowait()
             except queue.Empty:
                 break
             if item is _SENTINEL:
                 sentinels += 1
             else:
-                self._resolve(item.flight, exc=exc)
+                self._resolve(item, exc=exc)
         for _ in range(sentinels):
-            self._queue.put(_SENTINEL)
+            rep.queue.put(_SENTINEL)
+
+    def _drain_queue(self, exc: BaseException) -> None:
+        for rep in self.replicas:
+            self._drain_replica(rep, exc=exc)
 
     def close(self, timeout: float = 30.0) -> None:
         """Drain and stop: queued work is dispatched to completion (FIFO —
@@ -490,12 +723,14 @@ class InferenceService:
             if self._closed:
                 return
             self._closed = True
-            threads = list(self._threads)
-        for _ in threads:
-            self._queue.put(_SENTINEL)
-        self._wake.set()
-        for t in threads:
-            t.join(timeout=timeout)
+            plan = [(rep, list(rep.threads)) for rep in self.replicas]
+        for rep, threads in plan:
+            for _ in threads:
+                rep.queue.put(_SENTINEL)
+            rep.wake.set()
+        for rep, threads in plan:
+            for t in threads:
+                t.join(timeout=timeout)
         # a submit racing close may have enqueued behind the sentinels:
         # fail those tickets rather than strand their waiters
         self._drain_queue(exc=RuntimeError("InferenceService closed"))
@@ -509,17 +744,24 @@ class InferenceService:
     # -- introspection -----------------------------------------------------------
 
     def snapshot(self) -> dict:
-        """Service counters plus (for slot engines) the batcher's
-        occupancy/throughput counters."""
+        """Global service counters, per-replica routing/batcher counters,
+        and (for slot engines) the fleet-aggregated occupancy/throughput
+        counters under ``"batcher"``."""
         with self._lock:
             d = {
                 "engine": self.name,
                 "mode": "batcher" if self._streaming else "threads",
-                "dispatchers": len(self._threads),
+                "replicas": self.n_replicas,
+                "dispatchers": sum(len(r.threads) for r in self.replicas),
                 "inflight": len(self._inflight),
                 **self.stats.as_dict(),
             }
-        batcher = self.engine.serving_stats()
+            per_replica = [rep.stats_dict() for rep in self.replicas]
+        batcher = aggregate_batcher_stats(
+            [p.get("batcher", {}) for p in per_replica]
+        )
         if batcher:
             d["batcher"] = batcher
+        if self.n_replicas > 1:
+            d["replica_stats"] = per_replica
         return d

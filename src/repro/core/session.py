@@ -130,22 +130,57 @@ class EvalSession:
         self._check_open()
         return self.engines.get(model, **self._engine_kwargs)
 
+    def _replica_engines(
+        self, model: EngineModelConfig, inf: InferenceConfig
+    ) -> list[InferenceEngine]:
+        """One engine per data-parallel replica.  Local engines also get
+        their own device group (``launch.mesh.replica_device_groups``) so
+        replicas decode on distinct devices when the topology has them;
+        simulated engines just get independent instances (own slots, own
+        counters)."""
+        n = max(1, inf.n_replicas)
+        if n == 1:
+            return [self.engines.get(model, **self._engine_kwargs)]
+        groups: list[Any] = [None] * n
+        if model.provider == "local" and "devices" not in self._engine_kwargs:
+            from repro.launch.mesh import replica_device_groups
+
+            groups = replica_device_groups(n)
+        out = []
+        for i in range(n):
+            kw = dict(self._engine_kwargs)
+            if groups[i] is not None:
+                kw["devices"] = groups[i]
+            if inf.max_prefills_per_step and model.provider in (
+                "local", "slotsim",
+            ):
+                kw.setdefault(
+                    "max_prefills_per_step", inf.max_prefills_per_step
+                )
+            out.append(self.engines.get(model, replica=i, **kw))
+        return out
+
     def service_for(
         self, model: EngineModelConfig, inf: InferenceConfig
     ) -> InferenceService:
         """Get-or-create the shared :class:`InferenceService` for this
         engine.  Dispatch capacity scales with the stages attached to it
-        (``InferenceService.attach``); queue depth, the coalescing default
-        and the batch-formation window come from the first inference
+        (``InferenceService.attach``); queue depth, the coalescing default,
+        the batch-formation window and the replica fan-out
+        (``n_replicas`` / ``routing``) come from the first inference
         config that touches the engine."""
         self._check_open()
         key = (model, json.dumps(self._engine_kwargs, sort_keys=True, default=str))
         with self._res_lock:
             svc = self._services.get(key)
             if svc is None:
-                engine = self.engines.get(model, **self._engine_kwargs)
+                from repro.core.service import ReplicaRouter
+
                 svc = InferenceService(
-                    engine,
+                    engines=self._replica_engines(model, inf),
+                    routing=ReplicaRouter(
+                        inf.routing, prefix_len=inf.routing_prefix_len
+                    ),
                     queue_depth=inf.service_queue_depth,
                     coalesce=inf.coalesce,
                     max_batch_wait_ms=inf.max_batch_wait_ms,

@@ -368,14 +368,16 @@ class SuiteResult:
             lines.append("## Inference service")
             lines.append("")
             lines.append(
-                "| engine | mode | submitted | dispatched | coalesced "
-                "| dedup | occupancy | tok/step | admissions | recompiles |"
+                "| engine | mode | replicas | submitted | dispatched "
+                "| coalesced | dedup | occupancy | tok/step | admissions "
+                "| recompiles |"
             )
-            lines.append("|---" * 10 + "|")
+            lines.append("|---" * 11 + "|")
             for s in serving:
                 b = s.get("batcher") or {}
                 lines.append(
                     f"| {s.get('engine', '?')} | {s.get('mode', '?')} "
+                    f"| {s.get('replicas', 1)} "
                     f"| {s.get('submitted', 0)} | {s.get('dispatched', 0)} "
                     f"| {s.get('coalesced', 0)} "
                     f"| {s.get('dedup_rate', 0.0):.1%} "

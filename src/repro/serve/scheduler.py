@@ -16,6 +16,7 @@ cases).  Prompts are padded to power-of-two buckets to bound recompiles.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable
@@ -28,6 +29,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engines import BatcherStats
 from repro.models.params import init_params, is_spec
 from repro.serve import steps as steps_lib
+from repro.sharding import ShardingRules, use_rules
 
 PyTree = Any
 
@@ -78,16 +80,39 @@ class ContinuousBatcher:
         temperature: float = 0.0,
         admission: Callable[[int], float] | None = None,
         cache_dtype: Any = jnp.float32,
+        max_prefills_per_step: int = 0,
+        device: Any = None,
+        rules: ShardingRules | None = None,
     ):
         self.model, self.cfg, self.params = model, cfg, params
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.temperature = temperature
         self.admission = admission
+        #: 0 = unlimited; otherwise at most this many prompts are prefilled
+        #: per step() — prefill/decode disaggregation: a long-prompt backlog
+        #: waits for a prefill slot instead of stalling every decode step
+        #: behind a wall of back-to-back prefills
+        self.max_prefills_per_step = max_prefills_per_step
+        #: single-device placement (one replica per host device) or, for a
+        #: multi-device replica, logical-axis rules over its mesh — the two
+        #: are mutually exclusive
+        self.device = device
+        self.rules = rules
         self.prefix = cfg.n_vision_tokens if cfg.family == "vlm" else 0
 
         cache_specs = model.cache_specs(n_slots, max_len, cache_dtype)
         self._batch_axes = batch_axis_tree(cache_specs)
         self.cache = init_params(jax.random.key(0), cache_specs)
+        if rules is not None:
+            self.params = jax.device_put(
+                self.params, rules.param_shardings(model.param_specs())
+            )
+            self.cache = jax.device_put(
+                self.cache, rules.param_shardings(cache_specs)
+            )
+        elif device is not None:
+            self.params = jax.device_put(self.params, device)
+            self.cache = jax.device_put(self.cache, device)
         row_specs = model.cache_specs(1, max_len, cache_dtype)
         self._row_specs = row_specs
 
@@ -148,10 +173,27 @@ class ContinuousBatcher:
             est = len(req.prompt_tokens) + req.max_new_tokens
             self.admission(est)  # blocks until budget available
 
+    def _compute_ctx(self):
+        """Placement context for jitted prefill/decode: activation-sharding
+        rules on a multi-device replica mesh, default-device pinning for a
+        single-device replica, no-op otherwise."""
+        if self.rules is not None:
+            return use_rules(self.rules)
+        if self.device is not None:
+            return jax.default_device(self.device)
+        return contextlib.nullcontext()
+
     def _refill(self) -> None:
+        admitted = 0
         for slot in range(self.n_slots):
             if not self.slot_free[slot] or not self.queue:
                 continue
+            if (
+                self.max_prefills_per_step
+                and admitted >= self.max_prefills_per_step
+            ):
+                self.stats.prefills_deferred += len(self.queue)
+                break
             req = self.queue.pop(0)
             self._admit(req)
             ptoks = req.prompt_tokens
@@ -171,14 +213,16 @@ class ContinuousBatcher:
                 batch.update(
                     {k: jnp.asarray(v)[None] for k, v in req.extras.items()}
                 )
-            row_cache = init_params(jax.random.key(1), self._row_specs)
-            logits, row_cache = self._prefill(self.params, batch, row_cache)
-            self.cache = self._insert(self.cache, row_cache, slot)
-            first_tok = int(
-                jax.device_get(
-                    steps_lib.greedy_sample(logits, self.cfg.vocab_size)
-                )[0]
-            )
+            with self._compute_ctx():
+                row_cache = init_params(jax.random.key(1), self._row_specs)
+                logits, row_cache = self._prefill(self.params, batch, row_cache)
+                self.cache = self._insert(self.cache, row_cache, slot)
+                first_tok = int(
+                    jax.device_get(
+                        steps_lib.greedy_sample(logits, self.cfg.vocab_size)
+                    )[0]
+                )
+            admitted += 1
 
             self.slot_free[slot] = False
             self.slot_req[slot] = req
@@ -227,17 +271,20 @@ class ContinuousBatcher:
         self.stats.steps += 1
         self.stats.active_slot_steps += len(active)
         self.stats.tokens_generated += len(active)
-        tokens = jnp.asarray(self.cur_tokens)
-        positions = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode(self.params, tokens, self.cache, positions)
-        if self.temperature > 0:
-            self.key, sub = jax.random.split(self.key)
-            nxt = steps_lib.temperature_sample(
-                logits, self.cfg.vocab_size, self.temperature, sub
+        with self._compute_ctx():
+            tokens = jnp.asarray(self.cur_tokens)
+            positions = jnp.asarray(self.slot_pos)
+            logits, self.cache = self._decode(
+                self.params, tokens, self.cache, positions
             )
-        else:
-            nxt = steps_lib.greedy_sample(logits, self.cfg.vocab_size)
-        nxt = np.asarray(jax.device_get(nxt))
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = steps_lib.temperature_sample(
+                    logits, self.cfg.vocab_size, self.temperature, sub
+                )
+            else:
+                nxt = steps_lib.greedy_sample(logits, self.cfg.vocab_size)
+            nxt = np.asarray(jax.device_get(nxt))
 
         for slot in active:
             self.slot_tokens[slot].append(int(nxt[slot]))

@@ -1,0 +1,379 @@
+"""Multi-replica serving fabric (ISSUE 7): router policy determinism,
+replica-count byte-parity, global single-flight across replicas,
+replica-failure drain, per-replica stats aggregation, and the
+prefill/decode admission split."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    InferenceRequest,
+    InferenceService,
+    MetricConfig,
+    SimulatedAPIEngine,
+    SimulatedSlotEngine,
+    StatisticsConfig,
+)
+from repro.core.engines import EngineRegistry
+from repro.core.service import ReplicaRouter, ReplicaView
+from repro.data import mixed_examples
+
+API_MODEL = EngineModelConfig(provider="openai", model_name="gpt-4o-mini")
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+SLOT_KW = {"n_slots": 4, "step_ms": 0.0}
+
+
+def _task(task_id="rep", model=SLOT_MODEL, **inf_kw):
+    return EvalTask(
+        task_id=task_id,
+        model=model,
+        inference=InferenceConfig(batch_size=8, n_workers=4, **inf_kw),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    )
+
+
+def _mv_tuple(mv):
+    return (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored)
+
+
+def _cmp_tuple(c):
+    return (c.diff, c.diff_ci, c.test.p_value, c.effect.value)
+
+
+def _views(loads):
+    return [
+        ReplicaView(index=i, queued=q, outstanding=o)
+        for i, (q, o) in enumerate(loads)
+    ]
+
+
+# -- router units ---------------------------------------------------------------
+
+
+def test_least_loaded_picks_min_load_breaking_ties_low_index():
+    r = ReplicaRouter("least_loaded")
+    assert r.route("p", _views([(2, 1), (0, 1), (4, 0)])) == 1
+    # tie on total load -> lowest index
+    assert r.route("p", _views([(1, 1), (0, 2), (2, 0)])) == 0
+    # placement is a pure function of the load snapshot
+    for _ in range(5):
+        assert r.route("x", _views([(3, 3), (1, 0), (1, 1)])) == 1
+
+
+def test_prefix_affinity_is_deterministic_and_prefix_only():
+    r = ReplicaRouter("prefix_affinity", prefix_len=16)
+    views = _views([(0, 0)] * 4)
+    header = "Few-shot header #7: "  # > prefix_len once suffixed
+    picks = {
+        r.route(header + suffix, views)
+        for suffix in ("alpha", "beta", "gamma", "delta")
+    }
+    # same prefix -> same replica regardless of suffix or load
+    assert len(picks) == 1
+    assert r.route(header + "epsilon", _views([(9, 9)] * 4)) == picks.pop()
+    # repeated routing never drifts
+    assert r.route("abc", views) == r.route("abc", views)
+
+
+def test_prefix_affinity_spreads_distinct_prefixes():
+    r = ReplicaRouter("prefix_affinity", prefix_len=64)
+    views = _views([(0, 0)] * 4)
+    picks = {r.route(f"prompt family {i}: body", views) for i in range(64)}
+    assert len(picks) > 1  # a hash that pins everything to one replica is a bug
+
+
+def test_round_robin_rotates_over_alive_replicas():
+    r = ReplicaRouter("round_robin")
+    views = _views([(0, 0)] * 3)
+    assert [r.route("p", views) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        ReplicaRouter("random")
+
+
+def test_registry_keys_replicas_separately():
+    reg = EngineRegistry()
+    e0 = reg.get(SLOT_MODEL, replica=0, **SLOT_KW)
+    e1 = reg.get(SLOT_MODEL, replica=1, **SLOT_KW)
+    assert e0 is not e1
+    assert reg.get(SLOT_MODEL, replica=0, **SLOT_KW) is e0
+    assert len(reg) == 2
+    reg.shutdown()
+
+
+# -- byte-identical parity across replica counts --------------------------------
+
+
+@pytest.mark.parametrize("routing", ["least_loaded", "prefix_affinity"])
+def test_replica_count_parity_suite_output(routing):
+    """1 vs 2 vs 4 replicas: metrics, CIs and the significance matrix are
+    byte-identical — routing is stats-plane-invisible."""
+    rows = mixed_examples(60, seed=5)
+    models = [
+        SLOT_MODEL,
+        EngineModelConfig(provider="slotsim", model_name="slot-sim-b"),
+    ]
+
+    def run(n_replicas):
+        suite = (
+            EvalSuite(f"rep{n_replicas}")
+            .add_task(
+                _task(n_replicas=n_replicas, routing=routing), rows
+            )
+            .sweep_models(models)
+        )
+        with EvalSession(engine_kwargs=SLOT_KW) as session:
+            res = session.run_suite(suite, parallel_jobs=2)
+            snaps = session.serving_stats()
+        return res, snaps
+
+    base, _ = run(1)
+    for n in (2, 4):
+        got, snaps = run(n)
+        for key, res in base.results.items():
+            assert got.results[key].responses == res.responses, key
+            for m, mv in res.metrics.items():
+                assert _mv_tuple(got.results[key].metrics[m]) == _mv_tuple(mv)
+        for task_id, metrics in base.comparisons.items():
+            for metric, cells in metrics.items():
+                for pair, cmp in cells.items():
+                    assert _cmp_tuple(
+                        got.comparisons[task_id][metric][pair]
+                    ) == _cmp_tuple(cmp), (task_id, metric, pair)
+        for snap in snaps:
+            assert snap["replicas"] == n
+            assert len(snap["replica_stats"]) == n
+
+
+def test_replica_aggregation_invariants():
+    """Fleet-aggregated batcher counters keep the single-replica
+    invariants: admissions == dispatched, completions == completed, and
+    every replica that got traffic shows its own slice."""
+    rows = mixed_examples(48, seed=9)
+    with EvalSession(engine_kwargs=SLOT_KW) as session:
+        session.run_task(rows, _task(n_replicas=3, routing="round_robin"))
+        (snap,) = session.serving_stats()
+    assert snap["mode"] == "batcher" and snap["replicas"] == 3
+    b = snap["batcher"]
+    assert b["admissions"] == snap["dispatched"]
+    assert b["completions"] == snap["completed"]
+    assert 0.0 < b["slot_occupancy"] <= 1.0
+    per = snap["replica_stats"]
+    assert sum(r["dispatched"] for r in per) == snap["dispatched"]
+    assert sum(r["completed"] for r in per) == snap["completed"]
+    assert all(r["routed"] > 0 for r in per)  # round-robin touched them all
+    assert sum(
+        r["batcher"]["admissions"] for r in per
+    ) == b["admissions"]
+
+
+# -- global single-flight -------------------------------------------------------
+
+
+class GatedEngine(SimulatedAPIEngine):
+    def __init__(self, model, gate, **kw):
+        super().__init__(model, **kw)
+        self.gate = gate
+
+    def infer(self, request):
+        assert self.gate.wait(10.0), "test gate never opened"
+        return super().infer(request)
+
+
+def test_single_flight_is_global_across_replicas():
+    """Duplicate in-flight keys coalesce BEFORE routing: one engine call
+    total across the whole fleet, no matter how many replicas exist."""
+    gate = threading.Event()
+    fleet = [GatedEngine(API_MODEL, gate) for _ in range(4)]
+    for e in fleet:
+        e.initialize()
+    svc = InferenceService(
+        engines=fleet, routing="round_robin", n_dispatchers=2, name="fleet"
+    )
+    req = InferenceRequest("the same expensive prompt", 16, 0.0)
+    tickets = [svc.submit(req, key="dup") for _ in range(8)]
+    assert tickets[0].primary and not any(t.primary for t in tickets[1:])
+    gate.set()
+    texts = {t.result(timeout=10.0).text for t in tickets}
+    assert len(texts) == 1
+    assert sum(e.calls for e in fleet) == 1
+    snap = svc.snapshot()
+    assert snap["submitted"] == 8 and snap["coalesced"] == 7
+    assert snap["dispatched"] == 1
+    svc.close()
+
+
+def test_distinct_keys_spread_across_replicas():
+    fleet = [SimulatedAPIEngine(API_MODEL) for _ in range(2)]
+    for e in fleet:
+        e.initialize()
+    svc = InferenceService(engines=fleet, routing="round_robin")
+    tickets = [
+        svc.submit(InferenceRequest(f"unique {i}", 8, 0.0), key=f"k{i}")
+        for i in range(10)
+    ]
+    for t in tickets:
+        assert t.result(timeout=10.0).error is None
+    assert [e.calls for e in fleet] == [5, 5]
+    svc.close()
+
+
+# -- replica failure ------------------------------------------------------------
+
+
+class DyingSlotEngine(SimulatedSlotEngine):
+    """Slot engine whose decode loop can be killed mid-flight."""
+
+    def __init__(self, model, **kw):
+        super().__init__(model, **kw)
+        self.die = threading.Event()
+
+    def stream_pump(self):
+        if self.die.is_set():
+            raise RuntimeError("replica hardware fault")
+        return super().stream_pump()
+
+
+def test_dead_replica_fails_its_tickets_without_stranding_gathers():
+    sick = DyingSlotEngine(SLOT_MODEL, **SLOT_KW)
+    healthy = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    sick.initialize(), healthy.initialize()
+    svc = InferenceService(
+        engines=[sick, healthy], routing="round_robin",
+        max_batch_wait_ms=0.0, name="split",
+    )
+    sick.die.set()
+    tickets = [
+        svc.submit(InferenceRequest(f"prompt {i}", 8, 0.0), key=f"k{i}")
+        for i in range(8)
+    ]
+    ok = fail = 0
+    for t in tickets:
+        try:
+            resp = t.result(timeout=10.0)
+            assert resp.error is None
+            ok += 1
+        except RuntimeError as e:
+            assert "hardware fault" in str(e)
+            fail += 1
+    assert ok >= 1 and fail >= 1  # both replicas saw traffic, none stranded
+    # the fleet keeps serving: new work routes around the dead replica
+    late = [
+        svc.submit(InferenceRequest(f"late {i}", 8, 0.0), key=f"l{i}")
+        for i in range(4)
+    ]
+    for t in late:
+        assert t.result(timeout=10.0).error is None
+    snap = svc.snapshot()
+    per = {r["index"]: r for r in snap["replica_stats"]}
+    assert per[0]["broken"] and not per[1]["broken"]
+    svc.close()
+
+
+def test_whole_fleet_dead_breaks_the_service():
+    fleet = [DyingSlotEngine(SLOT_MODEL, **SLOT_KW) for _ in range(2)]
+    for e in fleet:
+        e.initialize()
+        e.die.set()
+    svc = InferenceService(
+        engines=fleet, routing="round_robin", max_batch_wait_ms=0.0
+    )
+    tickets = [
+        svc.submit(InferenceRequest(f"doomed {i}", 8, 0.0), key=f"d{i}")
+        for i in range(2)
+    ]
+    for t in tickets:
+        with pytest.raises(RuntimeError, match="hardware fault"):
+            t.result(timeout=10.0)
+    # every replica broken -> the service refuses further submissions
+    deadline = threading.Event()
+    for _ in range(100):
+        try:
+            t = svc.submit(InferenceRequest("after the fall", 8, 0.0), key="x")
+        except RuntimeError:
+            break
+        with pytest.raises(RuntimeError):
+            t.result(timeout=10.0)
+        deadline.wait(0.01)
+    else:
+        pytest.fail("service never reported the dead fleet")
+    svc.close()
+
+
+# -- session plumbing -----------------------------------------------------------
+
+
+def test_session_builds_replica_fleet_from_inference_config():
+    rows = mixed_examples(30, seed=11)
+    with EvalSession(engine_kwargs=SLOT_KW) as session:
+        res = session.run_task(rows, _task(n_replicas=3))
+        (snap,) = session.serving_stats()
+        assert snap["replicas"] == 3
+        assert len(session.engines) == 3  # one registered engine per replica
+    assert not res.failures
+
+
+def test_suite_report_shows_replica_column():
+    rows = mixed_examples(20, seed=13)
+    suite = EvalSuite("repmd").add_task(_task(task_id="qa", n_replicas=2), rows)
+    with EvalSession(engine_kwargs=SLOT_KW) as session:
+        sres = session.run_suite(suite)
+    md = sres.to_markdown()
+    assert "## Inference service" in md
+    assert "| replicas |" in md
+    assert "| batcher | 2 " in md  # the engine row carries its fleet size
+
+
+# -- prefill/decode disaggregation ----------------------------------------------
+
+
+def test_prefill_cap_defers_admissions_but_loses_nothing():
+    eng = SimulatedSlotEngine(
+        SLOT_MODEL, n_slots=4, step_ms=0.0, max_prefills_per_step=1
+    )
+    eng.initialize()
+    rids = [
+        eng.stream_submit(InferenceRequest(f"backlog {i}", 8, 0.0))
+        for i in range(6)
+    ]
+    done = {}
+    for _ in range(200):
+        for rid, resp in eng.stream_pump():
+            done[rid] = resp
+        if len(done) == len(rids):
+            break
+    assert set(done) == set(rids)
+    st = eng.stats
+    assert st.admissions == 6
+    assert st.prefills_deferred > 0  # the cap actually bit
+    assert st.completions == 6
+
+
+def test_prefill_cap_output_parity_with_uncapped():
+    prompts = [f"identical workload {i}" for i in range(10)]
+
+    def run(cap):
+        eng = SimulatedSlotEngine(
+            SLOT_MODEL, n_slots=4, step_ms=0.0, max_prefills_per_step=cap
+        )
+        eng.initialize()
+        rids = {eng.stream_submit(InferenceRequest(p, 8, 0.0)): p
+                for p in prompts}
+        out = {}
+        while eng.stream_pending():
+            for rid, resp in eng.stream_pump():
+                out[rids[rid]] = resp.text
+        return out
+
+    assert run(0) == run(1) == run(2)
