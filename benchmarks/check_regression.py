@@ -42,6 +42,8 @@ GAUGES: dict[str, list[str]] = {
         "dedup_rate",
         "replica_scaling.speedup_2",
         "replica_scaling.speedup_4",
+        "shared_prefix.speedup",
+        "shared_prefix.prefix_reuse",
     ],
     "BENCH_concurrency.json": ["speedup_at_4_inflight"],
     "BENCH_suite.json": ["speedup"],

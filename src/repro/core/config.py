@@ -75,6 +75,13 @@ class InferenceConfig:
     #: disaggregates prefill from decode so a long-prompt backlog queues
     #: for a prefill slot instead of stalling every decode step
     max_prefills_per_step: int = 0
+    #: paged KV cache for slot engines: 0 = contiguous per-slot cache,
+    #: > 0 = page-pool cache with this many tokens per page (enables
+    #: hash-chain prompt-prefix sharing across requests — DESIGN.md §8)
+    kv_page_size: int = 0
+    #: with a paged cache, share resident prompt-prefix pages across
+    #: requests (False = paged allocation only, no cross-request reuse)
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -106,6 +106,14 @@ class BatcherStats:
     #: (prefill/decode disaggregation: decode keeps stepping, the prompt
     #: waits one step for a prefill slot instead of stalling the gang)
     prefills_deferred: int = 0
+    #: prompt-prefix pages reused from the paged KV cache's prefix index
+    #: (zero on contiguous-cache batchers)
+    prefix_pages_hit: int = 0
+    #: prompt tokens whose prefill was skipped via shared prefix pages
+    prefix_tokens_saved: int = 0
+    #: defensive copy-on-write page copies (structurally unreachable while
+    #: sharing stops short of the final prompt token — see DESIGN.md §8)
+    cow_copies: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -128,6 +136,9 @@ class BatcherStats:
             "slot_occupancy": round(self.occupancy, 4),
             "prefill_recompiles": self.prefill_recompiles,
             "prefills_deferred": self.prefills_deferred,
+            "prefix_pages_hit": self.prefix_pages_hit,
+            "prefix_tokens_saved": self.prefix_tokens_saved,
+            "cow_copies": self.cow_copies,
         }
 
 
@@ -322,6 +333,10 @@ class SimulatedSlotEngine(InferenceEngine):
         min_out: int = 4,
         max_out: int = 48,
         max_prefills_per_step: int = 0,
+        kv_page_size: int = 0,
+        prefix_cache: bool = True,
+        prefill_ms_per_token: float = 0.0,
+        page_pool: int = 4096,
     ):
         self.model = model
         self.n_slots = n_slots
@@ -332,6 +347,20 @@ class SimulatedSlotEngine(InferenceEngine):
         #: 0 = unlimited; otherwise at most this many queued prompts are
         #: prefilled into free slots per pump (prefill/decode split)
         self.max_prefills_per_step = max_prefills_per_step
+        #: simulated prefill cost: each *uncached* prompt token (word)
+        #: charges this much wall time at admission, so prefix sharing has
+        #: a measurable effect on the streaming path
+        self.prefill_ms_per_token = prefill_ms_per_token
+        self.kv_page_size = kv_page_size
+        if kv_page_size:
+            # deferred import: repro.serve.scheduler imports this module
+            from repro.serve.paged_cache import PagedCacheManager
+
+            self._pages = PagedCacheManager(
+                page_pool, kv_page_size, prefix_cache=prefix_cache
+            )
+        else:
+            self._pages = None
         self.calls = 0
         self.total_cost = 0.0
         self.initialized = False
@@ -402,9 +431,14 @@ class SimulatedSlotEngine(InferenceEngine):
                     self._account_admission(r)
                 self._account_steps(wave_steps, sum(lens))
                 self.stats.completions += len(wave)
+                # lock-step pays full prefill for every prompt: the wave
+                # has no persistent slots, so nothing survives to share
+                prefill_ms = self.prefill_ms_per_token * sum(
+                    max(1, len(r.prompt.split())) for r in wave
+                )
                 if self.wall_clock:
-                    time.sleep(wave_steps * self.step_ms / 1000.0)
-                latency = wave_steps * self.step_ms
+                    time.sleep((wave_steps * self.step_ms + prefill_ms) / 1000.0)
+                latency = wave_steps * self.step_ms + prefill_ms
                 for r, n in zip(wave, lens):
                     self.calls += 1
                     out.append(self._response(r, n, latency))
@@ -431,17 +465,35 @@ class SimulatedSlotEngine(InferenceEngine):
     def stream_pump(self) -> list[tuple[int, InferenceResponse]]:
         with self._lock:
             admitted = 0
+            prefill_tokens = 0
             for i, s in enumerate(self._slots):
                 if s is None and self._queue:
                     if (
                         self.max_prefills_per_step
                         and admitted >= self.max_prefills_per_step
                     ):
-                        self.stats.prefills_deferred += len(self._queue)
+                        # each still-queued request a free slot could have
+                        # taken this pump defers exactly once per pump it
+                        # actually waits (not once per queue neighbour)
+                        free_left = sum(
+                            1 for s2 in self._slots[i:] if s2 is None
+                        )
+                        self.stats.prefills_deferred += min(
+                            len(self._queue), free_left
+                        )
                         break
                     rid, req, out_len = self._queue.pop(0)
                     self._account_admission(req)
                     admitted += 1
+                    words = req.prompt.split() or ["<bos>"]
+                    if self._pages is not None:
+                        m = self._pages.acquire(rid, words)
+                        self._pages.register(rid, words)
+                        self.stats.prefix_pages_hit += m.n_shared_pages
+                        self.stats.prefix_tokens_saved += m.n_shared_tokens
+                        prefill_tokens += len(words) - m.n_shared_tokens
+                    else:
+                        prefill_tokens += len(words)
                     self._slots[i] = {
                         "rid": rid, "req": req, "left": out_len,
                         "out": out_len, "start_step": self.stats.steps,
@@ -452,7 +504,10 @@ class SimulatedSlotEngine(InferenceEngine):
         if self.wall_clock:
             # sleep outside the lock: direct infer calls (judges, legacy
             # paths) interleave between steps instead of stalling behind one
-            time.sleep(self.step_ms / 1000.0)
+            time.sleep(
+                (self.step_ms + self.prefill_ms_per_token * prefill_tokens)
+                / 1000.0
+            )
         done: list[tuple[int, InferenceResponse]] = []
         with self._lock:
             self._account_steps(1, n_active)
@@ -464,6 +519,8 @@ class SimulatedSlotEngine(InferenceEngine):
                     latency = (self.stats.steps - s["start_step"]) * self.step_ms
                     self.calls += 1
                     self.stats.completions += 1
+                    if self._pages is not None:
+                        self._pages.release(s["rid"])
                     done.append(
                         (s["rid"], self._response(s["req"], s["out"], latency))
                     )
@@ -498,7 +555,8 @@ class LocalJaxEngine(InferenceEngine):
 
     def __init__(self, model: EngineModelConfig, *, n_slots: int = 8,
                  max_len: int = 256, devices: Any = None,
-                 max_prefills_per_step: int = 0):
+                 max_prefills_per_step: int = 0,
+                 kv_page_size: int = 0, prefix_cache: bool = True):
         self.model_cfg = model
         self.n_slots = n_slots
         self.max_len = max_len
@@ -507,6 +565,9 @@ class LocalJaxEngine(InferenceEngine):
         #: over a ("data","model") mesh built from this group
         self.devices = tuple(devices) if devices else None
         self.max_prefills_per_step = max_prefills_per_step
+        #: 0 = contiguous per-slot KV cache; > 0 = paged pool (page size)
+        self.kv_page_size = kv_page_size
+        self.prefix_cache = prefix_cache
         self.initialized = False
         self._scheduler = None
         self._tokenizer = None
@@ -552,6 +613,7 @@ class LocalJaxEngine(InferenceEngine):
             temperature=self.model_cfg.temperature,
             max_prefills_per_step=self.max_prefills_per_step,
             device=device, rules=rules,
+            page_size=self.kv_page_size, prefix_cache=self.prefix_cache,
         )
         self.initialized = True
 

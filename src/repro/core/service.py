@@ -270,7 +270,8 @@ def aggregate_batcher_stats(parts: Sequence[dict]) -> dict:
         for k in (
             "n_slots", "steps", "admissions", "completions",
             "tokens_generated", "active_slot_steps", "prefill_recompiles",
-            "prefills_deferred",
+            "prefills_deferred", "prefix_pages_hit", "prefix_tokens_saved",
+            "cow_copies",
         )
     }
     cap = sum(p.get("steps", 0) * p.get("n_slots", 0) for p in parts)

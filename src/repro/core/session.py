@@ -140,7 +140,9 @@ class EvalSession:
         counters)."""
         n = max(1, inf.n_replicas)
         if n == 1:
-            return [self.engines.get(model, **self._engine_kwargs)]
+            kw = dict(self._engine_kwargs)
+            self._add_paging_kwargs(model, inf, kw)
+            return [self.engines.get(model, **kw)]
         groups: list[Any] = [None] * n
         if model.provider == "local" and "devices" not in self._engine_kwargs:
             from repro.launch.mesh import replica_device_groups
@@ -157,8 +159,21 @@ class EvalSession:
                 kw.setdefault(
                     "max_prefills_per_step", inf.max_prefills_per_step
                 )
+            self._add_paging_kwargs(model, inf, kw)
             out.append(self.engines.get(model, replica=i, **kw))
         return out
+
+    @staticmethod
+    def _add_paging_kwargs(
+        model: EngineModelConfig, inf: InferenceConfig, kw: dict
+    ) -> None:
+        """Forward paged-KV knobs to slot engines, but only when they are
+        non-default so engine-registry cache keys stay stable for configs
+        that never touch paging."""
+        if inf.kv_page_size and model.provider in ("local", "slotsim"):
+            kw.setdefault("kv_page_size", inf.kv_page_size)
+            if not inf.prefix_cache:
+                kw.setdefault("prefix_cache", False)
 
     def service_for(
         self, model: EngineModelConfig, inf: InferenceConfig

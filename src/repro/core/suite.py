@@ -370,9 +370,9 @@ class SuiteResult:
             lines.append(
                 "| engine | mode | replicas | submitted | dispatched "
                 "| coalesced | dedup | occupancy | tok/step | admissions "
-                "| recompiles |"
+                "| recompiles | prefix hits | prefix tok saved |"
             )
-            lines.append("|---" * 11 + "|")
+            lines.append("|---" * 13 + "|")
             for s in serving:
                 b = s.get("batcher") or {}
                 lines.append(
@@ -384,7 +384,9 @@ class SuiteResult:
                     f"| {b.get('slot_occupancy', '—')} "
                     f"| {b.get('tokens_per_step', '—')} "
                     f"| {b.get('admissions', '—')} "
-                    f"| {b.get('prefill_recompiles', '—')} |"
+                    f"| {b.get('prefill_recompiles', '—')} "
+                    f"| {b.get('prefix_pages_hit', '—')} "
+                    f"| {b.get('prefix_tokens_saved', '—')} |"
                 )
             lines.append("")
         acct = ", ".join(

@@ -1,5 +1,23 @@
 from repro.kernels.decode_attention.decode_attention import decode_attention
-from repro.kernels.decode_attention.ops import decode_attention_bshd
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    decode_attention_bshd,
+    paged_decode_attention_bshd,
+)
+from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    gather_pages_ref,
+    paged_decode_attention_blocked_ref,
+    paged_decode_attention_ref,
+)
 
-__all__ = ["decode_attention", "decode_attention_bshd", "decode_attention_ref"]
+__all__ = [
+    "decode_attention",
+    "decode_attention_bshd",
+    "decode_attention_ref",
+    "gather_pages_ref",
+    "paged_decode_attention",
+    "paged_decode_attention_bshd",
+    "paged_decode_attention_blocked_ref",
+    "paged_decode_attention_ref",
+]

@@ -1,0 +1,147 @@
+"""Paged GQA decode-attention Pallas TPU kernel.
+
+Same online-softmax structure as ``decode_attention.py``, but the KV
+cache lives in a global **page pool** ``(P, K, page_size, d)`` instead
+of per-sequence slabs.  Each sequence owns a row of the ``(B, n_pages)``
+page table; the table arrives as a scalar-prefetch operand so the K/V
+BlockSpec index maps gather the right pool page per grid step — the
+kernel body never sees page indirection, only one ``(page_size, d)``
+tile at a time.
+
+* grid = (B, K, nP) with the page axis innermost (sequential on TPU):
+  online-softmax state for the query-head group stays in VMEM scratch
+  across a sequence's pages;
+* table entries past ``ceil(length / page_size)`` are padding — they
+  must still be *valid* pool indices (pad with 0); the length mask
+  zeroes their contribution exactly (NEG_INF → exp → 0.0);
+* the same pool page may appear in several sequences' tables (prefix
+  sharing) — the gather is read-only, so aliasing is free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _paged_kernel(
+    tables_ref,   # SMEM (B, nP) int32 — scalar prefetch
+    lengths_ref,  # SMEM (B,) int32 — scalar prefetch
+    q_ref,        # (1, 1, G, d)
+    k_ref,        # (1, 1, ps, d) — pool page selected by the index map
+    v_ref,        # (1, 1, ps, d)
+    o_ref,        # (1, 1, G, d)
+    m_ref,        # VMEM (G, 1) f32
+    l_ref,        # VMEM (G, 1) f32
+    acc_ref,      # VMEM (G, d) f32
+    *,
+    scale: float,
+    page_size: int,
+    n_pages: int,
+):
+    b = pl.program_id(0)
+    i_p = pl.program_id(2)
+
+    @pl.when(i_p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (ps, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, ps)
+
+    length = lengths_ref[b]
+    pos = i_p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[:, 0] = m_new
+
+    @pl.when(i_p == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-37)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,        # (B, K, G, d)
+    k_pages: jax.Array,  # (P, K, ps, d) — global page pool
+    v_pages: jax.Array,  # (P, K, ps, d)
+    page_tables: jax.Array,  # (B, nP) int32 — pool index per sequence page
+    lengths: jax.Array,  # (B,) int32 — valid token count per sequence
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kh, g, d = q.shape
+    _, kh2, page_size, d2 = k_pages.shape
+    assert (kh2, d2) == (kh, d), (k_pages.shape, q.shape)
+    assert page_tables.shape[0] == b, (page_tables.shape, b)
+    n_pages = page_tables.shape[1]
+    if scale is None:
+        scale = d**-0.5
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, page_size=page_size, n_pages=n_pages
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, n_pages),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, d), lambda b_, k_, ip_, tabs, lens: (b_, k_, 0, 0)
+            ),
+            # page-table gather: the pool's leading axis is indexed by the
+            # prefetched table entry for (sequence, page) — aliased pages
+            # are fetched per-reference, which is exactly the bandwidth the
+            # contiguous kernel would have spent on its private copy
+            pl.BlockSpec(
+                (1, 1, page_size, d),
+                lambda b_, k_, ip_, tabs, lens: (tabs[b_, ip_], k_, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page_size, d),
+                lambda b_, k_, ip_, tabs, lens: (tabs[b_, ip_], k_, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, k_, ip_, tabs, lens: (b_, k_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(
+        page_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

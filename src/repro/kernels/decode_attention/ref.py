@@ -1,4 +1,6 @@
-"""Pure-jnp oracle for the GQA decode-attention kernel."""
+"""Pure-jnp oracles for the GQA decode-attention kernels (contiguous
+and paged), including a blocked paged oracle that mirrors the kernel's
+page-at-a-time online-softmax recurrence."""
 
 from __future__ import annotations
 
@@ -27,4 +29,69 @@ def decode_attention_ref(
     scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gather_pages_ref(
+    pages: jax.Array,        # (P, K, ps, d) — global page pool
+    page_tables: jax.Array,  # (B, nP) int32
+) -> jax.Array:
+    """Materialize the contiguous (B, K, nP*ps, d) view of a paged cache."""
+    _, kh, ps, d = pages.shape
+    b, n_p = page_tables.shape
+    g = pages[page_tables]                 # (B, nP, K, ps, d)
+    g = jnp.moveaxis(g, 1, 2)              # (B, K, nP, ps, d)
+    return g.reshape(b, kh, n_p * ps, d)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,            # (B, K, G, d)
+    k_pages: jax.Array,      # (P, K, ps, d)
+    v_pages: jax.Array,      # (P, K, ps, d)
+    page_tables: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,      # (B,) int32
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense oracle: gather pages into a contiguous cache, then run the
+    contiguous reference."""
+    k = gather_pages_ref(k_pages, page_tables)
+    v = gather_pages_ref(v_pages, page_tables)
+    return decode_attention_ref(q, k, v, lengths, scale=scale)
+
+
+def paged_decode_attention_blocked_ref(
+    q: jax.Array,            # (B, K, G, d)
+    k_pages: jax.Array,      # (P, K, ps, d)
+    v_pages: jax.Array,      # (P, K, ps, d)
+    page_tables: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,      # (B,) int32
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Blocked oracle: replays the kernel's page-at-a-time online-softmax
+    recurrence in jnp (same m/l/acc update order), so a kernel bug in the
+    recurrence itself cannot hide behind softmax re-normalization."""
+    b, kh, g, d = q.shape
+    ps = k_pages.shape[2]
+    n_p = page_tables.shape[1]
+    if scale is None:
+        scale = d**-0.5
+    qf = q.astype(jnp.float32)
+    m = jnp.full((b, kh, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kh, g), jnp.float32)
+    acc = jnp.zeros((b, kh, g, d), jnp.float32)
+    for i_p in range(n_p):
+        k = k_pages[page_tables[:, i_p]].astype(jnp.float32)  # (B, K, ps, d)
+        v = v_pages[page_tables[:, i_p]].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bksd->bkgs", qf, k) * scale
+        pos = i_p * ps + jnp.arange(ps)[None, None, None, :]
+        s = jnp.where(pos < lengths[:, None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgs,bksd->bkgd", p, v)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
     return out.astype(q.dtype)

@@ -160,8 +160,14 @@ def decode_attention(
     return naive_attention(q, k_cache, v_cache, mask, scale)
 
 
-def make_causal_mask(sq: int, sk: int, prefix_len: int = 0) -> jax.Array:
-    q_pos = jnp.arange(sq)[:, None]
+def make_causal_mask(
+    sq: int, sk: int, prefix_len: int = 0, q_offset: int = 0
+) -> jax.Array:
+    """``q_offset`` > 0 places the queries at global positions
+    ``q_offset .. q_offset+sq`` over ``sk`` keys starting at position 0 —
+    the suffix-prefill mask (queries see the whole cached prefix plus the
+    causal part of their own block)."""
+    q_pos = jnp.arange(sq)[:, None] + q_offset
     k_pos = jnp.arange(sk)[None, :]
     visible = q_pos >= k_pos
     if prefix_len:
@@ -250,6 +256,28 @@ def gqa_full(
         if causal:
             mask = make_causal_mask(s, k.shape[1], prefix_len)
         out = naive_attention(q, k, v, mask, scale)
+    out = sharding.constrain(out, ("batch", "seq", "heads", None))
+    return layers.dense(params["wo"], out.reshape(b, s, -1))
+
+
+def gqa_suffix(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,      # (B, s, D) — hidden states of the prompt *suffix*
+    k_ctx: jax.Array,  # (B, start+s, K, dh) — cached prefix ++ fresh suffix
+    v_ctx: jax.Array,  # (B, start+s, K, dh)
+    start: int,
+) -> jax.Array:
+    """Suffix prefill attention: queries at global positions
+    ``start .. start+s`` attend over the full context ``[0, start+s)``.
+    Because a transformer's suffix hidden states depend on the prefix only
+    through the prefix KV, this reproduces what full prefill would compute
+    for the same positions (DESIGN.md §8)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(start, start + s)[None, :]
+    q = gqa_project_q(params, cfg, x, positions if cfg.pos_emb == "rope" else None)
+    mask = make_causal_mask(s, k_ctx.shape[1], q_offset=start)
+    out = naive_attention(q, k_ctx, v_ctx, mask, cfg.head_dim**-0.5)
     out = sharding.constrain(out, ("batch", "seq", "heads", None))
     return layers.dense(params["wo"], out.reshape(b, s, -1))
 

@@ -120,17 +120,17 @@ def tblock_cache_specs(
     return attn.gqa_init_cache(cfg, batch, max_len, dtype)
 
 
-def _fill(cache: jax.Array, new: jax.Array) -> jax.Array:
-    """Write the prompt's projected values into the cache prefix.
+def _fill(cache: jax.Array, new: jax.Array, start: int = 0) -> jax.Array:
+    """Write the prompt's projected values into the cache at ``start``.
 
     When the prompt covers the whole cache the update is a plain cast —
     avoiding a dynamic-update-slice the SPMD partitioner would otherwise
     service with an involuntary full rematerialization (observed on the
     MQA kv=1 prefill cells)."""
     s = new.shape[1]
-    if s == cache.shape[1]:
+    if start == 0 and s == cache.shape[1]:
         return new.astype(cache.dtype)
-    return cache.at[:, :s].set(new.astype(cache.dtype))
+    return cache.at[:, start : start + s].set(new.astype(cache.dtype))
 
 
 def tblock_prefill(
@@ -141,12 +141,20 @@ def tblock_prefill(
     *,
     prefix_len: int = 0,
     impl: str = "chunked",
+    start: int = 0,
 ) -> tuple[jax.Array, dict, jax.Array]:
-    """Forward + cache fill (inference prefill)."""
+    """Forward + cache fill (inference prefill).
+
+    ``start`` > 0 is *suffix prefill*: ``x`` holds positions
+    ``start .. start+s`` of the prompt and ``cache`` already contains the
+    first ``start`` positions' KV (gathered from shared prefix pages);
+    only GQA attention supports it."""
     b, s, _ = x.shape
-    positions = jnp.arange(s)[None, :]
+    positions = jnp.arange(start, start + s)[None, :]
     h = layers.rms_norm(params["ln1"], x, cfg.norm_eps)
     if cfg.use_mla:
+        if start:
+            raise ValueError("suffix prefill is not supported for MLA caches")
         c_kv, k_rope = attn._mla_ckv(params["attn"], cfg, h, positions)
         cache = {
             "c_kv": _fill(cache["c_kv"], c_kv),
@@ -156,11 +164,26 @@ def tblock_prefill(
     else:
         rope_pos = positions if cfg.pos_emb == "rope" else None
         k, v = attn.gqa_project_kv(params["attn"], cfg, h, rope_pos)
-        cache = {"k": _fill(cache["k"], k), "v": _fill(cache["v"], v)}
-        a = attn.gqa_full(
-            params["attn"], cfg, h, causal=True, prefix_len=prefix_len,
-            impl=impl, kv=(k, v),
-        )
+        cache = {
+            "k": _fill(cache["k"], k, start),
+            "v": _fill(cache["v"], v, start),
+        }
+        if start:
+            if prefix_len:
+                raise ValueError(
+                    "suffix prefill cannot combine with a prefix-LM mask"
+                )
+            # cache stores post-rope keys, so prefix ++ fresh-suffix concat
+            # is position-consistent; the round-trip through the cache dtype
+            # is exact (values originate in the compute dtype)
+            k_ctx = jnp.concatenate([cache["k"][:, :start].astype(k.dtype), k], 1)
+            v_ctx = jnp.concatenate([cache["v"][:, :start].astype(v.dtype), v], 1)
+            a = attn.gqa_suffix(params["attn"], cfg, h, k_ctx, v_ctx, start)
+        else:
+            a = attn.gqa_full(
+                params["attn"], cfg, h, causal=True, prefix_len=prefix_len,
+                impl=impl, kv=(k, v),
+            )
     x = x + a
     h = layers.rms_norm(params["ln2"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -320,10 +343,22 @@ class TransformerLM:
         return out
 
     def prefill(
-        self, params: dict, batch: dict, cache: dict, *, dtype: Any = jnp.bfloat16
+        self,
+        params: dict,
+        batch: dict,
+        cache: dict,
+        *,
+        dtype: Any = jnp.bfloat16,
+        start: int = 0,
     ) -> tuple[jax.Array, dict]:
-        """Run the prompt, fill the cache, return last-position logits."""
+        """Run the prompt, fill the cache, return last-position logits.
+
+        ``start`` > 0 runs *suffix prefill*: ``batch["tokens"]`` holds only
+        the prompt suffix from position ``start`` on, and ``cache`` must
+        already hold the first ``start`` positions' KV."""
         cfg = self.cfg
+        if start and cfg.family == "vlm":
+            raise ValueError("suffix prefill is not supported for VLM prompts")
         x, prefix_len = self._embed_inputs(params, batch, dtype)
         new_cache: dict = {}
 
@@ -332,7 +367,7 @@ class TransformerLM:
                 p_layer, c_layer = pc
                 h, c_layer, _ = tblock_prefill(
                     p_layer, cfg, h, c_layer, prefix_len=prefix_len,
-                    impl=self.attn_impl,
+                    impl=self.attn_impl, start=start,
                 )
                 return h, c_layer
 

@@ -1,0 +1,269 @@
+"""Host-side paged KV-cache manager with hash-chain prefix sharing.
+
+The device cache is a **pool of fixed-size pages** instead of contiguous
+per-slot slabs (DESIGN.md §8).  This module owns the bookkeeping only —
+no JAX, no device arrays — so the same manager drives both the real
+``ContinuousBatcher`` (which gathers pool pages through page tables) and
+the ``SimulatedSlotEngine`` (which only charges simulated prefill cost).
+
+Sharing model
+-------------
+Each *full* page of a prompt is identified by a rolling hash chain
+
+    h_0 = H(tokens[0:ps]),   h_i = H(h_{i-1} || tokens[i*ps:(i+1)*ps])
+
+so a page hash commits to the entire token prefix up to and including
+that page — two prompts share page *i* iff their first ``(i+1)*ps``
+tokens are identical.  ``acquire`` walks the chain against the prefix
+index and ref-counts every resident match; the suffix (first divergent
+page onward) gets fresh pages and a normal prefill.
+
+Sharing is capped at ``(len(tokens) - 1) // page_size`` pages: the page
+holding the **final** prompt token is never shared, so every request
+prefills at least one token (prefill must produce last-position logits)
+and decode always writes into a private page.  Copy-on-write at the
+first divergent page is therefore structurally unreachable in the
+batcher; ``ensure_position`` still implements it as a defensive
+invariant (a page that is shared *or* indexed is never written in
+place).
+
+Page lifecycle: ``free`` → ``active`` (ref > 0) → on release either
+``free`` (never indexed) or ``cached`` (ref == 0 but still in the
+prefix index, LRU-evicted on pool pressure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Hashable, Sequence
+
+
+def page_hash_chain(tokens: Sequence, page_size: int) -> list[bytes]:
+    """One digest per *full* page; ``h_i`` commits to ``tokens[:(i+1)*ps]``."""
+    chain: list[bytes] = []
+    prev = b""
+    for i in range(len(tokens) // page_size):
+        page = tokens[i * page_size : (i + 1) * page_size]
+        payload = prev + "\x1f".join(str(t) for t in page).encode()
+        prev = hashlib.sha256(payload).digest()
+        chain.append(prev)
+    return chain
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of :meth:`PagedCacheManager.acquire`."""
+
+    page_ids: list[int]      #: full page table for the prompt, in order
+    n_shared_pages: int      #: leading entries reused from the prefix index
+    n_shared_tokens: int     #: ``n_shared_pages * page_size``
+
+
+@dataclasses.dataclass
+class PageWrite:
+    """Result of :meth:`PagedCacheManager.ensure_position`."""
+
+    page_id: int             #: pool page to write into
+    page_index: int          #: index of that page in the owner's table
+    offset: int              #: row within the page
+    allocated: bool = False  #: page was appended to the table by this call
+    cow_src: int | None = None  #: device must copy this page into page_id
+
+
+@dataclasses.dataclass
+class PagedCacheStats:
+    lookups: int = 0
+    prefix_pages_hit: int = 0
+    prefix_tokens_saved: int = 0
+    pages_allocated: int = 0
+    cow_copies: int = 0
+    evictions: int = 0
+
+
+class PagedCacheManager:
+    """Refcounted page pool + prefix index.  Single-threaded by design:
+    callers (the batcher loop / the sim engine under its lock) serialize
+    access."""
+
+    def __init__(
+        self,
+        n_pages: int,
+        page_size: int,
+        *,
+        prefix_cache: bool = True,
+    ):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        if n_pages <= 0:
+            raise ValueError(f"n_pages must be positive, got {n_pages}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._ref = [0] * n_pages
+        #: page id -> chain hash for indexed pages (and the reverse map)
+        self._hash_of: dict[int, bytes] = {}
+        self._index: dict[bytes, int] = {}
+        #: ref == 0 but still indexed, in LRU order (oldest first)
+        self._cached: OrderedDict[int, None] = OrderedDict()
+        self._tables: dict[Hashable, list[int]] = {}
+        self.stats = PagedCacheStats()
+
+    # -- introspection (used by leak tests) -----------------------------------
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def pages_active(self) -> int:
+        return self.n_pages - len(self._free) - len(self._cached)
+
+    def refcount(self, page_id: int) -> int:
+        return self._ref[page_id]
+
+    def table(self, owner: Hashable) -> list[int]:
+        return list(self._tables[owner])
+
+    # -- page state transitions -----------------------------------------------
+
+    def _alloc(self) -> int:
+        if self._free:
+            pid = self._free.pop()
+        elif self._cached:
+            pid, _ = self._cached.popitem(last=False)  # LRU eviction
+            self._unindex(pid)
+            self.stats.evictions += 1
+        else:
+            raise RuntimeError(
+                f"page pool exhausted: all {self.n_pages} pages are active"
+            )
+        self._ref[pid] = 1
+        self.stats.pages_allocated += 1
+        return pid
+
+    def _retain(self, pid: int) -> None:
+        if self._ref[pid] == 0:
+            del self._cached[pid]
+        self._ref[pid] += 1
+
+    def _release_page(self, pid: int) -> None:
+        assert self._ref[pid] > 0, f"double release of page {pid}"
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            if pid in self._hash_of:
+                self._cached[pid] = None  # retain content for future matches
+            else:
+                self._free.append(pid)
+
+    def _unindex(self, pid: int) -> None:
+        h = self._hash_of.pop(pid, None)
+        if h is not None and self._index.get(h) == pid:
+            del self._index[h]
+
+    # -- public API -----------------------------------------------------------
+
+    def acquire(self, owner: Hashable, tokens: Sequence) -> PrefixMatch:
+        """Build ``owner``'s page table for ``tokens``: match the leading
+        hash chain against resident pages (never the final token's page),
+        then allocate fresh pages for the suffix."""
+        if owner in self._tables:
+            raise ValueError(f"owner {owner!r} already holds a page table")
+        if not tokens:
+            raise ValueError("cannot acquire pages for an empty prompt")
+        ps = self.page_size
+        n_total = -(-len(tokens) // ps)  # ceil
+        shared: list[int] = []
+        if self.prefix_cache:
+            self.stats.lookups += 1
+            max_share = (len(tokens) - 1) // ps
+            chain = page_hash_chain(tokens[: max_share * ps], ps)
+            for h in chain:
+                pid = self._index.get(h)
+                if pid is None:
+                    break
+                # retain immediately so a later _alloc cannot LRU-evict a
+                # page this very walk already matched
+                self._retain(pid)
+                shared.append(pid)
+                self._cached.pop(pid, None)
+        fresh = [self._alloc() for _ in range(n_total - len(shared))]
+        self._tables[owner] = shared + fresh
+        self.stats.prefix_pages_hit += len(shared)
+        self.stats.prefix_tokens_saved += len(shared) * ps
+        return PrefixMatch(
+            page_ids=shared + fresh,
+            n_shared_pages=len(shared),
+            n_shared_tokens=len(shared) * ps,
+        )
+
+    def register(self, owner: Hashable, tokens: Sequence) -> int:
+        """Index every *full* page of ``tokens`` after its prefill has
+        populated the owner's pages.  Returns the number of pages newly
+        indexed.  When two identical prompts prefilled concurrently the
+        second registration is a no-op for already-indexed hashes (its
+        duplicate pages simply free on release)."""
+        if not self.prefix_cache:
+            return 0
+        table = self._tables[owner]
+        chain = page_hash_chain(tokens, self.page_size)
+        newly = 0
+        for i, h in enumerate(chain):
+            pid = table[i]
+            if h in self._index:
+                continue  # first registration wins
+            if pid in self._hash_of:
+                continue  # page already committed to a different chain
+            self._index[h] = pid
+            self._hash_of[pid] = h
+            newly += 1
+        return newly
+
+    def ensure_position(self, owner: Hashable, pos: int) -> PageWrite:
+        """Return a *privately writable* page for token position ``pos``,
+        extending the owner's table or copy-on-writing a shared/indexed
+        page as needed."""
+        table = self._tables[owner]
+        page_index, offset = divmod(pos, self.page_size)
+        if page_index > len(table):
+            raise ValueError(
+                f"non-contiguous write: pos {pos} needs page {page_index} "
+                f"but owner {owner!r} holds {len(table)} pages"
+            )
+        if page_index == len(table):
+            pid = self._alloc()
+            table.append(pid)
+            return PageWrite(pid, page_index, offset, allocated=True)
+        pid = table[page_index]
+        if self._ref[pid] == 1 and pid not in self._hash_of:
+            return PageWrite(pid, page_index, offset)
+        # shared or indexed: writing in place would corrupt other readers
+        # or leave a stale hash in the index — copy-on-write
+        new = self._alloc()
+        self._release_page(pid)
+        table[page_index] = new
+        self.stats.cow_copies += 1
+        return PageWrite(new, page_index, offset, cow_src=pid)
+
+    def release(self, owner: Hashable) -> None:
+        """Drop the owner's table; each page frees or parks in the LRU
+        prefix cache depending on whether it is indexed."""
+        for pid in self._tables.pop(owner):
+            self._release_page(pid)
+
+    def check_no_leaks(self) -> None:
+        """Raise unless every page is accounted for and, with no owners
+        outstanding, nothing is active."""
+        if self._tables:
+            raise AssertionError(f"outstanding owners: {list(self._tables)}")
+        if self.pages_active != 0:
+            held = [p for p in range(self.n_pages) if self._ref[p] > 0]
+            raise AssertionError(f"leaked pages with nonzero refcount: {held}")
+        if len(self._free) + len(self._cached) != self.n_pages:
+            raise AssertionError("free + cached does not cover the pool")

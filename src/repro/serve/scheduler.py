@@ -4,14 +4,24 @@ A fixed pool of ``n_slots`` decode slots steps in lock-step (SPMD gang
 scheduling — see DESIGN.md §2: Spark's work-stealing does not transfer to a
 jitted step, so slots are the unit of multiplexing instead).  Each iteration:
 
-1. free slots are refilled from the request queue (admission-controlled),
-2. a single batched decode step advances every active slot by one token,
-3. finished slots (EOS / max_tokens) emit their completion and free up.
+1. finished slots (EOS / max_tokens) emit their completion and free up,
+2. free slots are refilled from the request queue (admission-controlled),
+3. a single batched decode step advances every active slot by one token.
 
-Refill inserts a B=1 prefilled cache row into the batched cache with
-``dynamic_update_slice_in_dim`` along each leaf's batch axis (derived from
-the logical ``batch`` axis on the cache ParamSpecs — no per-family special
-cases).  Prompts are padded to power-of-two buckets to bound recompiles.
+Prefill is **exact-length**: each distinct prompt length compiles one
+prefill program (``prefill_recompiles`` counts them).  Right-padding to
+power-of-two buckets would bound recompiles for attention caches (padding
+is never attended) but corrupts SSM recurrent state, so callers that need
+bounded compiles bucket prompt lengths at the data layer instead.
+
+With ``page_size`` > 0 the KV cache is **paged** (DESIGN.md §8): device
+leaves become page pools, each slot holds a page table, and a host-side
+:class:`~repro.serve.paged_cache.PagedCacheManager` shares prompt-prefix
+pages across requests by hash chain — a prompt whose leading pages are
+resident skips prefill for them (suffix prefill picks up at the first
+non-shared token).  Decode gathers each slot's pages into the contiguous
+view the decode step already understands, then scatters the one new KV
+row back to its pool page.
 """
 
 from __future__ import annotations
@@ -29,9 +39,14 @@ from repro.configs.base import ModelConfig
 from repro.core.engines import BatcherStats
 from repro.models.params import init_params, is_spec
 from repro.serve import steps as steps_lib
+from repro.serve.paged_cache import PagedCacheManager
 from repro.sharding import ShardingRules, use_rules
 
 PyTree = Any
+
+#: model families whose caches are pure attention KV (batch x seq leaves)
+#: and whose prefill supports the suffix ``start`` offset
+_PAGEABLE_FAMILIES = ("dense", "moe")
 
 
 @dataclasses.dataclass
@@ -47,15 +62,8 @@ class Completion:
     request_id: int
     tokens: list[int]
     prompt_len: int
-    finished_reason: str  # "eos" | "length"
+    finished_reason: str  # "eos" | "length" | "truncated"
     latency_s: float = 0.0
-
-
-def _bucket(n: int, minimum: int = 16) -> int:
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
 
 
 def batch_axis_tree(cache_specs: PyTree) -> PyTree:
@@ -63,6 +71,35 @@ def batch_axis_tree(cache_specs: PyTree) -> PyTree:
     return jax.tree.map(
         lambda s: s.axes.index("batch"), cache_specs, is_leaf=is_spec
     )
+
+
+def paged_pool_specs(
+    cache_specs: PyTree, n_pages: int, page_size: int
+) -> PyTree:
+    """Rewrite per-slot cache specs into page-pool specs: the ``batch``
+    axis becomes the pool's page axis and ``cache_seq`` shrinks to one
+    page.  Requires ``cache_seq`` directly after ``batch`` on every leaf
+    (true for all attention KV caches) so a page is a contiguous block."""
+
+    def to_pool(spec):
+        if "cache_seq" not in spec.axes:
+            raise ValueError(
+                f"cache leaf {spec.axes} has no cache_seq axis — paged KV "
+                f"does not support recurrent-state caches"
+            )
+        b_ax = spec.axes.index("batch")
+        s_ax = spec.axes.index("cache_seq")
+        if s_ax != b_ax + 1:
+            raise ValueError(
+                f"cache leaf {spec.axes}: cache_seq must follow batch"
+            )
+        shape = list(spec.shape)
+        shape[b_ax] = n_pages
+        shape[s_ax] = page_size
+        axes = tuple("kv_pages" if a == "batch" else a for a in spec.axes)
+        return dataclasses.replace(spec, shape=tuple(shape), axes=axes)
+
+    return jax.tree.map(to_pool, cache_specs, is_leaf=is_spec)
 
 
 class ContinuousBatcher:
@@ -83,6 +120,8 @@ class ContinuousBatcher:
         max_prefills_per_step: int = 0,
         device: Any = None,
         rules: ShardingRules | None = None,
+        page_size: int = 0,
+        prefix_cache: bool = True,
     ):
         self.model, self.cfg, self.params = model, cfg, params
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
@@ -99,10 +138,42 @@ class ContinuousBatcher:
         self.device = device
         self.rules = rules
         self.prefix = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+        #: 0 = contiguous per-slot cache; > 0 = paged pool with this page size
+        self.page_size = page_size
 
         cache_specs = model.cache_specs(n_slots, max_len, cache_dtype)
         self._batch_axes = batch_axis_tree(cache_specs)
-        self.cache = init_params(jax.random.key(0), cache_specs)
+        if page_size:
+            if cfg.family not in _PAGEABLE_FAMILIES or getattr(
+                cfg, "use_mla", False
+            ):
+                raise ValueError(
+                    f"paged KV cache supports GQA attention families "
+                    f"{_PAGEABLE_FAMILIES}, not {cfg.family}"
+                    + (" with MLA" if getattr(cfg, "use_mla", False) else "")
+                )
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of page_size "
+                    f"{page_size}"
+                )
+            if rules is not None:
+                raise ValueError(
+                    "paged KV cache does not compose with sharding rules yet"
+                )
+            self.pages_per_slot = max_len // page_size
+            #: worst case: every slot full + one defensive CoW per slot;
+            #: one extra trailing page absorbs decode writes from inactive
+            #: slots (their stale positions must scatter *somewhere* valid)
+            n_pool = n_slots * self.pages_per_slot + n_slots
+            self._trash_page = n_pool
+            self.manager = PagedCacheManager(
+                n_pool, page_size, prefix_cache=prefix_cache
+            )
+            pool_specs = paged_pool_specs(cache_specs, n_pool + 1, page_size)
+            self.cache = init_params(jax.random.key(0), pool_specs)
+        else:
+            self.cache = init_params(jax.random.key(0), cache_specs)
         if rules is not None:
             self.params = jax.device_put(
                 self.params, rules.param_shardings(model.param_specs())
@@ -116,10 +187,25 @@ class ContinuousBatcher:
         row_specs = model.cache_specs(1, max_len, cache_dtype)
         self._row_specs = row_specs
 
-        self._decode = jax.jit(steps_lib.make_decode_fn(model, cfg))
-        self._prefill = jax.jit(
-            lambda params, batch, cache: model.prefill(params, batch, cache)
-        )
+        self._decode_fn = steps_lib.make_decode_fn(model, cfg)
+        self._decode = jax.jit(self._decode_fn)
+        if page_size:
+            self._prefill = jax.jit(
+                lambda params, batch, cache, start: model.prefill(
+                    params, batch, cache, start=start
+                ),
+                static_argnums=(3,),
+            )
+            self._paged_decode = jax.jit(self._paged_decode_impl)
+            self._read_prefix = jax.jit(self._read_prefix_impl)
+            self._write_pages = jax.jit(
+                self._write_pages_impl, static_argnums=(3,)
+            )
+            self._copy_page = jax.jit(self._copy_page_impl)
+        else:
+            self._prefill = jax.jit(
+                lambda params, batch, cache: model.prefill(params, batch, cache)
+            )
         self._insert = jax.jit(self._insert_impl)
 
         # slot state (host side)
@@ -136,7 +222,9 @@ class ContinuousBatcher:
         #: occupancy/throughput counters for the persistent streaming mode
         #: (surfaced through the InferenceService into session accounting)
         self.stats = BatcherStats(n_slots=n_slots)
-        self._seen_prompt_lens: set[int] = set()
+        #: prompt shapes already compiled: lengths in contiguous mode,
+        #: (shared_prefix, suffix_len) pairs in paged mode
+        self._seen_prefill_shapes: set = set()
 
     # -- cache row insertion ---------------------------------------------------
 
@@ -149,6 +237,89 @@ class ContinuousBatcher:
             row,
             self._batch_axes,
         )
+
+    # -- paged cache movement ----------------------------------------------------
+    #
+    # Every helper normalizes a leaf to (pages, page_size, ...) /
+    # (batch, seq, ...) with moveaxis and restores the leaf layout on the
+    # way out, so one implementation serves every cache-leaf layout.
+
+    def _read_prefix_impl(
+        self, row: PyTree, pools: PyTree, shared_ids: jax.Array
+    ) -> PyTree:
+        """Gather shared prefix pages into positions [0, n*ps) of a B=1 row."""
+
+        def read(r, pool, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            pref = p[shared_ids].reshape((-1,) + p.shape[2:])
+            rr = jnp.moveaxis(r, (ax, ax + 1), (0, 1))
+            rr = rr.at[0, : pref.shape[0]].set(pref.astype(rr.dtype))
+            return jnp.moveaxis(rr, (0, 1), (ax, ax + 1))
+
+        return jax.tree.map(read, row, pools, self._batch_axes)
+
+    def _write_pages_impl(
+        self, pools: PyTree, row: PyTree, fresh_ids: jax.Array, start_page: int
+    ) -> PyTree:
+        """Scatter row positions [start_page*ps, (start_page+n)*ps) into
+        the pool pages that the prefill just produced."""
+        ps = self.page_size
+        n = fresh_ids.shape[0]
+
+        def write(pool, r, ax):
+            rr = jnp.moveaxis(r, (ax, ax + 1), (0, 1))
+            chunk = rr[0, start_page * ps : (start_page + n) * ps]
+            chunk = chunk.reshape((n, ps) + rr.shape[2:])
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[fresh_ids].set(chunk.astype(p.dtype))
+            return jnp.moveaxis(p, (0, 1), (ax, ax + 1))
+
+        return jax.tree.map(write, pools, row, self._batch_axes)
+
+    def _copy_page_impl(
+        self, pools: PyTree, src: jax.Array, dst: jax.Array
+    ) -> PyTree:
+        def cp(pool, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[dst].set(p[src])
+            return jnp.moveaxis(p, (0, 1), (ax, ax + 1))
+
+        return jax.tree.map(cp, pools, self._batch_axes)
+
+    def _paged_decode_impl(
+        self,
+        params: PyTree,
+        tokens: jax.Array,
+        pools: PyTree,
+        tables: jax.Array,       # (B, pages_per_slot) int32
+        positions: jax.Array,    # (B,)
+        write_pages: jax.Array,  # (B,) pool page receiving each slot's new KV
+        write_offsets: jax.Array,  # (B,) row within that page
+    ) -> tuple[jax.Array, PyTree]:
+        """Gather page tables into the contiguous (B, max_len) view the
+        decode step understands, run it, scatter the one new KV row per
+        slot back to its pool page.  Inactive slots' write targets point
+        at the trash page, so stale positions never corrupt live pages."""
+        b = tokens.shape[0]
+
+        def gather(pool, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            g = p[tables]  # (B, nP, ps, ...)
+            g = g.reshape((b, -1) + p.shape[2:])
+            return jnp.moveaxis(g, (0, 1), (ax, ax + 1))
+
+        view = jax.tree.map(gather, pools, self._batch_axes)
+        logits, view = self._decode_fn(params, tokens, view, positions)
+
+        def scatter(pool, leaf, ax):
+            v = jnp.moveaxis(leaf, (ax, ax + 1), (0, 1))
+            rows = v[jnp.arange(b), positions]  # (B, ...) the new KV rows
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[write_pages, write_offsets].set(rows.astype(p.dtype))
+            return jnp.moveaxis(p, (0, 1), (ax, ax + 1))
+
+        pools = jax.tree.map(scatter, pools, view, self._batch_axes)
+        return logits, pools
 
     # -- public API --------------------------------------------------------------
 
@@ -183,6 +354,66 @@ class ContinuousBatcher:
             return jax.default_device(self.device)
         return contextlib.nullcontext()
 
+    def _contiguous_prefill(self, slot: int, req: Request) -> int:
+        ptoks = req.prompt_tokens
+        if len(ptoks) not in self._seen_prefill_shapes:
+            self._seen_prefill_shapes.add(len(ptoks))
+            self.stats.prefill_recompiles += 1
+        batch = {"tokens": jnp.asarray(np.asarray(ptoks, np.int32)[None])}
+        if req.extras:
+            batch.update(
+                {k: jnp.asarray(v)[None] for k, v in req.extras.items()}
+            )
+        with self._compute_ctx():
+            row_cache = init_params(jax.random.key(1), self._row_specs)
+            logits, row_cache = self._prefill(self.params, batch, row_cache)
+            self.cache = self._insert(self.cache, row_cache, slot)
+            return int(
+                jax.device_get(
+                    steps_lib.greedy_sample(logits, self.cfg.vocab_size)
+                )[0]
+            )
+
+    def _paged_prefill(self, slot: int, req: Request) -> int:
+        """Acquire pages (reusing any resident shared prefix), prefill only
+        the suffix, scatter the fresh pages back into the pool, and index
+        the prompt's full pages for future sharers."""
+        ptoks = req.prompt_tokens
+        match = self.manager.acquire(slot, ptoks)
+        start = match.n_shared_tokens
+        self.stats.prefix_pages_hit += match.n_shared_pages
+        self.stats.prefix_tokens_saved += start
+        if (start, len(ptoks) - start) not in self._seen_prefill_shapes:
+            self._seen_prefill_shapes.add((start, len(ptoks) - start))
+            self.stats.prefill_recompiles += 1
+        suffix = np.asarray(ptoks[start:], np.int32)[None]
+        batch = {"tokens": jnp.asarray(suffix)}
+        if req.extras:
+            batch.update(
+                {k: jnp.asarray(v)[None] for k, v in req.extras.items()}
+            )
+        with self._compute_ctx():
+            row = init_params(jax.random.key(1), self._row_specs)
+            if match.n_shared_pages:
+                shared = jnp.asarray(
+                    match.page_ids[: match.n_shared_pages], jnp.int32
+                )
+                row = self._read_prefix(row, self.cache, shared)
+            logits, row = self._prefill(self.params, batch, row, start)
+            fresh = jnp.asarray(
+                match.page_ids[match.n_shared_pages :], jnp.int32
+            )
+            self.cache = self._write_pages(
+                self.cache, row, fresh, match.n_shared_pages
+            )
+            first_tok = int(
+                jax.device_get(
+                    steps_lib.greedy_sample(logits, self.cfg.vocab_size)
+                )[0]
+            )
+        self.manager.register(slot, ptoks)
+        return first_tok
+
     def _refill(self) -> None:
         admitted = 0
         for slot in range(self.n_slots):
@@ -192,36 +423,22 @@ class ContinuousBatcher:
                 self.max_prefills_per_step
                 and admitted >= self.max_prefills_per_step
             ):
-                self.stats.prefills_deferred += len(self.queue)
+                # each still-queued request that a free slot could have
+                # taken this step is deferred exactly once per step it
+                # actually waits (not once per queue neighbour)
+                free_left = sum(
+                    1 for s in range(slot, self.n_slots) if self.slot_free[s]
+                )
+                self.stats.prefills_deferred += min(len(self.queue), free_left)
                 break
             req = self.queue.pop(0)
             self._admit(req)
             ptoks = req.prompt_tokens
             self.stats.admissions += 1
-            if len(ptoks) not in self._seen_prompt_lens:
-                # exact-length prefill: each new prompt length compiles a
-                # fresh prefill program (callers bucket lengths to bound it)
-                self._seen_prompt_lens.add(len(ptoks))
-                self.stats.prefill_recompiles += 1
-            # Exact-length prefill: bucketed (right-padded) prefill would be
-            # fine for attention caches (padding is never attended) but
-            # corrupts SSM recurrent state, so prompts are prefetched at their
-            # true length; callers bound recompiles by bucketing prompt
-            # lengths at the data layer.
-            batch = {"tokens": jnp.asarray(np.asarray(ptoks, np.int32)[None])}
-            if req.extras:
-                batch.update(
-                    {k: jnp.asarray(v)[None] for k, v in req.extras.items()}
-                )
-            with self._compute_ctx():
-                row_cache = init_params(jax.random.key(1), self._row_specs)
-                logits, row_cache = self._prefill(self.params, batch, row_cache)
-                self.cache = self._insert(self.cache, row_cache, slot)
-                first_tok = int(
-                    jax.device_get(
-                        steps_lib.greedy_sample(logits, self.cfg.vocab_size)
-                    )[0]
-                )
+            if self.page_size:
+                first_tok = self._paged_prefill(slot, req)
+            else:
+                first_tok = self._contiguous_prefill(slot, req)
             admitted += 1
 
             self.slot_free[slot] = False
@@ -246,17 +463,15 @@ class ContinuousBatcher:
         self.slot_free[slot] = True
         self.slot_req[slot] = None
         self.slot_tokens[slot] = []
+        if self.page_size:
+            self.manager.release(slot)
         self.stats.completions += 1
 
-    def step(self) -> int:
-        """One scheduler iteration; returns number of active slots stepped."""
-        self._refill()
-        active = [s for s in range(self.n_slots) if not self.slot_free[s]]
-        if not active:
-            return 0
-
-        # check EOS/length finishes from the previous iteration's samples
-        for slot in list(active):
+    def _reap(self) -> None:
+        """Finish every slot whose latest sample terminated it."""
+        for slot in range(self.n_slots):
+            if self.slot_free[slot]:
+                continue
             toks = self.slot_tokens[slot]
             req = self.slot_req[slot]
             assert req is not None
@@ -264,6 +479,40 @@ class ContinuousBatcher:
                 self._finish(slot, "eos")
             elif len(toks) >= req.max_new_tokens:
                 self._finish(slot, "length")
+
+    def _paged_step_tables(
+        self, active: list[int]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-step page tables and write targets; extends/copy-on-writes
+        the page holding each active slot's next position."""
+        tables = np.zeros((self.n_slots, self.pages_per_slot), np.int32)
+        write_pages = np.full((self.n_slots,), self._trash_page, np.int32)
+        write_offsets = np.zeros((self.n_slots,), np.int32)
+        for slot in active:
+            pos = int(self.slot_pos[slot])
+            if pos < self.max_len:
+                pw = self.manager.ensure_position(slot, pos)
+                if pw.cow_src is not None:
+                    # defensive: unreachable while sharing stops short of
+                    # the final prompt token (see paged_cache docstring)
+                    self.cache = self._copy_page(
+                        self.cache, pw.cow_src, pw.page_id
+                    )
+                    self.stats.cow_copies += 1
+                write_pages[slot] = pw.page_id
+                write_offsets[slot] = pw.offset
+            table = self.manager.table(slot)
+            tables[slot, : len(table)] = table
+        return tables, write_pages, write_offsets
+
+    def step(self) -> int:
+        """One scheduler iteration; returns number of active slots stepped."""
+        # finish-check *before* refill so a slot freed by the previous
+        # iteration's sample is refillable in this very step, then check
+        # again for fresh slots whose first token already terminated them
+        self._reap()
+        self._refill()
+        self._reap()
         active = [s for s in range(self.n_slots) if not self.slot_free[s]]
         if not active:
             return 0
@@ -274,9 +523,16 @@ class ContinuousBatcher:
         with self._compute_ctx():
             tokens = jnp.asarray(self.cur_tokens)
             positions = jnp.asarray(self.slot_pos)
-            logits, self.cache = self._decode(
-                self.params, tokens, self.cache, positions
-            )
+            if self.page_size:
+                tables, wpages, woffs = self._paged_step_tables(active)
+                logits, self.cache = self._paged_decode(
+                    self.params, tokens, self.cache, jnp.asarray(tables),
+                    positions, jnp.asarray(wpages), jnp.asarray(woffs),
+                )
+            else:
+                logits, self.cache = self._decode(
+                    self.params, tokens, self.cache, positions
+                )
             if self.temperature > 0:
                 self.key, sub = jax.random.split(self.key)
                 nxt = steps_lib.temperature_sample(
@@ -299,13 +555,12 @@ class ContinuousBatcher:
             if not busy and not self.queue:
                 break
             self.step()
-        # flush any finished-but-unreported slots
+        # flush slots the loop left behind: finished-but-unreported ones
+        # emit normally; a slot still mid-generation at max_steps
+        # exhaustion emits a "truncated" completion rather than silently
+        # dropping the request
+        self._reap()
         for slot in range(self.n_slots):
             if not self.slot_free[slot]:
-                toks = self.slot_tokens[slot]
-                req = self.slot_req[slot]
-                if toks and (
-                    toks[-1] == self.eos_id or len(toks) >= req.max_new_tokens
-                ):
-                    self._finish(slot, "eos" if toks[-1] == self.eos_id else "length")
+                self._finish(slot, "truncated")
         return self.completions

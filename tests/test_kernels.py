@@ -6,7 +6,14 @@ import pytest
 
 from repro.kernels.bertscore import bertscore_pr, bertscore_ref
 from repro.kernels.bootstrap import bootstrap_means, bootstrap_means_ref
-from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.decode_attention import (
+    decode_attention,
+    decode_attention_ref,
+    gather_pages_ref,
+    paged_decode_attention,
+    paged_decode_attention_blocked_ref,
+    paged_decode_attention_ref,
+)
 from repro.kernels.flash_attention import (
     flash_attention,
     flash_attention_bshd,
@@ -76,6 +83,100 @@ def test_decode_attention(b, kh, g, s, d, dtype, rng):
         np.asarray(out, np.float32), np.asarray(ref, np.float32),
         atol=_tol(dtype), rtol=_tol(dtype),
     )
+
+
+def _paged_case(rng, b, kh, g, n_p, ps, d, dtype, lens):
+    """Random pool + per-sequence tables drawn without replacement, so
+    every sequence gathers distinct pages (sharing is tested separately)."""
+    pool = b * n_p + 3  # a few never-referenced pages
+    k = jnp.asarray(rng.randn(pool, kh, ps, d), dtype)
+    v = jnp.asarray(rng.randn(pool, kh, ps, d), dtype)
+    q = jnp.asarray(rng.randn(b, kh, g, d), dtype)
+    perm = rng.permutation(pool)[: b * n_p].reshape(b, n_p)
+    tables = jnp.asarray(perm, jnp.int32)
+    return q, k, v, tables, jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize(
+    "b,kh,g,n_p,ps,d,lens",
+    [
+        # ragged lengths, mid-page offsets
+        (3, 2, 4, 4, 16, 32, [5, 33, 64]),
+        # page-boundary lengths (len % ps == 0) and a single-token sequence
+        (3, 1, 8, 4, 16, 64, [16, 48, 1]),
+        # one page per sequence
+        (2, 4, 1, 1, 32, 32, [7, 32]),
+    ],
+)
+def test_paged_decode_attention(b, kh, g, n_p, ps, d, lens, dtype, rng):
+    q, k, v, tables, lengths = _paged_case(rng, b, kh, g, n_p, ps, d, dtype, lens)
+    out = paged_decode_attention(q, k, v, tables, lengths, interpret=True)
+    dense = paged_decode_attention_ref(q, k, v, tables, lengths)
+    blocked = paged_decode_attention_blocked_ref(q, k, v, tables, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(dense, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(blocked, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_paged_matches_contiguous_kernel(rng):
+    """Gathering the pages into a slab and running the contiguous kernel
+    gives the same answer as the paged kernel on the pool directly."""
+    b, kh, g, n_p, ps, d = 2, 2, 4, 4, 16, 32
+    q, k, v, tables, lengths = _paged_case(
+        rng, b, kh, g, n_p, ps, d, jnp.float32, [23, 64]
+    )
+    out = paged_decode_attention(q, k, v, tables, lengths, interpret=True)
+    slab_k = gather_pages_ref(k, tables)
+    slab_v = gather_pages_ref(v, tables)
+    contig = decode_attention(q, slab_k, slab_v, lengths, block_s=ps, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(contig), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_paged_decode_shared_pages_alias(rng):
+    """Prefix sharing: two sequences whose tables alias the same pool
+    pages for a shared prefix read identical KV there — sequence 1 must
+    score exactly like a private copy of those pages would."""
+    b, kh, g, ps, d = 2, 2, 4, 16, 32
+    pool = 8
+    k = jnp.asarray(rng.randn(pool, kh, ps, d), jnp.float32)
+    v = jnp.asarray(rng.randn(pool, kh, ps, d), jnp.float32)
+    q = jnp.asarray(rng.randn(b, kh, g, d), jnp.float32)
+    # pages 0-1 shared, last page private (2 vs 3); padding entries are 0
+    tables = jnp.asarray([[0, 1, 2, 0], [0, 1, 3, 0]], jnp.int32)
+    lengths = jnp.asarray([40, 37], jnp.int32)
+    out = paged_decode_attention(q, k, v, tables, lengths, interpret=True)
+    # private-copy oracle: duplicate the shared pages into fresh slots
+    k2 = jnp.concatenate([k, k[:2]], axis=0)
+    v2 = jnp.concatenate([v, v[:2]], axis=0)
+    tables2 = jnp.asarray([[0, 1, 2, 0], [8, 9, 3, 0]], jnp.int32)
+    ref = paged_decode_attention_ref(q, k2, v2, tables2, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_decode_padding_pages_ignored(rng):
+    """Table entries past ceil(len/ps) point at pool page 0 (arbitrary
+    live data) — the length mask must zero them exactly: answers are
+    invariant to what the padding entries address."""
+    b, kh, g, ps, d = 1, 2, 4, 16, 32
+    k = jnp.asarray(rng.randn(6, kh, ps, d), jnp.float32)
+    v = jnp.asarray(rng.randn(6, kh, ps, d), jnp.float32)
+    q = jnp.asarray(rng.randn(b, kh, g, d), jnp.float32)
+    lengths = jnp.asarray([20], jnp.int32)  # 2 live pages of 4
+    a = paged_decode_attention(
+        q, k, v, jnp.asarray([[2, 3, 0, 0]], jnp.int32), lengths, interpret=True
+    )
+    bb = paged_decode_attention(
+        q, k, v, jnp.asarray([[2, 3, 5, 1]], jnp.int32), lengths, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=0, rtol=0)
 
 
 @pytest.mark.parametrize(

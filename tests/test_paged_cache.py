@@ -1,0 +1,253 @@
+"""Paged KV cache manager (ISSUE 8): hash-chain prefix matching,
+refcounted sharing, LRU eviction of cached pages, copy-on-write
+divergence, and no-leak invariants under churn."""
+
+import random
+
+import pytest
+
+from repro.serve.paged_cache import PagedCacheManager, page_hash_chain
+
+
+def _mgr(n_pages=32, page_size=4, **kw):
+    return PagedCacheManager(n_pages, page_size, **kw)
+
+
+# -- hash chain ------------------------------------------------------------------
+
+
+def test_hash_chain_one_digest_per_full_page():
+    assert page_hash_chain([1, 2, 3], 4) == []
+    assert len(page_hash_chain(list(range(8)), 4)) == 2
+    assert len(page_hash_chain(list(range(9)), 4)) == 2
+
+
+def test_hash_chain_commits_to_whole_prefix():
+    a = page_hash_chain([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = page_hash_chain([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert a == b
+    # same second page, different first page -> different second digest
+    c = page_hash_chain([9, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert a[0] != c[0] and a[1] != c[1]
+    # token-boundary ambiguity does not collide: [12,3] vs [1,23]
+    assert page_hash_chain([12, 3], 2) != page_hash_chain([1, 23], 2)
+
+
+# -- acquire / release -----------------------------------------------------------
+
+
+def test_acquire_allocates_ceil_pages_and_release_frees():
+    m = _mgr()
+    match = m.acquire("a", list(range(10)))  # 10 tokens / 4 -> 3 pages
+    assert len(match.page_ids) == 3
+    assert match.n_shared_pages == 0
+    assert m.pages_active == 3
+    m.release("a")
+    m.check_no_leaks()
+
+
+def test_prefix_reuse_after_release_hits_cached_pages():
+    m = _mgr()
+    toks = list(range(10))
+    m.acquire("a", toks)
+    m.register("a", toks)  # indexes the 2 full pages
+    m.release("a")
+    assert m.pages_cached == 2 and m.pages_free == 30
+    match = m.acquire("b", toks)
+    assert match.n_shared_pages == 2
+    assert match.n_shared_tokens == 8
+    assert m.stats.prefix_tokens_saved == 8
+    m.release("b")
+    m.check_no_leaks()
+
+
+def test_final_token_page_never_shared():
+    """A prompt that is an exact multiple of the page size still prefills
+    its last page: sharing stops at (len-1)//ps pages."""
+    m = _mgr()
+    toks = list(range(8))  # exactly 2 pages
+    m.acquire("a", toks)
+    m.register("a", toks)
+    m.release("a")
+    match = m.acquire("b", toks)
+    assert match.n_shared_pages == 1  # not 2: last page stays private
+    assert len(match.page_ids) == 2
+    m.release("b")
+
+
+def test_divergent_prefix_shares_only_matching_pages():
+    m = _mgr()
+    base = list(range(12))
+    m.acquire("a", base)
+    m.register("a", base)
+    fork = base[:8] + [99, 98, 97, 96]  # diverges at page 2
+    match = m.acquire("b", fork)
+    assert match.n_shared_pages == 2
+    shared_ids = match.page_ids[:2]
+    assert [m.refcount(p) for p in shared_ids] == [2, 2]
+    m.release("a")
+    assert [m.refcount(p) for p in shared_ids] == [1, 1]
+    m.release("b")
+    m.check_no_leaks()
+
+
+def test_concurrent_sharers_refcount():
+    m = _mgr()
+    toks = list(range(16))
+    m.acquire("a", toks)
+    m.register("a", toks)
+    owners = [f"o{i}" for i in range(5)]
+    for o in owners:
+        assert m.acquire(o, toks).n_shared_pages == 3
+    first = m.table("a")[0]
+    assert m.refcount(first) == 6
+    for o in owners + ["a"]:
+        m.release(o)
+    m.check_no_leaks()
+
+
+def test_duplicate_registration_keeps_first_mapping():
+    """Two identical prompts prefilled concurrently (neither registered
+    when the other acquired): second register is a no-op and both release
+    cleanly."""
+    m = _mgr()
+    toks = list(range(10))
+    m.acquire("a", toks)
+    m.acquire("b", toks)  # nothing indexed yet -> no sharing
+    assert m.pages_active == 6
+    assert m.register("a", toks) == 2
+    assert m.register("b", toks) == 0  # first registration wins
+    m.release("a")
+    m.release("b")
+    # a's indexed pages parked in the prefix cache, b's freed outright
+    assert m.pages_cached == 2
+    m.check_no_leaks()
+
+
+def test_acquire_rejects_double_owner_and_empty_prompt():
+    m = _mgr()
+    m.acquire("a", [1, 2, 3])
+    with pytest.raises(ValueError):
+        m.acquire("a", [4, 5])
+    with pytest.raises(ValueError):
+        m.acquire("b", [])
+
+
+# -- eviction / exhaustion -------------------------------------------------------
+
+
+def test_lru_eviction_of_cached_pages_under_pressure():
+    m = _mgr(n_pages=8, page_size=4)
+    for i in range(3):  # park 2 indexed pages per round, LRU order
+        toks = [i * 100 + t for t in range(9)]
+        m.acquire(f"o{i}", toks)
+        m.register(f"o{i}", toks)
+        m.release(f"o{i}")
+    assert m.pages_cached + m.pages_free == 8
+    # a 8-page prompt must evict cached pages to fit
+    m.acquire("big", list(range(1000, 1029)))
+    assert m.stats.evictions > 0
+    # oldest chain (o0) evicted first: re-acquiring it finds nothing
+    m.release("big")
+    assert m.acquire("probe", [0, 1, 2, 3, 4]).n_shared_pages == 0
+    m.release("probe")
+    m.check_no_leaks()
+
+
+def test_pool_exhaustion_by_active_pages_raises():
+    m = _mgr(n_pages=4, page_size=4)
+    m.acquire("a", list(range(16)))  # all 4 pages active
+    with pytest.raises(RuntimeError, match="exhausted"):
+        m.acquire("b", [1, 2, 3])
+    m.release("a")
+    m.check_no_leaks()
+
+
+def test_matched_pages_survive_allocation_pressure_in_same_acquire():
+    """The fresh-page allocation of an acquire must not LRU-evict the
+    pages its own prefix walk just matched."""
+    m = _mgr(n_pages=4, page_size=2)
+    toks = [1, 2, 3, 4, 5]
+    m.acquire("a", toks)
+    m.register("a", toks)
+    m.release("a")  # 2 cached + ... pool: 3 pages used, 1 free
+    match = m.acquire("b", toks)  # needs 1 fresh page beyond the 2 shared
+    assert match.n_shared_pages == 2
+    assert len(set(match.page_ids)) == 3
+    m.release("b")
+    m.check_no_leaks()
+
+
+# -- ensure_position / copy-on-write --------------------------------------------
+
+
+def test_ensure_position_extends_table():
+    m = _mgr(page_size=4)
+    m.acquire("a", [1, 2, 3])
+    pw = m.ensure_position("a", 3)  # same page, private -> in place
+    assert not pw.allocated and pw.cow_src is None and pw.offset == 3
+    pw = m.ensure_position("a", 4)  # next page
+    assert pw.allocated and pw.page_index == 1 and pw.offset == 0
+    with pytest.raises(ValueError):
+        m.ensure_position("a", 12)  # non-contiguous
+    m.release("a")
+    m.check_no_leaks()
+
+
+def test_ensure_position_cow_on_shared_page():
+    m = _mgr(page_size=4)
+    toks = list(range(12))
+    m.acquire("a", toks)
+    m.register("a", toks)
+    m.acquire("b", toks)  # shares pages 0-1
+    shared = m.table("b")[0]
+    pw = m.ensure_position("b", 1)  # write inside a shared page
+    assert pw.cow_src == shared
+    assert pw.page_id != shared
+    assert m.table("b")[0] == pw.page_id
+    assert m.refcount(shared) == 1  # only "a" holds it now
+    assert m.stats.cow_copies == 1
+    m.release("a")
+    m.release("b")
+    m.check_no_leaks()
+
+
+def test_ensure_position_cow_on_indexed_private_page():
+    """Even with refcount 1, an *indexed* page is copy-on-write: writing
+    in place would leave a stale hash in the prefix index."""
+    m = _mgr(page_size=4)
+    toks = list(range(8))
+    m.acquire("a", toks)
+    m.register("a", toks)
+    indexed = m.table("a")[0]
+    pw = m.ensure_position("a", 2)
+    assert pw.cow_src == indexed
+    # the old page parks in the prefix cache, still matchable
+    assert m.pages_cached == 1
+    m.release("a")
+    m.check_no_leaks()
+
+
+# -- churn stress ---------------------------------------------------------------
+
+
+def test_no_leaks_under_interleaved_shared_prefix_churn():
+    rnd = random.Random(0)
+    m = _mgr(n_pages=64, page_size=4)
+    headers = [[h * 1000 + t for t in range(12)] for h in range(3)]
+    live: dict[int, list[int]] = {}
+    for i in range(200):
+        if live and (rnd.random() < 0.45 or len(live) >= 10):
+            owner = rnd.choice(list(live))
+            m.release(owner)
+            del live[owner]
+        else:
+            toks = rnd.choice(headers) + [i, i + 1]
+            m.acquire(i, toks)
+            m.register(i, toks)
+            live[i] = toks
+        assert m.pages_free + m.pages_cached + m.pages_active == 64
+    for owner in list(live):
+        m.release(owner)
+    m.check_no_leaks()
+    assert m.stats.prefix_tokens_saved > 0

@@ -1,0 +1,198 @@
+"""Paged KV cache through the serving stack (ISSUE 8): suite-level
+byte-parity across page sizes and replica counts, prefix-sharing stats
+surfaced in reports, and the simulated engine's paged accounting."""
+
+import pytest
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    InferenceRequest,
+    MetricConfig,
+    SimulatedSlotEngine,
+    StatisticsConfig,
+)
+
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+SLOT_MODEL_B = EngineModelConfig(provider="slotsim", model_name="slot-sim-b")
+SLOT_KW = {"n_slots": 4, "step_ms": 0.0}
+
+HEADER = " ".join(f"shot{i} demo answer span" for i in range(10))  # 40 words
+
+
+def _shared_prefix_rows(n):
+    """Rows whose prompts share a 40-word few-shot header: with 16-token
+    pages the first two pages of every prompt are chain-identical."""
+    return [
+        {"question": f"{HEADER} question {i} please", "reference": f"ref {i}"}
+        for i in range(n)
+    ]
+
+
+def _task(task_id="paged", model=SLOT_MODEL, **inf_kw):
+    return EvalTask(
+        task_id=task_id,
+        model=model,
+        inference=InferenceConfig(batch_size=8, n_workers=4, **inf_kw),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    )
+
+
+def _mv_tuple(mv):
+    return (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored)
+
+
+def _cmp_tuple(c):
+    return (c.diff, c.diff_ci, c.test.p_value, c.effect.value)
+
+
+# -- simulated engine, driven directly -------------------------------------------
+
+
+def test_sim_engine_prefix_sharing_counters():
+    eng = SimulatedSlotEngine(SLOT_MODEL, kv_page_size=16, **SLOT_KW)
+    eng.initialize()
+    rows = _shared_prefix_rows(6)
+    rids = [
+        eng.stream_submit(InferenceRequest(r["question"], 8, 0.0))
+        for r in rows
+    ]
+    done = {}
+    while len(done) < len(rids):
+        for rid, resp in eng.stream_pump():
+            done[rid] = resp
+    st = eng.stats
+    # every admission after the first reuses the 2-page (32-word) header
+    assert st.prefix_pages_hit == 2 * (len(rows) - 1)
+    assert st.prefix_tokens_saved == 32 * (len(rows) - 1)
+    assert st.as_dict()["prefix_tokens_saved"] == st.prefix_tokens_saved
+    eng._pages.check_no_leaks()
+
+
+def test_sim_engine_paged_responses_match_unpaged():
+    def run(**kw):
+        eng = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW, **kw)
+        eng.initialize()
+        reqs = {
+            eng.stream_submit(InferenceRequest(r["question"], 8, 0.0)): r[
+                "question"
+            ]
+            for r in _shared_prefix_rows(8)
+        }
+        out = {}
+        while eng.stream_pending():
+            for rid, resp in eng.stream_pump():
+                out[reqs[rid]] = resp.text
+        return out
+
+    assert run() == run(kv_page_size=16) == run(kv_page_size=64)
+
+
+def test_sim_engine_prefills_deferred_counts_once():
+    """Regression (ISSUE 8 S1), simulated-engine flavour: 4 one-step
+    requests behind a cap of 1 on 2 slots wait 3 rounds total — not the
+    3 + 2 + 1 = 6 the per-neighbour accounting used to report."""
+    eng = SimulatedSlotEngine(
+        SLOT_MODEL, n_slots=2, step_ms=0.0, max_prefills_per_step=1
+    )
+    eng.initialize()
+    rids = [
+        eng.stream_submit(InferenceRequest(f"pinned workload {i}", 1, 0.0))
+        for i in range(4)
+    ]
+    done = {}
+    while eng.stream_pending():
+        for rid, resp in eng.stream_pump():
+            done[rid] = resp
+    assert set(done) == set(rids)
+    assert eng.stats.admissions == 4
+    assert eng.stats.prefills_deferred == 3
+
+
+# -- suite-level byte parity -----------------------------------------------------
+
+
+def test_suite_byte_parity_across_page_sizes():
+    """The golden suite (lexical metrics + comparison matrix) is
+    byte-identical across unpaged and 16-/64-token paged caches — the
+    cache layout is stats-plane-invisible."""
+    rows = _shared_prefix_rows(40)
+    models = [SLOT_MODEL, SLOT_MODEL_B]
+
+    def run(page_size):
+        suite = (
+            EvalSuite(f"ps{page_size}")
+            .add_task(_task(kv_page_size=page_size), rows)
+            .sweep_models(models)
+        )
+        # fresh session per config: the registry keys engines on their
+        # constructor kwargs, a shared session would reuse nothing anyway
+        with EvalSession(engine_kwargs=SLOT_KW) as session:
+            res = session.run_suite(suite, parallel_jobs=2)
+            snaps = session.serving_stats()
+        return res, snaps
+
+    base, _ = run(0)
+    for ps in (16, 64):
+        got, snaps = run(ps)
+        for key, res in base.results.items():
+            assert got.results[key].responses == res.responses, key
+            for m, mv in res.metrics.items():
+                assert _mv_tuple(got.results[key].metrics[m]) == _mv_tuple(mv)
+        for task_id, metrics in base.comparisons.items():
+            for metric, cells in metrics.items():
+                for pair, cmp in cells.items():
+                    assert _cmp_tuple(
+                        got.comparisons[task_id][metric][pair]
+                    ) == _cmp_tuple(cmp), (task_id, metric, pair)
+        if ps == 16:
+            # 64-token pages can't share a ~44-word prompt; the 16-token
+            # run actually shared prefixes while agreeing byte-wise
+            assert sum(s["batcher"]["prefix_pages_hit"] for s in snaps) > 0
+
+
+@pytest.mark.parametrize("n_replicas", [2, 4])
+def test_replica_parity_with_paged_cache(n_replicas):
+    """Paging composes with the replica fabric: n replicas, each with its
+    own page pool, still produce byte-identical suite output."""
+    rows = _shared_prefix_rows(32)
+
+    def run(n):
+        suite = EvalSuite(f"rep{n}").add_task(
+            _task(n_replicas=n, kv_page_size=16), rows
+        )
+        with EvalSession(engine_kwargs=SLOT_KW) as session:
+            res = session.run_suite(suite, parallel_jobs=2)
+            snaps = session.serving_stats()
+        return res, snaps
+
+    base, _ = run(1)
+    got, snaps = run(n_replicas)
+    for key, res in base.results.items():
+        assert got.results[key].responses == res.responses, key
+        for m, mv in res.metrics.items():
+            assert _mv_tuple(got.results[key].metrics[m]) == _mv_tuple(mv)
+    (snap,) = snaps
+    assert snap["replicas"] == n_replicas
+    assert snap["batcher"]["prefix_pages_hit"] > 0
+
+
+def test_suite_markdown_reports_prefix_columns():
+    rows = _shared_prefix_rows(20)
+    suite = EvalSuite("pagedmd").add_task(
+        _task(task_id="qa", kv_page_size=16), rows
+    )
+    with EvalSession(engine_kwargs=SLOT_KW) as session:
+        sres = session.run_suite(suite)
+        (snap,) = session.serving_stats()
+    md = sres.to_markdown()
+    assert "| prefix hits |" in md and "| prefix tok saved |" in md
+    saved = snap["batcher"]["prefix_tokens_saved"]
+    assert saved > 0
+    assert f" {saved} " in md  # the counter lands in the table row

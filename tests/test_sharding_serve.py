@@ -153,6 +153,82 @@ def test_scheduler_greedy_deterministic(rng):
     assert d1[0].tokens == d2[0].tokens
 
 
+def test_scheduler_paged_parity_and_prefix_sharing(rng):
+    """Paged KV cache (16- and 64-token pages, with and without prefix
+    sharing) produces byte-identical token streams to the contiguous
+    cache; sharing is observable in the stats and leaks nothing."""
+    prefix = list(range(10, 28))  # 18 tokens -> one full 16-token page
+    reqs = []
+    for i in range(6):
+        toks = prefix + [100 + i] if i % 2 == 0 else [50 + i, 51 + i, 52 + i]
+        reqs.append(Request(i, prompt_tokens=toks, max_new_tokens=6))
+
+    def run(**kw):
+        sched, _ = _scheduler(**kw)
+        for r in reqs:
+            sched.submit(r)
+        done = {c.request_id: c for c in sched.run_to_completion()}
+        return sched, [done[i].tokens for i in range(6)]
+
+    s0, r0 = run()
+    s16, r16 = run(page_size=16)
+    s64, r64 = run(page_size=64)
+    s16n, r16n = run(page_size=16, prefix_cache=False)
+    assert r16 == r0
+    assert r64 == r0
+    assert r16n == r0
+    # requests 2 and 4 each reuse request 0's resident prefix page
+    assert s16.stats.prefix_pages_hit == 2
+    assert s16.stats.prefix_tokens_saved == 32
+    assert s16.stats.cow_copies == 0
+    # 64-token pages can't share an 18-token prefix; sharing disabled -> 0
+    assert s64.stats.prefix_pages_hit == 0
+    assert s16n.stats.prefix_pages_hit == 0
+    for s in (s16, s64, s16n):
+        s.manager.check_no_leaks()
+        assert s.manager.pages_active == 0
+
+
+def test_scheduler_prefills_deferred_counts_once(rng):
+    """Regression (ISSUE 8 S1): a capped refill defers each waiting
+    request at most once per step — not once per still-free slot scan.
+    4 one-token requests, 2 slots, cap 1: the queue waits behind one
+    free slot for 3 rounds -> exactly 3 deferrals (the old accounting
+    added len(queue) per round: 3 + 2 + 1 = 6)."""
+    sched, _ = _scheduler(n_slots=2, max_prefills_per_step=1)
+    for i in range(4):
+        sched.submit(Request(i, prompt_tokens=[5, 6, 7], max_new_tokens=1))
+    done = sched.run_to_completion()
+    assert sorted(c.request_id for c in done) == list(range(4))
+    assert sched.stats.admissions == 4
+    assert sched.stats.prefills_deferred == 3
+
+
+def test_scheduler_slot_release_same_step(rng):
+    """Regression (ISSUE 8 S2): a slot whose sample just finished is
+    reaped *before* refill, so a back-to-back queue keeps one slot at
+    100% occupancy with no idle step between requests."""
+    sched, _ = _scheduler(n_slots=1)
+    for i in range(4):
+        sched.submit(Request(i, prompt_tokens=[5, 6, 7], max_new_tokens=3))
+    done = sched.run_to_completion()
+    assert len(done) == 4
+    assert sched.stats.occupancy == 1.0
+
+
+def test_scheduler_truncated_completion_at_max_steps(rng):
+    """Regression (ISSUE 8 S3): exhausting max_steps emits a 'truncated'
+    completion for the in-flight request instead of dropping it."""
+    sched, _ = _scheduler(n_slots=1)
+    sched.submit(Request(0, prompt_tokens=[5, 6, 7], max_new_tokens=50))
+    done = sched.run_to_completion(max_steps=3)
+    assert len(done) == 1
+    assert done[0].finished_reason == "truncated"
+    assert 1 <= len(done[0].tokens) <= 4
+    assert sched.stats.completions == 1
+    assert sched.slots_busy == 0
+
+
 def test_scheduler_admission_control(rng):
     calls = []
     clockv = [0.0]
