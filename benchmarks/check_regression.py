@@ -11,8 +11,8 @@ regress:
   never compared — the committed baselines come from a different machine
   than the CI runner, and only ratios survive that move.
 * **contracts** — every boolean acceptance flag in the fresh payloads
-  (``ok``, ``*identical*``, ``bounded``, ``no_rerun``, ``*match*``):
-  any ``False`` fails regardless of baselines.
+  (``ok``, ``*identical*``, ``bounded``, ``no_rerun``, ``*match*``,
+  ``*zero_lost*``): any ``False`` fails regardless of baselines.
 * **coverage** — a baseline artifact whose fresh counterpart is missing
   fails (a suite silently dropping out of the smoke run is itself a
   regression); a fresh artifact without a baseline is only noted, so new
@@ -44,6 +44,7 @@ GAUGES: dict[str, list[str]] = {
         "replica_scaling.speedup_4",
         "shared_prefix.speedup",
         "shared_prefix.prefix_reuse",
+        "chaos.completed_fraction",
     ],
     "BENCH_concurrency.json": ["speedup_at_4_inflight"],
     "BENCH_suite.json": ["speedup"],
@@ -58,6 +59,7 @@ def _is_contract_key(key: str) -> bool:
         key == "ok"
         or "identical" in key
         or "match" in key
+        or "zero_lost" in key
         or key in ("bounded", "no_rerun", "resumable", "parity")
     )
 

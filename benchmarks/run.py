@@ -44,6 +44,7 @@ def main() -> None:
         coverage,
         kernels_bench,
         scaling,
+        serving_chaos,
         serving_throughput,
         streaming_scale,
         suite_overhead,
@@ -78,6 +79,11 @@ def main() -> None:
         ),
         "bootstrap_stats": lambda: bootstrap_stats.run(smoke=smoke),
         "serving_throughput": lambda: serving_throughput.run(
+            smoke=smoke, full=args.full
+        ),
+        # after serving_throughput: merges its chaos block into the same
+        # BENCH_serving.json artifact (read-modify-write)
+        "serving_chaos": lambda: serving_chaos.run(
             smoke=smoke, full=args.full
         ),
         "adaptive_eval": lambda: adaptive_eval.run(

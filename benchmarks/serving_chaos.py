@@ -1,0 +1,319 @@
+"""Serving chaos benchmark (ISSUE 9 tentpole).
+
+Drives the full evaluation pipeline — suite, session, replica services,
+continuous batchers, paged KV caches — under a deterministic fault
+schedule (:class:`~repro.ft.failure_sim.ServingFaultSchedule`) and proves
+the robustness contract end to end:
+
+* **chaos suite** — a two-model suite on 3-replica fleets with a small
+  page pool, hit by replica crashes, forced page-pressure preemptions
+  and engine hangs.  Acceptance: the faulted run completes with **zero
+  lost requests** and its metrics, CIs and pairwise significance cells
+  are **byte-identical** to the fault-free run — faults cost work
+  (restarts, recomputes), never statistics.
+* **deadline hedging** — a 2-replica fleet where one replica wedges
+  permanently (accepts work, never completes, never raises — invisible
+  to everything except deadlines).  Per-request deadlines re-issue the
+  stuck tickets to the healthy replica; the hedge leg wins every race
+  and the metrics still match the fault-free run byte for byte.
+
+Merges a ``chaos`` block into ``BENCH_serving.json`` (read-modify-write:
+``serving_throughput`` owns the rest of the artifact).
+
+  PYTHONPATH=src python -m benchmarks.serving_chaos [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    MetricConfig,
+    StatisticsConfig,
+)
+from repro.data import iter_qa_examples
+from repro.ft import ServingFault, ServingFaultSchedule
+
+from benchmarks import artifacts
+
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+SLOT_MODEL_B = EngineModelConfig(provider="slotsim", model_name="slot-sim-b")
+
+#: fast virtual-time slot engine; the chaos suite measures correctness
+#: under faults, not wall clock, so decode steps cost nothing
+SLOT_KW = {"n_slots": 4, "step_ms": 0.0}
+
+
+def _task(task_id: str, **inf_kw) -> EvalTask:
+    return EvalTask(
+        task_id=task_id,
+        model=SLOT_MODEL,
+        inference=InferenceConfig(
+            batch_size=16, n_workers=4, cache_dir="", **inf_kw
+        ),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    )
+
+
+def _metric_dict(res) -> dict:
+    return {
+        m: {"value": mv.value, "ci": list(mv.ci), "n": mv.n}
+        for m, mv in res.metrics.items()
+    }
+
+
+def _cmp_cell(c) -> dict:
+    return {
+        "diff": c.diff, "diff_ci": list(c.diff_ci),
+        "p_value": c.test.p_value, "effect": c.effect.value,
+    }
+
+
+def _suite_fingerprint(res) -> dict:
+    """Every number the statistics plane emits, JSON-comparable."""
+    return {
+        "metrics": {
+            f"{model}|{task_id}": _metric_dict(res.results[(model, task_id)])
+            for (model, task_id) in res.results
+        },
+        "comparisons": {
+            task_id: {
+                metric: {
+                    "|".join(pair): _cmp_cell(cell)
+                    for pair, cell in cells.items()
+                }
+                for metric, cells in metrics_.items()
+            }
+            for task_id, metrics_ in res.comparisons.items()
+        },
+    }
+
+
+def _chaos_suite(n_rows: int) -> dict:
+    """Crash + page pressure + hang across two 3-replica fleets: the
+    faulted run must finish every request and match the fault-free run
+    byte for byte."""
+
+    def build_plan() -> ServingFaultSchedule:
+        # replicas attach in engine-creation order: 0-2 = model A fleet,
+        # 3-5 = model B fleet (parallel_jobs=1 keeps the order fixed)
+        return ServingFaultSchedule(
+            [
+                ServingFault(0, 3, "page_pressure", duration=2),
+                ServingFault(0, 7, "slow_step", delay_s=0.0),
+                ServingFault(1, 4, "replica_crash"),
+                ServingFault(2, 2, "hang", duration=5),
+                ServingFault(3, 5, "replica_crash"),
+                ServingFault(4, 4, "page_pressure"),
+                ServingFault(5, 3, "hang", duration=4),
+            ]
+        )
+
+    inf_kw = dict(
+        n_replicas=3, routing="round_robin", kv_page_size=4,
+        health_probe_steps=50, max_replica_restarts=2,
+        restart_backoff_s=0.001,
+    )
+    suite = EvalSuite("chaos").add_task(
+        _task("served", **inf_kw), (lambda: iter_qa_examples(n_rows, seed=41))
+    ).sweep_models([SLOT_MODEL, SLOT_MODEL_B])
+
+    def run(plan: ServingFaultSchedule | None) -> dict:
+        kw = dict(SLOT_KW, page_pool=48)
+        if plan is not None:
+            kw["fault_plan"] = plan
+        t0 = time.perf_counter()
+        with EvalSession(engine_kwargs=kw) as session:
+            res = session.run_suite(suite, parallel_jobs=1)
+            serving = session.serving_stats()
+        return {
+            "wall_s": time.perf_counter() - t0,
+            "fingerprint": _suite_fingerprint(res),
+            "serving": serving,
+            "markdown": res.to_markdown(),
+        }
+
+    baseline = run(None)
+    plan = build_plan()
+    chaos = run(plan)
+
+    submitted = sum(s["submitted"] for s in chaos["serving"])
+    completed = sum(s["completed"] for s in chaos["serving"])
+    coalesced = sum(s["coalesced"] for s in chaos["serving"])
+    errors = sum(s["errors"] for s in chaos["serving"])
+    restarts = sum(s["restarts"] for s in chaos["serving"])
+    preemptions = sum(
+        s.get("batcher", {}).get("preemptions", 0) for s in chaos["serving"]
+    )
+    zero_lost = errors == 0 and completed + coalesced == submitted
+    identical = chaos["fingerprint"] == baseline["fingerprint"]
+    return {
+        "n_rows": n_rows,
+        "n_models": 2,
+        "n_replicas": 3,
+        "engine": {"model": SLOT_MODEL.model_name, **SLOT_KW, "page_pool": 48},
+        "faults_scheduled": len(plan.faults),
+        "faults_injected": len(plan.injected),
+        "injected": [list(f) for f in plan.injected],
+        "submitted": submitted,
+        "completed": completed,
+        "coalesced": coalesced,
+        "errors": errors,
+        "restarts": restarts,
+        "preemptions": preemptions,
+        "baseline_wall_s": baseline["wall_s"],
+        "chaos_wall_s": chaos["wall_s"],
+        "zero_lost_requests": zero_lost,
+        "byte_identical_under_faults": identical,
+        "markdown_reports_faults": (
+            "| preempt |" in chaos["markdown"]
+            and "| restarts |" in chaos["markdown"]
+        ),
+        "ok": (
+            zero_lost
+            and identical
+            and restarts >= 1      # the crashes fired and were recovered
+            and preemptions >= 1   # the pressure fired and was absorbed
+        ),
+    }
+
+
+def _deadline_hedge(n_rows: int, deadline_s: float = 0.05) -> dict:
+    """One replica wedges permanently at its first pump; per-request
+    deadlines hedge its tickets to the healthy replica."""
+    inf_kw = dict(
+        n_replicas=2, routing="round_robin",
+        request_deadline_s=deadline_s,
+    )
+    suite = EvalSuite("hedge").add_task(
+        _task("hedged", **inf_kw), (lambda: iter_qa_examples(n_rows, seed=43))
+    )
+
+    def run(plan: ServingFaultSchedule | None) -> dict:
+        kw = dict(SLOT_KW)
+        if plan is not None:
+            kw["fault_plan"] = plan
+        t0 = time.perf_counter()
+        with EvalSession(engine_kwargs=kw) as session:
+            res = session.run_suite(suite)
+            serving = session.serving_stats()
+        return {
+            "wall_s": time.perf_counter() - t0,
+            "fingerprint": _suite_fingerprint(res),
+            "snap": serving[0],
+        }
+
+    baseline = run(None)
+    wedged = run(
+        ServingFaultSchedule(
+            [ServingFault(0, 1, "hang", duration=1_000_000_000)]
+        )
+    )
+    snap = wedged["snap"]
+    zero_lost = (
+        snap["errors"] == 0
+        and snap["completed"] + snap["coalesced"] == snap["submitted"]
+    )
+    identical = wedged["fingerprint"] == baseline["fingerprint"]
+    return {
+        "n_rows": n_rows,
+        "deadline_s": deadline_s,
+        "engine": {"model": SLOT_MODEL.model_name, **SLOT_KW},
+        "submitted": snap["submitted"],
+        "deadline_expiries": snap["deadline_expiries"],
+        "hedges_issued": snap["hedges_issued"],
+        "hedges_won": snap["hedges_won"],
+        "errors": snap["errors"],
+        "baseline_wall_s": baseline["wall_s"],
+        "hedged_wall_s": wedged["wall_s"],
+        "zero_lost_requests": zero_lost,
+        "byte_identical_under_faults": identical,
+        "ok": zero_lost and identical and snap["hedges_won"] >= 1,
+    }
+
+
+def run(*, smoke: bool = False, full: bool = False) -> list[str]:
+    if smoke:
+        n_rows, hedge_rows = 40, 16
+    elif full:
+        n_rows, hedge_rows = 150, 48
+    else:
+        n_rows, hedge_rows = 80, 24
+
+    cs = _chaos_suite(n_rows)
+    de = _deadline_hedge(hedge_rows)
+
+    completed_fraction = (
+        (cs["completed"] + cs["coalesced"]) / cs["submitted"]
+        if cs["submitted"]
+        else 0.0
+    )
+    chaos_block = {
+        "suite": cs,
+        "deadline_hedge": de,
+        "completed_fraction": completed_fraction,
+        "zero_lost_requests": (
+            cs["zero_lost_requests"] and de["zero_lost_requests"]
+        ),
+        "byte_identical_under_faults": (
+            cs["byte_identical_under_faults"]
+            and de["byte_identical_under_faults"]
+        ),
+        "ok": cs["ok"] and de["ok"],
+    }
+
+    # read-modify-write: serving_throughput owns the rest of the artifact
+    path = artifacts.bench_path("BENCH_serving.json")
+    payload = json.loads(path.read_text()) if path.exists() else {}
+    payload["chaos"] = chaos_block
+    artifacts.write_bench("BENCH_serving.json", payload)
+
+    lines = [
+        (
+            f"serving_chaos,{cs['chaos_wall_s'] * 1e6 / max(1, cs['submitted']):.1f},"
+            f"faults={cs['faults_injected']} restarts={cs['restarts']} "
+            f"preempt={cs['preemptions']} lost=0 "
+            f"identical={cs['byte_identical_under_faults']}"
+        ),
+        (
+            f"serving_deadline_hedge,{de['hedged_wall_s'] * 1e6 / max(1, de['submitted']):.1f},"
+            f"expired={de['deadline_expiries']} "
+            f"hedges={de['hedges_issued']}/{de['hedges_won']} "
+            f"identical={de['byte_identical_under_faults']}"
+        ),
+        (
+            f"serving_chaos_accept,0,zero_lost={chaos_block['zero_lost_requests']} "
+            f"identical={chaos_block['byte_identical_under_faults']} "
+            f"ok={chaos_block['ok']}"
+        ),
+    ]
+    if not chaos_block["ok"]:
+        raise RuntimeError(
+            f"serving chaos acceptance checks failed: {chaos_block}"
+        )
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    for line in run(smoke=args.smoke, full=args.full):
+        print(line)
+    print(f"wrote {artifacts.bench_path('BENCH_serving.json')}")
+
+
+if __name__ == "__main__":
+    main()

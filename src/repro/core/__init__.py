@@ -29,6 +29,7 @@ from repro.core.engines import (
     InferenceRequest,
     InferenceResponse,
     LocalJaxEngine,
+    RecoverableEngineError,
     SimulatedAPIEngine,
     SimulatedSlotEngine,
     api_cost,
@@ -38,7 +39,12 @@ from repro.core.engines import (
 )
 from repro.core.ratelimit import AdaptiveLimiter, TokenBucket
 from repro.core.runner import EvalRunner
-from repro.core.service import InferenceService, ServiceStats, ServiceTicket
+from repro.core.service import (
+    InferenceService,
+    ReplicaHungError,
+    ServiceStats,
+    ServiceTicket,
+)
 from repro.core.session import EvalSession, SessionAccounting
 from repro.core.stages import (
     AggregateStage,
@@ -78,6 +84,7 @@ __all__ = [
     "InferenceRequest", "InferenceResponse", "InferenceService",
     "LocalJaxEngine", "LockStepInferStage", "ManifestMismatch", "MetricConfig",
     "MetricValue", "Middleware", "PrepareStage", "ProgressMiddleware",
+    "RecoverableEngineError", "ReplicaHungError",
     "ResponseCache", "RunTracker", "ScoreStage", "SessionAccounting",
     "ServiceStats", "ServiceTicket", "SimulatedAPIEngine",
     "SimulatedSlotEngine", "Stage", "StaticResponsesStage", "StatisticsConfig",

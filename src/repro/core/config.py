@@ -82,6 +82,23 @@ class InferenceConfig:
     #: with a paged cache, share resident prompt-prefix pages across
     #: requests (False = paged allocation only, no cross-request reuse)
     prefix_cache: bool = True
+    # fault tolerance for the serving fabric (DESIGN.md §9):
+    #: per-request deadline on the streaming path (0 = none).  On expiry
+    #: the service hedges: re-issues the ticket to another alive replica;
+    #: first completion wins, the loser's slot is cancelled.  Responses
+    #: are a pure function of the request, so hedging never changes a
+    #: metric byte.
+    request_deadline_s: float = 0.0
+    #: bounded-backoff restarts per broken replica before its in-flight
+    #: work fails over to the fleet-dead path (0 = legacy: first crash
+    #: kills the replica for good)
+    max_replica_restarts: int = 2
+    #: base delay for the exponential replica-restart backoff
+    restart_backoff_s: float = 0.05
+    #: health probe: a replica with in-flight work but no engine progress
+    #: (no decode steps, no completions) for this many consecutive pumps
+    #: is marked suspect and drain-and-restarted (0 = disabled)
+    health_probe_steps: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

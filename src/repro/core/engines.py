@@ -48,6 +48,17 @@ class InferenceResponse:
     error: str | None = None
 
 
+class RecoverableEngineError(RuntimeError):
+    """Transient engine failure worth retrying — the exception-typed
+    counterpart of the 429/5xx error *strings* in
+    :data:`RECOVERABLE_ERROR_CODES`.
+
+    The service's retry paths back off and re-attempt on this type only;
+    any other exception (a programming error such as ``ValueError`` /
+    ``TypeError``) fails the ticket immediately with the original
+    traceback instead of burning the backoff budget (DESIGN.md §9)."""
+
+
 # -- price book (paper Table 6, USD per 1M tokens) -----------------------------
 
 PRICE_BOOK: dict[tuple[str, str], tuple[float, float]] = {
@@ -114,6 +125,11 @@ class BatcherStats:
     #: defensive copy-on-write page copies (structurally unreachable while
     #: sharing stops short of the final prompt token — see DESIGN.md §8)
     cow_copies: int = 0
+    #: decode slots evicted under page-pool pressure; the victim's request
+    #: requeues for a full deterministic recompute (DESIGN.md §9)
+    preemptions: int = 0
+    #: decoded tokens discarded by preemptions (the recompute cost)
+    preempted_tokens: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -139,6 +155,8 @@ class BatcherStats:
             "prefix_pages_hit": self.prefix_pages_hit,
             "prefix_tokens_saved": self.prefix_tokens_saved,
             "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
+            "preempted_tokens": self.preempted_tokens,
         }
 
 
@@ -166,6 +184,14 @@ class InferenceEngine(abc.ABC):
     @abc.abstractmethod
     def shutdown(self) -> None: ...
 
+    def reset(self) -> None:
+        """Engine reset hook for replica restart: drop all in-flight
+        serving state (queued and slotted requests, their KV pages) so a
+        fresh batcher loop starts clean.  Cumulative counters survive.
+        Default: full shutdown + initialize."""
+        self.shutdown()
+        self.initialize()
+
     # -- optional slot-streaming interface (``supports_streaming``) ----------
 
     def stream_submit(self, request: InferenceRequest) -> int:
@@ -179,6 +205,13 @@ class InferenceEngine(abc.ABC):
 
     def stream_pending(self) -> bool:
         """True while queued or in-flight streaming work remains."""
+        return False
+
+    def stream_cancel(self, rid: int) -> bool:
+        """Abandon a streaming request without producing a completion:
+        dequeue it, or free its decode slot and release its KV pages.
+        Used by the service to cancel the losing leg of a hedged request.
+        Returns True if the request was found and cancelled."""
         return False
 
     def serving_stats(self) -> dict:
@@ -337,6 +370,7 @@ class SimulatedSlotEngine(InferenceEngine):
         prefix_cache: bool = True,
         prefill_ms_per_token: float = 0.0,
         page_pool: int = 4096,
+        fault_plan: Any = None,
     ):
         self.model = model
         self.n_slots = n_slots
@@ -371,6 +405,14 @@ class SimulatedSlotEngine(InferenceEngine):
         self._queue: list[tuple[int, InferenceRequest, int]] = []
         self._slots: list[dict | None] = [None] * n_slots
         self._seen_len_buckets: set[int] = set()
+        #: deterministic chaos: a ServingFaultSchedule polled every pump
+        #: (replica index claimed in engine creation order)
+        self._fault_plan = fault_plan
+        self.fault_replica = fault_plan.attach() if fault_plan is not None else 0
+        #: monotonic pump counter — survives reset() so later faults on
+        #: the same replica still fire at their scheduled step
+        self._pumps = 0
+        self._hang_until = 0
 
     def initialize(self) -> None:
         self.initialized = True
@@ -462,8 +504,72 @@ class SimulatedSlotEngine(InferenceEngine):
         with self._lock:
             return sum(1 for s in self._slots if s is not None) + len(self._queue)
 
+    def _preempt_one_locked(self) -> bool:
+        """Evict the victim slot — fewest decoded tokens, index tie-break —
+        releasing its pages and requeueing its request at the queue front
+        for a full deterministic recompute (byte-identical output)."""
+        victims = [
+            (s["out"] - s["left"], i)
+            for i, s in enumerate(self._slots)
+            if s is not None
+        ]
+        if not victims:
+            return False
+        decoded, i = min(victims)
+        s = self._slots[i]
+        if self._pages is not None:
+            self._pages.release(s["rid"])
+        self._queue.insert(0, (s["rid"], s["req"], s["out"]))
+        self._slots[i] = None
+        self.stats.preemptions += 1
+        self.stats.preempted_tokens += decoded
+        return True
+
+    def _page_gate_locked(self) -> bool:
+        """Low-watermark admission gate: admit the queue head only if the
+        pool covers its worst-case page need while keeping one page per
+        busy slot in reserve.  A prompt larger than the whole pool is
+        admitted anyway so ``acquire`` raises a clear error instead of
+        the request deferring forever."""
+        _, req, _ = self._queue[0]
+        words = req.prompt.split() or ["<bos>"]
+        need = -(-len(words) // self.kv_page_size)
+        if need >= self._pages.n_pages:
+            return True
+        busy = sum(1 for s in self._slots if s is not None)
+        return self._pages.pages_free + self._pages.pages_cached >= need + busy
+
+    def _poll_fault_locked(self) -> float:
+        """Apply the due scheduled fault, if any; returns extra latency ms
+        (``slow_step``).  ``replica_crash`` raises out of the pump."""
+        fault = self._fault_plan.poll(self.fault_replica, self._pumps)
+        if fault is None:
+            return 0.0
+        if fault.kind == "replica_crash":
+            from repro.ft.failure_sim import SimulatedCrash
+
+            raise SimulatedCrash(
+                f"injected replica_crash replica={self.fault_replica} "
+                f"pump={self._pumps}"
+            )
+        if fault.kind == "hang":
+            self._hang_until = self._pumps + fault.duration
+        elif fault.kind == "page_pressure":
+            for _ in range(max(1, fault.duration)):
+                if not self._preempt_one_locked():
+                    break
+        elif fault.kind == "slow_step":
+            return fault.delay_s * 1000.0
+        return 0.0
+
     def stream_pump(self) -> list[tuple[int, InferenceResponse]]:
+        slow_ms = 0.0
         with self._lock:
+            self._pumps += 1
+            if self._fault_plan is not None:
+                slow_ms = self._poll_fault_locked()
+            if self._pumps <= self._hang_until:
+                return []  # hung: no admissions, no decode, no progress
             admitted = 0
             prefill_tokens = 0
             for i, s in enumerate(self._slots):
@@ -475,6 +581,16 @@ class SimulatedSlotEngine(InferenceEngine):
                         # each still-queued request a free slot could have
                         # taken this pump defers exactly once per pump it
                         # actually waits (not once per queue neighbour)
+                        free_left = sum(
+                            1 for s2 in self._slots[i:] if s2 is None
+                        )
+                        self.stats.prefills_deferred += min(
+                            len(self._queue), free_left
+                        )
+                        break
+                    if self._pages is not None and not self._page_gate_locked():
+                        # pool pressure: defer the prefill rather than
+                        # overcommit pages a decode will need (DESIGN.md §9)
                         free_left = sum(
                             1 for s2 in self._slots[i:] if s2 is None
                         )
@@ -505,7 +621,8 @@ class SimulatedSlotEngine(InferenceEngine):
             # sleep outside the lock: direct infer calls (judges, legacy
             # paths) interleave between steps instead of stalling behind one
             time.sleep(
-                (self.step_ms + self.prefill_ms_per_token * prefill_tokens)
+                (self.step_ms + self.prefill_ms_per_token * prefill_tokens
+                 + slow_ms)
                 / 1000.0
             )
         done: list[tuple[int, InferenceResponse]] = []
@@ -526,6 +643,32 @@ class SimulatedSlotEngine(InferenceEngine):
                     )
                     self._slots[i] = None
         return done
+
+    def stream_cancel(self, rid: int) -> bool:
+        with self._lock:
+            for i, (qid, _req, _out) in enumerate(self._queue):
+                if qid == rid:
+                    del self._queue[i]
+                    return True
+            for i, s in enumerate(self._slots):
+                if s is not None and s["rid"] == rid:
+                    if self._pages is not None:
+                        self._pages.release(rid)
+                    self._slots[i] = None
+                    return True
+        return False
+
+    def reset(self) -> None:
+        """Replica-restart hook: drop queued and slotted requests and
+        their pages; cumulative stats and the pump counter survive (the
+        fault schedule stays aligned to engine lifetime, not incarnation)."""
+        with self._lock:
+            if self._pages is not None:
+                self._pages.release_all()
+            self._queue.clear()
+            self._slots = [None] * self.n_slots
+            self._hang_until = 0
+            self.initialized = True
 
     def serving_stats(self) -> dict:
         with self._lock:
@@ -556,7 +699,8 @@ class LocalJaxEngine(InferenceEngine):
     def __init__(self, model: EngineModelConfig, *, n_slots: int = 8,
                  max_len: int = 256, devices: Any = None,
                  max_prefills_per_step: int = 0,
-                 kv_page_size: int = 0, prefix_cache: bool = True):
+                 kv_page_size: int = 0, prefix_cache: bool = True,
+                 page_pool: int = 0, fault_plan: Any = None):
         self.model_cfg = model
         self.n_slots = n_slots
         self.max_len = max_len
@@ -568,6 +712,11 @@ class LocalJaxEngine(InferenceEngine):
         #: 0 = contiguous per-slot KV cache; > 0 = paged pool (page size)
         self.kv_page_size = kv_page_size
         self.prefix_cache = prefix_cache
+        #: 0 = auto-sized pool (worst case, never exhausts); > 0 pins the
+        #: pool small enough that decode pressure triggers preemption
+        self.page_pool = page_pool
+        self._fault_plan = fault_plan
+        self.fault_replica = fault_plan.attach() if fault_plan is not None else 0
         self.initialized = False
         self._scheduler = None
         self._tokenizer = None
@@ -614,7 +763,12 @@ class LocalJaxEngine(InferenceEngine):
             max_prefills_per_step=self.max_prefills_per_step,
             device=device, rules=rules,
             page_size=self.kv_page_size, prefix_cache=self.prefix_cache,
+            page_pool=self.page_pool,
         )
+        if self._fault_plan is not None:
+            self._scheduler.fault_hook = self._fault_plan.as_hook(
+                self.fault_replica
+            )
         self.initialized = True
 
     def shutdown(self) -> None:
@@ -714,6 +868,20 @@ class LocalJaxEngine(InferenceEngine):
                 return 0
             return sched.slots_busy + len(sched.queue)
 
+    def stream_cancel(self, rid: int) -> bool:
+        with self._lock:
+            sched = self._scheduler
+            return bool(sched) and sched.cancel(rid)
+
+    def reset(self) -> None:
+        """Replica-restart hook: rebuild the scheduler (fresh slots, fresh
+        page pool).  Cheap relative to a lost replica; the fault hook is
+        re-attached by ``initialize`` so scheduled faults keep firing."""
+        with self._lock:
+            self._scheduler = None
+            self.initialized = False
+            self.initialize()
+
     def serving_stats(self) -> dict:
         with self._lock:
             if self._scheduler is None:
@@ -807,10 +975,20 @@ def retry_with_backoff(
     fn, *, max_retries: int = 3, base_delay: float = 1.0,
     sleep=time.sleep,
 ):
-    """Exponential backoff for recoverable errors (429/5xx; paper §A.4)."""
+    """Exponential backoff for recoverable errors (paper §A.4): the
+    429/5xx error strings and :class:`RecoverableEngineError`.  Any other
+    exception — a programming error like ``ValueError`` — propagates
+    immediately with its original traceback instead of burning the
+    backoff budget."""
     last: InferenceResponse | None = None
     for attempt in range(max_retries + 1):
-        resp = fn()
+        try:
+            resp = fn()
+        except RecoverableEngineError:
+            if attempt >= max_retries:
+                raise
+            sleep(base_delay * math.pow(2.0, attempt))
+            continue
         if resp.error is None:
             return resp
         if not is_recoverable(resp.error):

@@ -62,6 +62,7 @@ from repro.core.engines import (
     InferenceEngine,
     InferenceRequest,
     InferenceResponse,
+    RecoverableEngineError,
     is_recoverable,
     retry_with_backoff,
 )
@@ -70,10 +71,17 @@ from repro.core.ratelimit import AdaptiveLimiter
 _SENTINEL = object()
 
 
+class ReplicaHungError(RuntimeError):
+    """Raised by the health probe inside a batcher loop: the replica has
+    in-flight work but its engine made no progress (no decode steps, no
+    completions) for ``health_probe_steps`` consecutive pumps.  Takes the
+    same drain-and-restart path as a crash."""
+
+
 class _Flight:
     """One engine call and its waiters (single-flight unit)."""
 
-    __slots__ = ("key", "event", "response", "exc", "attempts")
+    __slots__ = ("key", "event", "response", "exc", "attempts", "resolved")
 
     def __init__(self, key: str):
         self.key = key
@@ -81,6 +89,11 @@ class _Flight:
         self.response: InferenceResponse | None = None
         self.exc: BaseException | None = None
         self.attempts = 0
+        #: flipped under the service lock by the FIRST resolution — a
+        #: hedged flight can race two completions; the loser only touches
+        #: replica bookkeeping (``event`` alone would race: it is set
+        #: outside the lock)
+        self.resolved = False
 
 
 class ServiceTicket:
@@ -122,6 +135,47 @@ class _Submission:
     max_retries: int
     retry_delay: float
     replica: "_Replica | None" = None
+    #: absolute monotonic deadline (None = no deadline); set at submit
+    #: time so queue wait counts against it
+    deadline_at: float | None = None
+    #: this submission IS the hedge leg of an expired flight
+    is_hedge: bool = False
+    #: a hedge has already been issued for this submission's flight
+    hedged: bool = False
+    #: deadline expiry already counted (once per primary submission)
+    expired: bool = False
+
+
+class _BatcherState:
+    """In-flight bookkeeping for ONE incarnation of a batcher loop.  On a
+    crash the supervisor collects :meth:`survivors` and hands them to the
+    next incarnation (restart) or fails them (retirement) — submissions a
+    replica dies holding are never silently lost."""
+
+    __slots__ = ("pending", "retry_at", "carry", "stall", "last_steps")
+
+    def __init__(self) -> None:
+        #: engine stream id -> submission, currently in decode
+        self.pending: dict[int, _Submission] = {}
+        #: (monotonic due time, submission) backoff-scheduled retries
+        self.retry_at: list[tuple[float, _Submission]] = []
+        #: submissions owned by the loop but in neither structure above
+        #: (crashed mid-dispatch, or carried in from a prior incarnation)
+        self.carry: list[_Submission] = []
+        #: consecutive pumps without engine progress (health probe)
+        self.stall = 0
+        self.last_steps = -1
+
+    def survivors(self) -> list[_Submission]:
+        subs = (
+            list(self.pending.values())
+            + [s for _, s in self.retry_at]
+            + list(self.carry)
+        )
+        self.pending.clear()
+        self.retry_at.clear()
+        self.carry.clear()
+        return subs
 
 
 @dataclasses.dataclass
@@ -132,6 +186,14 @@ class ServiceStats:
     completed: int = 0
     retries: int = 0
     errors: int = 0
+    #: broken replicas brought back by the bounded-backoff restart path
+    restarts: int = 0
+    #: primary submissions that outlived their deadline
+    deadline_expiries: int = 0
+    #: hedge legs actually re-issued to another alive replica
+    hedges_issued: int = 0
+    #: flights won by the hedge leg (the original was slower/stuck)
+    hedges_won: int = 0
 
     @property
     def dedup_rate(self) -> float:
@@ -146,6 +208,10 @@ class ServiceStats:
             "retries": self.retries,
             "errors": self.errors,
             "dedup_rate": round(self.dedup_rate, 4),
+            "restarts": self.restarts,
+            "deadline_expiries": self.deadline_expiries,
+            "hedges_issued": self.hedges_issued,
+            "hedges_won": self.hedges_won,
         }
 
 
@@ -161,7 +227,7 @@ class _Replica:
     __slots__ = (
         "index", "engine", "queue", "wake", "threads",
         "routed", "outstanding", "dispatched", "completed", "errors",
-        "broken",
+        "broken", "first_failure", "last_progress", "restarts", "cancelled",
     )
 
     def __init__(self, index: int, engine: InferenceEngine, depth: int):
@@ -176,6 +242,14 @@ class _Replica:
         self.completed = 0
         self.errors = 0
         self.broken: BaseException | None = None
+        #: cause of the replica's FIRST failure, kept across restarts for
+        #: the fleet-dead post-mortem message
+        self.first_failure: BaseException | None = None
+        #: engine step count at the last observed progress (-1 = never)
+        self.last_progress = -1
+        self.restarts = 0
+        #: hedge-loser legs cancelled on this replica
+        self.cancelled = 0
 
     def busy_slots(self) -> int:
         sched = getattr(self.engine, "slots_busy", None)
@@ -192,6 +266,9 @@ class _Replica:
             "completed": self.completed,
             "errors": self.errors,
             "broken": self.broken is not None,
+            "restarts": self.restarts,
+            "cancelled": self.cancelled,
+            "last_progress": self.last_progress,
         }
         batcher = self.engine.serving_stats()
         if batcher:
@@ -271,7 +348,7 @@ def aggregate_batcher_stats(parts: Sequence[dict]) -> dict:
             "n_slots", "steps", "admissions", "completions",
             "tokens_generated", "active_slot_steps", "prefill_recompiles",
             "prefills_deferred", "prefix_pages_hit", "prefix_tokens_saved",
-            "cow_copies",
+            "cow_copies", "preemptions", "preempted_tokens",
         )
     }
     cap = sum(p.get("steps", 0) * p.get("n_slots", 0) for p in parts)
@@ -310,6 +387,9 @@ class InferenceService:
         n_dispatchers: int = 4,
         sleep: Callable[[float], None] = time.sleep,
         name: str = "",
+        max_replica_restarts: int = 0,
+        restart_backoff_s: float = 0.05,
+        health_probe_steps: int = 0,
     ):
         fleet = list(engines) if engines else []
         if engine is not None and not fleet:
@@ -327,6 +407,13 @@ class InferenceService:
         self.coalesce = coalesce
         self.max_batch_wait_ms = max_batch_wait_ms
         self.name = name
+        #: bounded-backoff restarts per broken replica (0 = legacy: the
+        #: first crash quarantines the replica for good)
+        self.max_replica_restarts = max(0, max_replica_restarts)
+        self.restart_backoff_s = restart_backoff_s
+        #: pumps without engine progress before a loaded replica is
+        #: declared hung and drain-and-restarted (0 = probe disabled)
+        self.health_probe_steps = max(0, health_probe_steps)
         self.stats = ServiceStats()
         self.router = (
             routing if isinstance(routing, ReplicaRouter)
@@ -415,6 +502,7 @@ class InferenceService:
         est_tokens: float = 0.0,
         max_retries: int = 0,
         retry_delay: float = 1.0,
+        deadline_s: float = 0.0,
     ) -> ServiceTicket:
         """Enqueue a request; returns a :class:`ServiceTicket` immediately.
 
@@ -442,8 +530,8 @@ class InferenceService:
                 self.stats.submitted -= 1
                 raise RuntimeError(
                     f"InferenceService {self.name!r}: all "
-                    f"{self.n_replicas} replicas failed "
-                    f"(first failure: {self.replicas[0].broken!r})"
+                    f"{self.n_replicas} replicas failed — "
+                    + self._fleet_report()
                 )
             flight = _Flight(key)
             if do_coalesce:
@@ -458,6 +546,9 @@ class InferenceService:
             _Submission(
                 flight, request, limiter, est_tokens, max_retries,
                 retry_delay, replica=rep,
+                deadline_at=(
+                    time.monotonic() + deadline_s if deadline_s > 0 else None
+                ),
             )
         )
         rep.wake.set()
@@ -507,12 +598,24 @@ class InferenceService:
         if isinstance(sub_or_flight, _Submission):
             flight = sub_or_flight.flight
             rep = sub_or_flight.replica
+            is_hedge = sub_or_flight.is_hedge
         else:
-            flight, rep = sub_or_flight, None
+            flight, rep, is_hedge = sub_or_flight, None, False
         with self._lock:
+            if flight.resolved:
+                # hedge-race loser (or a drain hitting an already-resolved
+                # flight): the first resolution owns the response and the
+                # completion/error counters; only replica-load bookkeeping
+                # moves here
+                if rep is not None:
+                    rep.outstanding = max(0, rep.outstanding - 1)
+                return
+            flight.resolved = True
             self._inflight.pop(flight.key, None)
             self.stats.completed += 1
             self.stats.retries += max(0, flight.attempts - 1)
+            if is_hedge:
+                self.stats.hedges_won += 1
             failed = exc is not None or (
                 response is not None and response.error is not None
             )
@@ -572,6 +675,106 @@ class InferenceService:
                     break
 
     def _batcher_loop(self, rep: _Replica) -> None:
+        """Replica supervisor: run the batcher, and on a crash (or a
+        health-probe hang verdict) either restart the replica with bounded
+        backoff — carrying its in-flight submissions into the fresh
+        incarnation — or, budget exhausted, fail them and quarantine the
+        replica (DESIGN.md §9)."""
+        used = 0
+        carry: list[_Submission] = []
+        while True:
+            state = _BatcherState()
+            # survivors of the previous incarnation re-dispatch first
+            # (directly, not via the bounded queue — the only consumer of
+            # that queue is this very thread)
+            state.carry = carry
+            try:
+                self._batcher_run(rep, state)
+                return  # clean shutdown via stop sentinel
+            except BaseException as e:  # noqa: BLE001
+                carry = state.survivors()
+                used = self._handle_replica_failure(rep, e, carry, used)
+                if used < 0:
+                    return
+
+    def _handle_replica_failure(
+        self,
+        rep: _Replica,
+        exc: BaseException,
+        carry: list[_Submission],
+        used: int,
+    ) -> int:
+        """Recover or retire a crashed/hung replica.  Returns the restart
+        budget consumed so far, or -1 once the replica is dead (its
+        survivors failed, the fleet-dead flag set if it was the last).
+        A failed ``engine.reset()`` burns a restart and retries."""
+        while True:
+            with self._lock:
+                rep.broken = exc
+                if rep.first_failure is None:
+                    rep.first_failure = exc
+                closed = self._closed
+            if closed or used >= self.max_replica_restarts:
+                with self._lock:
+                    if all(r.broken is not None for r in self.replicas):
+                        self._broken = exc
+                for sub in carry:
+                    self._resolve(sub, exc=exc)
+                self._drain_replica(rep, exc=exc)
+                return -1
+            self._sleep(self.restart_backoff_s * (2.0 ** used))
+            used += 1
+            try:
+                rep.engine.reset()
+            except BaseException as e2:  # noqa: BLE001
+                exc = e2
+                continue
+            with self._lock:
+                rep.broken = None
+                rep.restarts += 1
+                self.stats.restarts += 1
+            # the caller's fresh incarnation re-dispatches `carry` itself:
+            # same request ids are fine — the engine issues new stream
+            # ids, and responses are a pure function of the request, so
+            # the re-served output is byte-identical to the lost one
+            rep.wake.set()
+            return used
+
+    def _issue_hedge(self, sub: _Submission, origin: _Replica) -> bool:
+        """Re-issue an expired submission's flight to another alive
+        replica.  Single-flight semantics survive: both legs share one
+        flight, the first resolution wins (see ``_Flight.resolved``), the
+        loser is cancelled cooperatively by its owning loop.  Returns True
+        once the hedge leg is enqueued."""
+        with self._lock:
+            if self._closed or sub.flight.resolved:
+                return True  # nothing left to hedge
+            views = [
+                v for v in self._alive_views() if v.index != origin.index
+            ]
+            if not views:
+                return False  # retry on a later pump
+            rep2 = self.replicas[
+                self.router.route(sub.request.prompt, views)
+            ]
+            hedge = _Submission(
+                sub.flight, sub.request, sub.limiter, sub.est_tokens,
+                sub.max_retries, sub.retry_delay, replica=rep2,
+                is_hedge=True,
+            )
+            try:
+                # never block a batcher thread on backpressure; a full
+                # queue just defers the hedge to the next pump
+                rep2.queue.put_nowait(hedge)
+            except queue.Full:
+                return False
+            rep2.routed += 1
+            rep2.outstanding += 1
+            self.stats.hedges_issued += 1
+        rep2.wake.set()
+        return True
+
+    def _batcher_run(self, rep: _Replica, state: "_BatcherState") -> None:
         """Persistent continuous-batching loop for one slot-streaming
         replica: admit queued prompts into decode slots as slots free,
         step, deliver completions — one loop per replica, shared by every
@@ -585,17 +788,26 @@ class InferenceService:
         round-robins across admissions so list-mode buckets grant their
         full aggregate budget.
 
-        A dying loop fails only ITS replica: pending/queued tickets get
-        the exception, the replica is marked broken so the router stops
-        placing work on it, and the service stays up as long as one
-        replica survives."""
+        Error taxonomy (DESIGN.md §9): ``RecoverableEngineError`` retries
+        with backoff; ``ValueError``/``TypeError`` fail the one ticket with
+        its original traceback and the replica lives on; anything else is
+        a replica crash — in-flight submissions survive in ``state`` for
+        the supervisor's restart path.  Each iteration also enforces
+        request deadlines (expiry → hedge to another replica), cancels
+        hedge-loser legs, and runs the no-progress health probe."""
         engine = rep.engine
-        pending: dict[int, _Submission] = {}
-        retry_at: list[tuple[float, _Submission]] = []
+        pending = state.pending
+        retry_at = state.retry_at
         wait_s = max(0.0, self.max_batch_wait_ms) / 1000.0
         real_sleep = self._sleep is time.sleep
         stop = False
         admit_rr = 0
+
+        def _engine_steps() -> int:
+            try:
+                return int(engine.serving_stats().get("steps", 0) or 0)
+            except Exception:  # noqa: BLE001 — probe must not kill the loop
+                return 0
 
         def _dispatch(sub: _Submission) -> None:
             nonlocal admit_rr
@@ -605,94 +817,160 @@ class InferenceService:
                 sub.flight.attempts += 1
                 self._count_dispatch(rep)
                 pending[engine.stream_submit(sub.request)] = sub
-            except BaseException as e:
-                # the in-hand submission is in neither `pending` nor the
-                # queue — fail its flight here or its waiters hang; the
-                # outer handler then fails everything else
+            except RecoverableEngineError as e:
+                # transient refusal: burn a backoff slot, not the replica
+                if sub.flight.attempts <= sub.max_retries:
+                    delay = (
+                        sub.retry_delay * 2.0 ** (sub.flight.attempts - 1)
+                        if real_sleep else 0.0
+                    )
+                    retry_at.append((time.monotonic() + delay, sub))
+                else:
+                    self._resolve(sub, exc=e)
+            except (ValueError, TypeError) as e:
+                # programming error: fail THIS ticket with the original
+                # traceback; the replica stays healthy
                 self._resolve(sub, exc=e)
+            except BaseException:
+                # replica crash: the in-hand submission is in neither
+                # `pending` nor the queue — carry it into the restart path
+                state.carry.append(sub)
                 raise
 
-        try:
+        # survivors carried over from a crashed incarnation re-dispatch
+        # first; a repeat crash lands them back in state.carry/pending
+        while state.carry:
+            _dispatch(state.carry.pop(0))
+
+        while True:
+            was_idle = not pending
+            admitted = 0
+            if retry_at:
+                # pop one at a time: if a dispatch raises, the entries
+                # not yet reached are still in retry_at and the supervisor
+                # carries them across the restart
+                now = time.monotonic()
+                i = 0
+                while i < len(retry_at):
+                    if retry_at[i][0] <= now:
+                        _, sub_r = retry_at.pop(i)
+                        _dispatch(sub_r)
+                        admitted += 1
+                    else:
+                        i += 1
             while True:
-                was_idle = not pending
-                admitted = 0
-                if retry_at:
-                    # pop one at a time: if a dispatch raises, the entries
-                    # not yet reached are still in retry_at and the crash
-                    # handler below can fail their flights
-                    now = time.monotonic()
-                    i = 0
-                    while i < len(retry_at):
-                        if retry_at[i][0] <= now:
-                            _, sub_r = retry_at.pop(i)
-                            _dispatch(sub_r)
-                            admitted += 1
-                        else:
-                            i += 1
-                while True:
-                    try:
-                        item = rep.queue.get_nowait()
-                    except queue.Empty:
-                        break
-                    if item is _SENTINEL:
-                        stop = True
-                        break
-                    _dispatch(item)
-                    admitted += 1
-                if stop and not pending and not retry_at:
-                    return
-                if not pending:
-                    rep.wake.clear()
-                    rep.wake.wait(timeout=0.005 if retry_at else 0.05)
-                    continue
-                if was_idle and admitted and wait_s and not stop:
-                    # batch-formation window: a cold batcher waits briefly
-                    # for co-submitted prompts before spinning up decode
-                    # (injected sleep — a no-op under virtual clocks)
-                    self._sleep(wait_s)
-                    continue
-                for rid, resp in engine.stream_pump():
-                    sub2 = pending.pop(rid, None)
-                    if sub2 is None:
+                try:
+                    item = rep.queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is _SENTINEL:
+                    stop = True
+                    break
+                _dispatch(item)
+                admitted += 1
+            if pending:
+                now = time.monotonic()
+                for rid in list(pending):
+                    sub_p = pending[rid]
+                    if sub_p.flight.resolved:
+                        # another replica won this flight (hedge or drain):
+                        # cancel the local leg, free its slot and pages
+                        pending.pop(rid)
+                        try:
+                            engine.stream_cancel(rid)
+                        except Exception:  # noqa: BLE001
+                            pass
+                        with self._lock:
+                            rep.outstanding = max(0, rep.outstanding - 1)
+                            rep.cancelled += 1
                         continue
                     if (
-                        is_recoverable(resp.error)
-                        and sub2.flight.attempts <= sub2.max_retries
+                        sub_p.deadline_at is not None
+                        and now >= sub_p.deadline_at
                     ):
-                        delay = (
-                            sub2.retry_delay
-                            * 2.0 ** (sub2.flight.attempts - 1)
-                            if real_sleep
-                            else 0.0
-                        )
-                        retry_at.append((time.monotonic() + delay, sub2))
-                        continue
-                    self._resolve(sub2, resp)
-        except BaseException as e:  # noqa: BLE001
-            # replica-failure drain: a dying batcher loop fails every
-            # outstanding ticket IT owns instead of stranding its waiters,
-            # and quarantines the replica from further routing.  Only when
-            # the whole fleet is dead does the service itself go broken.
-            with self._lock:
-                rep.broken = e
-                if all(r.broken is not None for r in self.replicas):
-                    self._broken = e
-            for sub3 in pending.values():
-                self._resolve(sub3, exc=e)
-            for _, sub3 in retry_at:
-                self._resolve(sub3, exc=e)
-            self._drain_replica(rep, exc=e)
-            # handled: every waiter got the exception and the router now
-            # skips this replica — exit the loop thread cleanly
+                        if not sub_p.expired:
+                            sub_p.expired = True
+                            with self._lock:
+                                self.stats.deadline_expiries += 1
+                        if not sub_p.hedged:
+                            sub_p.hedged = self._issue_hedge(sub_p, rep)
+            if stop and not pending and not retry_at:
+                return
+            if not pending:
+                rep.wake.clear()
+                rep.wake.wait(timeout=0.005 if retry_at else 0.05)
+                continue
+            if was_idle and admitted and wait_s and not stop:
+                # batch-formation window: a cold batcher waits briefly
+                # for co-submitted prompts before spinning up decode
+                # (injected sleep — a no-op under virtual clocks)
+                self._sleep(wait_s)
+                continue
+            done = engine.stream_pump()
+            for rid, resp in done:
+                sub2 = pending.pop(rid, None)
+                if sub2 is None:
+                    continue
+                if (
+                    is_recoverable(resp.error)
+                    and sub2.flight.attempts <= sub2.max_retries
+                ):
+                    delay = (
+                        sub2.retry_delay
+                        * 2.0 ** (sub2.flight.attempts - 1)
+                        if real_sleep
+                        else 0.0
+                    )
+                    retry_at.append((time.monotonic() + delay, sub2))
+                    continue
+                self._resolve(sub2, resp)
+            # health probe: progress = completions delivered or engine
+            # decode steps advancing; a loaded replica that shows neither
+            # for health_probe_steps consecutive pumps is hung (a wedged
+            # engine raises no exception — only the probe catches it)
+            steps_now = _engine_steps()
+            progressed = bool(done) or steps_now != state.last_steps
+            state.last_steps = steps_now
+            if progressed:
+                state.stall = 0
+                with self._lock:
+                    rep.last_progress = steps_now
+            elif pending:
+                state.stall += 1
+                if (
+                    self.health_probe_steps
+                    and state.stall >= self.health_probe_steps
+                ):
+                    raise ReplicaHungError(
+                        f"replica {rep.index}: no engine progress in "
+                        f"{state.stall} pumps with {len(pending)} "
+                        f"request(s) in flight"
+                    )
 
     # -- lifecycle ---------------------------------------------------------------
+
+    def _fleet_report(self) -> str:
+        """Per-replica post-mortem for fleet-dead errors: every replica's
+        first-failure cause, last-progress step and restart count — not
+        just the first replica's."""
+        parts = []
+        for r in self.replicas:
+            cause = r.first_failure or r.broken
+            parts.append(
+                f"replica {r.index}: "
+                + (f"{cause!r}" if cause is not None else "alive")
+                + f" (last progress step {r.last_progress}, "
+                f"restarts {r.restarts})"
+            )
+        return "; ".join(parts)
 
     def _check_open(self) -> None:
         if self._closed:
             raise RuntimeError("InferenceService is closed")
         if self._broken is not None:
             raise RuntimeError(
-                f"InferenceService dispatch failed: {self._broken!r}"
+                f"InferenceService dispatch failed: {self._broken!r} — "
+                + self._fleet_report()
             )
 
     def _drain_replica(self, rep: _Replica, exc: BaseException) -> None:

@@ -128,7 +128,12 @@ class EvalSession:
 
     def engine_for(self, model: EngineModelConfig) -> InferenceEngine:
         self._check_open()
-        return self.engines.get(model, **self._engine_kwargs)
+        kw = dict(self._engine_kwargs)
+        # direct-infer engines (judges, lock-step parity) are not serving
+        # replicas: they must not claim a fault-schedule replica index,
+        # or the schedule's replica numbering shifts under the fleet
+        kw.pop("fault_plan", None)
+        return self.engines.get(model, **kw)
 
     def _replica_engines(
         self, model: EngineModelConfig, inf: InferenceConfig
@@ -202,6 +207,9 @@ class EvalSession:
                     n_dispatchers=inf.n_workers,
                     sleep=self.sleep,
                     name=f"{model.provider}:{model.model_name}",
+                    max_replica_restarts=inf.max_replica_restarts,
+                    restart_backoff_s=inf.restart_backoff_s,
+                    health_probe_steps=inf.health_probe_steps,
                 )
                 self._services[key] = svc
         return svc

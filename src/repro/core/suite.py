@@ -370,9 +370,10 @@ class SuiteResult:
             lines.append(
                 "| engine | mode | replicas | submitted | dispatched "
                 "| coalesced | dedup | occupancy | tok/step | admissions "
-                "| recompiles | prefix hits | prefix tok saved |"
+                "| recompiles | prefix hits | prefix tok saved "
+                "| preempt | restarts | hedges |"
             )
-            lines.append("|---" * 13 + "|")
+            lines.append("|---" * 16 + "|")
             for s in serving:
                 b = s.get("batcher") or {}
                 lines.append(
@@ -386,7 +387,10 @@ class SuiteResult:
                     f"| {b.get('admissions', '—')} "
                     f"| {b.get('prefill_recompiles', '—')} "
                     f"| {b.get('prefix_pages_hit', '—')} "
-                    f"| {b.get('prefix_tokens_saved', '—')} |"
+                    f"| {b.get('prefix_tokens_saved', '—')} "
+                    f"| {b.get('preemptions', '—')} "
+                    f"| {s.get('restarts', 0)} "
+                    f"| {s.get('hedges_issued', 0)}/{s.get('hedges_won', 0)} |"
                 )
             lines.append("")
         acct = ", ".join(

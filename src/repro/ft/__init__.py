@@ -1,17 +1,23 @@
 from repro.ft.failure_sim import (
+    SERVING_FAULT_KINDS,
     ChunkCrashMiddleware,
     Fault,
     FlakyFn,
+    ServingFault,
+    ServingFaultSchedule,
     SimulatedCrash,
     simulate_training,
 )
 from repro.ft.workers import PoolStats, ShardResult, WorkerPool
 
 __all__ = [
+    "SERVING_FAULT_KINDS",
     "ChunkCrashMiddleware",
     "Fault",
     "FlakyFn",
     "PoolStats",
+    "ServingFault",
+    "ServingFaultSchedule",
     "ShardResult",
     "SimulatedCrash",
     "WorkerPool",

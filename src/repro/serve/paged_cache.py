@@ -40,6 +40,14 @@ from collections import OrderedDict
 from typing import Hashable, Sequence
 
 
+class PagePoolExhausted(RuntimeError):
+    """No free or evictable page in the pool.
+
+    The typed form of pool pressure: the scheduler catches this to
+    preempt a decode slot (or defer a prefill) instead of letting the
+    allocation failure kill the whole replica (DESIGN.md §9)."""
+
+
 def page_hash_chain(tokens: Sequence, page_size: int) -> list[bytes]:
     """One digest per *full* page; ``h_i`` commits to ``tokens[:(i+1)*ps]``."""
     chain: list[bytes] = []
@@ -141,7 +149,7 @@ class PagedCacheManager:
             self._unindex(pid)
             self.stats.evictions += 1
         else:
-            raise RuntimeError(
+            raise PagePoolExhausted(
                 f"page pool exhausted: all {self.n_pages} pages are active"
             )
         self._ref[pid] = 1
@@ -193,7 +201,16 @@ class PagedCacheManager:
                 self._retain(pid)
                 shared.append(pid)
                 self._cached.pop(pid, None)
-        fresh = [self._alloc() for _ in range(n_total - len(shared))]
+        fresh: list[int] = []
+        try:
+            for _ in range(n_total - len(shared)):
+                fresh.append(self._alloc())
+        except PagePoolExhausted:
+            # roll back: a partial acquire must not leak retained shared
+            # pages or the fresh pages allocated before the failure
+            for pid in shared + fresh:
+                self._release_page(pid)
+            raise
         self._tables[owner] = shared + fresh
         self.stats.prefix_pages_hit += len(shared)
         self.stats.prefix_tokens_saved += len(shared) * ps
@@ -256,6 +273,14 @@ class PagedCacheManager:
         prefix cache depending on whether it is indexed."""
         for pid in self._tables.pop(owner):
             self._release_page(pid)
+
+    def release_all(self) -> int:
+        """Drop every outstanding owner table (replica-restart reset hook).
+        Returns the number of owners released."""
+        owners = list(self._tables)
+        for owner in owners:
+            self.release(owner)
+        return len(owners)
 
     def check_no_leaks(self) -> None:
         """Raise unless every page is accounted for and, with no owners

@@ -39,7 +39,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engines import BatcherStats
 from repro.models.params import init_params, is_spec
 from repro.serve import steps as steps_lib
-from repro.serve.paged_cache import PagedCacheManager
+from repro.serve.paged_cache import PagedCacheManager, PagePoolExhausted
 from repro.sharding import ShardingRules, use_rules
 
 PyTree = Any
@@ -122,6 +122,7 @@ class ContinuousBatcher:
         rules: ShardingRules | None = None,
         page_size: int = 0,
         prefix_cache: bool = True,
+        page_pool: int = 0,
     ):
         self.model, self.cfg, self.params = model, cfg, params
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
@@ -162,10 +163,14 @@ class ContinuousBatcher:
                     "paged KV cache does not compose with sharding rules yet"
                 )
             self.pages_per_slot = max_len // page_size
-            #: worst case: every slot full + one defensive CoW per slot;
-            #: one extra trailing page absorbs decode writes from inactive
+            #: default pool is worst case: every slot full + one defensive
+            #: CoW per slot — it never exhausts.  ``page_pool`` pins it
+            #: smaller (must still cover the longest single request, or
+            #: that request thrashes preempt/recompute forever); decode
+            #: pressure then triggers preemption instead of death.  One
+            #: extra trailing page absorbs decode writes from inactive
             #: slots (their stale positions must scatter *somewhere* valid)
-            n_pool = n_slots * self.pages_per_slot + n_slots
+            n_pool = page_pool or (n_slots * self.pages_per_slot + n_slots)
             self._trash_page = n_pool
             self.manager = PagedCacheManager(
                 n_pool, page_size, prefix_cache=prefix_cache
@@ -225,6 +230,11 @@ class ContinuousBatcher:
         #: prompt shapes already compiled: lengths in contiguous mode,
         #: (shared_prefix, suffix_len) pairs in paged mode
         self._seen_prefill_shapes: set = set()
+        #: deterministic chaos hook: called with ``steps_run`` at the top
+        #: of every step(); may raise (replica_crash), sleep (slow_step),
+        #: or return a kind string — "page_pressure" forces a preemption,
+        #: "hang" skips this decode step (see ServingFaultSchedule.as_hook)
+        self.fault_hook: Callable[[int], str | None] | None = None
 
     # -- cache row insertion ---------------------------------------------------
 
@@ -414,6 +424,21 @@ class ContinuousBatcher:
         self.manager.register(slot, ptoks)
         return first_tok
 
+    def _page_gate(self) -> bool:
+        """Low-watermark admission gate: admit the queue head only if the
+        pool covers its worst-case prompt-page need while keeping one page
+        per busy slot in reserve for decode growth — prefills defer under
+        pressure instead of overcommitting pages a decode will then have
+        to preempt for.  A prompt larger than the whole pool is admitted
+        anyway so ``acquire`` raises a clear error instead of the request
+        deferring forever."""
+        need = -(-len(self.queue[0].prompt_tokens) // self.page_size)
+        if need >= self.manager.n_pages:
+            return True
+        reserve = sum(1 for f in self.slot_free if not f)
+        avail = self.manager.pages_free + self.manager.pages_cached
+        return avail >= need + reserve
+
     def _refill(self) -> None:
         admitted = 0
         for slot in range(self.n_slots):
@@ -426,6 +451,12 @@ class ContinuousBatcher:
                 # each still-queued request that a free slot could have
                 # taken this step is deferred exactly once per step it
                 # actually waits (not once per queue neighbour)
+                free_left = sum(
+                    1 for s in range(slot, self.n_slots) if self.slot_free[s]
+                )
+                self.stats.prefills_deferred += min(len(self.queue), free_left)
+                break
+            if self.page_size and not self._page_gate():
                 free_left = sum(
                     1 for s in range(slot, self.n_slots) if self.slot_free[s]
                 )
@@ -460,12 +491,54 @@ class ContinuousBatcher:
                 latency_s=time.monotonic() - self.slot_started[slot],
             )
         )
+        self._release_slot(slot)
+        self.stats.completions += 1
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot and its pages without emitting a completion."""
         self.slot_free[slot] = True
         self.slot_req[slot] = None
         self.slot_tokens[slot] = []
         if self.page_size:
             self.manager.release(slot)
-        self.stats.completions += 1
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a decoding slot under pool pressure: release its pages
+        and requeue its request (same request id, queue front) for a full
+        recompute.  Greedy prefill+decode are bitwise reproducible, so the
+        preempted request's final output is byte-identical to an
+        unpreempted run — preemption costs work, never correctness."""
+        req = self.slot_req[slot]
+        assert req is not None
+        self.stats.preemptions += 1
+        self.stats.preempted_tokens += len(self.slot_tokens[slot])
+        self.queue.insert(0, req)
+        self._release_slot(slot)
+
+    def _preempt_victim(self) -> bool:
+        """Pick and preempt the cheapest-to-recompute victim: fewest
+        decoded tokens, slot-index tie-break."""
+        active = [s for s in range(self.n_slots) if not self.slot_free[s]]
+        if not active:
+            return False
+        victim = min(active, key=lambda s: (len(self.slot_tokens[s]), s))
+        self._preempt(victim)
+        return True
+
+    def cancel(self, request_id: int) -> bool:
+        """Abandon a request without a completion: dequeue it, or free its
+        slot and release its pages (the service cancels the losing leg of
+        a hedged request this way).  Returns True if found."""
+        for i, req in enumerate(self.queue):
+            if req.request_id == request_id:
+                del self.queue[i]
+                return True
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is not None and req.request_id == request_id:
+                self._release_slot(slot)
+                return True
+        return False
 
     def _reap(self) -> None:
         """Finish every slot whose latest sample terminated it."""
@@ -507,6 +580,12 @@ class ContinuousBatcher:
 
     def step(self) -> int:
         """One scheduler iteration; returns number of active slots stepped."""
+        if self.fault_hook is not None:
+            kind = self.fault_hook(self.steps_run)
+            if kind == "page_pressure":
+                self._preempt_victim()
+            elif kind == "hang":
+                return 0  # no admissions, no decode, no progress
         # finish-check *before* refill so a slot freed by the previous
         # iteration's sample is refillable in this very step, then check
         # again for fresh slots whose first token already terminated them
@@ -517,14 +596,30 @@ class ContinuousBatcher:
         if not active:
             return 0
 
-        self.stats.steps += 1
-        self.stats.active_slot_steps += len(active)
-        self.stats.tokens_generated += len(active)
         with self._compute_ctx():
+            if self.page_size:
+                # decode-time pool pressure preempts the cheapest victim
+                # and retries instead of killing the replica (DESIGN.md §9);
+                # ensure_position is idempotent, so rebuilding the tables
+                # after a preemption released pages is safe
+                while True:
+                    try:
+                        tables, wpages, woffs = self._paged_step_tables(active)
+                        break
+                    except PagePoolExhausted:
+                        self._preempt_victim()
+                        active = [
+                            s for s in range(self.n_slots)
+                            if not self.slot_free[s]
+                        ]
+                        if not active:
+                            return 0
+            self.stats.steps += 1
+            self.stats.active_slot_steps += len(active)
+            self.stats.tokens_generated += len(active)
             tokens = jnp.asarray(self.cur_tokens)
             positions = jnp.asarray(self.slot_pos)
             if self.page_size:
-                tables, wpages, woffs = self._paged_step_tables(active)
                 logits, self.cache = self._paged_decode(
                     self.params, tokens, self.cache, jnp.asarray(tables),
                     positions, jnp.asarray(wpages), jnp.asarray(woffs),

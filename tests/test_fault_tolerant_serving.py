@@ -1,0 +1,472 @@
+"""Fault-tolerant serving (ISSUE 9): preemption instead of death under
+page-pool pressure, bounded-backoff replica restart, the no-progress
+health probe, request deadlines with hedged re-issue, the error taxonomy
+(recoverable / per-ticket / replica-fatal), and the deterministic serving
+chaos schedule — all under the byte-identity contract: faults cost work,
+never correctness."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    InferenceConfig,
+    InferenceRequest,
+    InferenceService,
+    MetricConfig,
+    RecoverableEngineError,
+    SimulatedSlotEngine,
+    StatisticsConfig,
+)
+from repro.core.config import EvalTask
+from repro.data import mixed_examples
+from repro.ft.failure_sim import ServingFault, ServingFaultSchedule
+from repro.serve.paged_cache import PagePoolExhausted
+
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+SLOT_KW = {"n_slots": 4, "step_ms": 0.0}
+
+
+def _pump_all(eng, rids, max_pumps=5000):
+    done = {}
+    for _ in range(max_pumps):
+        for rid, resp in eng.stream_pump():
+            done[rid] = resp
+        if len(done) == len(rids):
+            return done
+    raise AssertionError(f"only {len(done)}/{len(rids)} completed")
+
+
+def _texts(n=8, words=8):
+    return [
+        " ".join(f"w{i}t{j}" for j in range(words)) + f" tail {i}"
+        for i in range(n)
+    ]
+
+
+def _mv_tuple(mv):
+    return (mv.value, mv.ci, mv.ci_method, mv.n, mv.n_unscored)
+
+
+# -- fault schedule -------------------------------------------------------------
+
+
+def test_serving_fault_kind_is_validated():
+    with pytest.raises(ValueError, match="unknown serving fault kind"):
+        ServingFault(replica=0, step=1, kind="meteor_strike")
+
+
+def test_schedule_attach_order_and_single_fire():
+    plan = ServingFaultSchedule(
+        [
+            ServingFault(1, 5, "hang", duration=2),
+            ServingFault(0, 3, "page_pressure"),
+        ]
+    )
+    assert plan.attach() == 0 and plan.attach() == 1
+    assert plan.poll(0, 2) is None  # before schedule
+    f = plan.poll(0, 7)  # >= scheduled step: fires even if steps skipped
+    assert f is not None and f.kind == "page_pressure"
+    assert plan.poll(0, 8) is None  # each fault fires exactly once
+    assert plan.poll(1, 5).kind == "hang"
+    assert plan.injected == [(0, 7, "page_pressure"), (1, 5, "hang")]
+
+
+# -- simulated engine: page gate and preemption ---------------------------------
+
+
+def test_sim_page_gate_defers_prefills_and_stays_byte_identical():
+    prompts = _texts(6, words=8)  # 10 words each -> 3 pages at page_size 4
+    big = SimulatedSlotEngine(SLOT_MODEL, kv_page_size=4, **SLOT_KW)
+    small = SimulatedSlotEngine(
+        SLOT_MODEL, kv_page_size=4, page_pool=7, **SLOT_KW
+    )
+    for eng in (big, small):
+        eng.initialize()
+    out = {}
+    for name, eng in (("big", big), ("small", small)):
+        rids = [
+            eng.stream_submit(InferenceRequest(p, 8, 0.0)) for p in prompts
+        ]
+        done = _pump_all(eng, rids)
+        out[name] = [done[r].text for r in rids]
+    assert out["small"] == out["big"]  # pressure never changes a byte
+    assert small.stats.prefills_deferred > 0
+    assert small.stats.completions == len(prompts)
+    small._pages.check_no_leaks()
+
+
+def test_sim_page_pressure_fault_preempts_and_recomputes_identically():
+    prompts = _texts(8, words=8)
+    plan = ServingFaultSchedule(
+        [
+            ServingFault(0, 2, "page_pressure", duration=2),
+            ServingFault(0, 4, "page_pressure"),
+        ]
+    )
+    faulted = SimulatedSlotEngine(
+        SLOT_MODEL, kv_page_size=4, fault_plan=plan, **SLOT_KW
+    )
+    plain = SimulatedSlotEngine(SLOT_MODEL, kv_page_size=4, **SLOT_KW)
+    for eng in (faulted, plain):
+        eng.initialize()
+    out = {}
+    for eng in (plain, faulted):
+        rids = [
+            eng.stream_submit(InferenceRequest(p, 8, 0.0)) for p in prompts
+        ]
+        done = _pump_all(eng, rids)
+        out[id(eng)] = [done[r].text for r in rids]
+    assert out[id(faulted)] == out[id(plain)]
+    assert faulted.stats.preemptions >= 3
+    assert faulted.stats.preempted_tokens >= 0
+    assert len(plan.injected) == 2
+    faulted._pages.check_no_leaks()  # preemption released every page
+
+
+def test_sim_prompt_larger_than_pool_raises_instead_of_deferring_forever():
+    eng = SimulatedSlotEngine(
+        SLOT_MODEL, kv_page_size=4, page_pool=2, **SLOT_KW
+    )
+    eng.initialize()
+    eng.stream_submit(InferenceRequest(" ".join(["w"] * 40), 4, 0.0))
+    with pytest.raises(PagePoolExhausted):
+        for _ in range(50):
+            eng.stream_pump()
+
+
+# -- replica restart ------------------------------------------------------------
+
+
+def test_replica_crash_mid_decode_restarts_and_reserves_byte_identically():
+    prompts = _texts(8)
+    plan = ServingFaultSchedule([ServingFault(0, 3, "replica_crash")])
+    crashy = SimulatedSlotEngine(SLOT_MODEL, fault_plan=plan, **SLOT_KW)
+    steady = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    oracle = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    svc = InferenceService(
+        engines=[crashy, steady], routing="round_robin",
+        max_batch_wait_ms=0.0, max_replica_restarts=2,
+        restart_backoff_s=0.001, name="crashy",
+    )
+    tickets = [
+        svc.submit(InferenceRequest(p, 8, 0.0), key=f"k{i}")
+        for i, p in enumerate(prompts)
+    ]
+    got = [t.result(timeout=20.0) for t in tickets]
+    expect = [oracle.infer(InferenceRequest(p, 8, 0.0)) for p in prompts]
+    assert [r.text for r in got] == [r.text for r in expect]
+    assert all(r.error is None for r in got)
+    snap = svc.snapshot()
+    assert snap["restarts"] >= 1 and snap["errors"] == 0
+    per = {r["index"]: r for r in snap["replica_stats"]}
+    assert not per[0]["broken"] and per[0]["restarts"] >= 1
+    assert plan.injected == [(0, 3, "replica_crash")]
+    # the restarted replica serves NEW work too, not just the carried work
+    late = svc.submit(InferenceRequest(prompts[0], 8, 0.0), key="late")
+    assert late.result(timeout=20.0).text == expect[0].text
+    svc.close()
+
+
+class AlwaysDying(SimulatedSlotEngine):
+    """Crashes every pump, even after reset() — restarts cannot save it."""
+
+    def stream_pump(self):
+        raise RuntimeError(f"cursed replica (pump {self._pumps})")
+
+
+def test_restart_budget_exhausted_fleet_report_names_every_replica():
+    fleet = [AlwaysDying(SLOT_MODEL, **SLOT_KW) for _ in range(2)]
+    svc = InferenceService(
+        engines=fleet, routing="round_robin", max_batch_wait_ms=0.0,
+        max_replica_restarts=1, restart_backoff_s=0.0, name="doomed",
+    )
+    tickets = [
+        svc.submit(InferenceRequest(f"doomed {i}", 8, 0.0), key=f"d{i}")
+        for i in range(2)
+    ]
+    for t in tickets:
+        with pytest.raises(RuntimeError, match="cursed replica"):
+            t.result(timeout=20.0)
+    # S2: the fleet-dead error carries EVERY replica's first failure,
+    # not just whichever replica died last
+    wait = threading.Event()
+    for _ in range(200):
+        try:
+            svc.submit(InferenceRequest("after the fall", 8, 0.0), key="x")
+        except RuntimeError as e:
+            msg = str(e)
+            assert "replica 0:" in msg and "replica 1:" in msg
+            assert "cursed replica" in msg
+            assert "restarts 1" in msg
+            break
+        wait.wait(0.01)
+    else:
+        pytest.fail("service never reported the dead fleet")
+    svc.close()
+
+
+# -- health probe ---------------------------------------------------------------
+
+
+def test_health_probe_catches_hung_replica_and_restart_recovers():
+    prompts = _texts(4)
+    plan = ServingFaultSchedule(
+        [ServingFault(0, 2, "hang", duration=1_000_000)]
+    )
+    eng = SimulatedSlotEngine(SLOT_MODEL, fault_plan=plan, **SLOT_KW)
+    oracle = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    svc = InferenceService(
+        engine=eng, max_batch_wait_ms=0.0, max_replica_restarts=1,
+        restart_backoff_s=0.001, health_probe_steps=5, name="hung",
+    )
+    tickets = [
+        svc.submit(InferenceRequest(p, 8, 0.0), key=f"h{i}")
+        for i, p in enumerate(prompts)
+    ]
+    got = [t.result(timeout=20.0) for t in tickets]
+    expect = [oracle.infer(InferenceRequest(p, 8, 0.0)) for p in prompts]
+    assert [r.text for r in got] == [r.text for r in expect]
+    assert svc.stats.restarts == 1  # the hang is invisible except to the probe
+    svc.close()
+
+
+def test_probe_disabled_by_default_short_hangs_self_recover():
+    plan = ServingFaultSchedule([ServingFault(0, 2, "hang", duration=3)])
+    eng = SimulatedSlotEngine(SLOT_MODEL, fault_plan=plan, **SLOT_KW)
+    svc = InferenceService(engine=eng, max_batch_wait_ms=0.0)
+    t = svc.submit(InferenceRequest("just slow", 8, 0.0), key="s")
+    assert t.result(timeout=20.0).error is None
+    assert svc.stats.restarts == 0
+    svc.close()
+
+
+# -- deadlines and hedged re-issue ----------------------------------------------
+
+
+class WedgedEngine(SimulatedSlotEngine):
+    """Accepts submissions, never completes them — and never raises, so
+    only a deadline (or the health probe) can rescue its requests."""
+
+    def stream_pump(self):
+        return []
+
+
+def test_deadline_hedges_to_another_replica_first_completion_wins():
+    wedged = WedgedEngine(SLOT_MODEL, **SLOT_KW)
+    steady = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    oracle = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    svc = InferenceService(
+        engines=[wedged, steady], routing="round_robin",
+        max_batch_wait_ms=0.0, name="hedged",
+    )
+    req = InferenceRequest("stuck prompt", 8, 0.0)
+    t = svc.submit(req, key="hk", deadline_s=0.02)  # round-robin -> replica 0
+    resp = t.result(timeout=20.0)
+    assert resp.text == oracle.infer(req).text  # hedge changes replica, not bytes
+    assert svc.stats.deadline_expiries == 1
+    assert svc.stats.hedges_issued == 1
+    assert svc.stats.hedges_won == 1
+    assert svc.stats.completed == 1  # one flight, despite two legs
+    # the losing leg is cancelled cooperatively: slot and queue entry freed
+    wait = threading.Event()
+    for _ in range(500):
+        if svc.replicas[0].cancelled == 1:
+            break
+        wait.wait(0.01)
+    assert svc.replicas[0].cancelled == 1
+    assert not wedged.stream_pending()
+    svc.close()
+
+
+def test_no_deadline_means_no_hedging():
+    eng = SimulatedSlotEngine(SLOT_MODEL, **SLOT_KW)
+    svc = InferenceService(engine=eng, max_batch_wait_ms=0.0)
+    t = svc.submit(InferenceRequest("calm", 8, 0.0), key="c")
+    assert t.result(timeout=20.0).error is None
+    assert svc.stats.deadline_expiries == 0
+    assert svc.stats.hedges_issued == 0
+    svc.close()
+
+
+# -- error taxonomy (S1) --------------------------------------------------------
+
+
+class TaxonomyEngine(SimulatedSlotEngine):
+    """stream_submit: ValueError for 'bad' prompts, RecoverableEngineError
+    for the first ``flake`` 'flaky' prompts, normal service otherwise."""
+
+    def __init__(self, model, flake=1, **kw):
+        super().__init__(model, **kw)
+        self.flake = flake
+
+    def stream_submit(self, request):
+        if request.prompt.startswith("bad"):
+            raise ValueError(f"malformed prompt: {request.prompt!r}")
+        if request.prompt.startswith("flaky") and self.flake > 0:
+            self.flake -= 1
+            raise RecoverableEngineError("engine briefly overloaded")
+        return super().stream_submit(request)
+
+
+def test_value_error_fails_one_ticket_replica_lives_on():
+    eng = TaxonomyEngine(SLOT_MODEL, **SLOT_KW)
+    svc = InferenceService(engine=eng, max_batch_wait_ms=0.0)
+    bad = svc.submit(InferenceRequest("bad {", 8, 0.0), key="b")
+    with pytest.raises(ValueError, match="malformed prompt"):
+        bad.result(timeout=20.0)
+    good = svc.submit(InferenceRequest("good prompt", 8, 0.0), key="g")
+    assert good.result(timeout=20.0).error is None
+    assert svc.replicas[0].broken is None  # programming error != crash
+    assert svc.stats.restarts == 0 and svc.stats.errors == 1
+    svc.close()
+
+
+def test_recoverable_error_retries_with_backoff_then_succeeds():
+    eng = TaxonomyEngine(SLOT_MODEL, flake=2, **SLOT_KW)
+    svc = InferenceService(engine=eng, max_batch_wait_ms=0.0)
+    t = svc.submit(
+        InferenceRequest("flaky prompt", 8, 0.0), key="f",
+        max_retries=3, retry_delay=0.001,
+    )
+    assert t.result(timeout=20.0).error is None
+    assert t.attempts == 3  # two refusals burned, third attempt served
+    assert svc.replicas[0].broken is None
+    svc.close()
+
+
+def test_recoverable_error_exhausting_retries_fails_the_ticket_only():
+    eng = TaxonomyEngine(SLOT_MODEL, flake=10, **SLOT_KW)
+    svc = InferenceService(engine=eng, max_batch_wait_ms=0.0)
+    t = svc.submit(
+        InferenceRequest("flaky forever", 8, 0.0), key="f",
+        max_retries=1, retry_delay=0.001,
+    )
+    with pytest.raises(RecoverableEngineError):
+        t.result(timeout=20.0)
+    ok = svc.submit(InferenceRequest("fine", 8, 0.0), key="o")
+    assert ok.result(timeout=20.0).error is None
+    svc.close()
+
+
+# -- real batcher: decode-time pool exhaustion preempts, never kills ------------
+
+
+def _batcher(n_slots=3, **kw):
+    from repro.configs import ARCHS
+    from repro.models import params as pm
+    from repro.models.model import build_model
+    from repro.serve import ContinuousBatcher
+
+    import jax
+
+    cfg = ARCHS["qwen3-4b"].reduced()
+    model = build_model(cfg, remat="none")
+    params = pm.init_params(jax.random.key(0), model.param_specs())
+    return ContinuousBatcher(
+        model, cfg, params, n_slots=n_slots, max_len=64, eos_id=1, **kw
+    )
+
+
+def test_batcher_pool_exhaustion_preempts_and_no_request_is_lost():
+    """Regression: a page pool too small for the active set used to kill
+    the whole replica with PagePoolExhausted mid-decode; now the victim
+    slot is preempted and recomputed, byte-identically."""
+    from repro.serve import Request
+
+    reqs = [
+        Request(i, prompt_tokens=[10 + i + j for j in range(14)],
+                max_new_tokens=6)
+        for i in range(5)
+    ]
+
+    def run(**kw):
+        sched = _batcher(page_size=16, **kw)
+        for r in reqs:
+            sched.submit(r)
+        done = {c.request_id: c for c in sched.run_to_completion()}
+        return sched, done
+
+    full, base = run()
+    tight, pressured = run(page_pool=3)
+    assert sorted(pressured) == list(range(5))  # zero lost requests
+    assert all(
+        c.finished_reason in ("eos", "length") for c in pressured.values()
+    )
+    assert tight.stats.preemptions >= 1
+    assert tight.stats.prefills_deferred >= 1  # the admission gate held
+    assert full.stats.preemptions == 0  # auto-sized pool never preempts
+    for i in range(5):  # preemption costs recompute work, never bytes
+        assert pressured[i].tokens == base[i].tokens
+    tight.manager.check_no_leaks()
+
+
+def test_batcher_cancel_releases_slot_and_pages():
+    from repro.serve import Request
+
+    sched = _batcher(page_size=16)
+    for i in range(2):
+        sched.submit(
+            Request(i, prompt_tokens=[30 + i + j for j in range(10)],
+                    max_new_tokens=8)
+        )
+    for _ in range(3):
+        sched.step()
+    assert sched.cancel(0)
+    assert not sched.cancel(0)  # already gone
+    done = sched.run_to_completion()
+    assert [c.request_id for c in done] == [1]  # no completion for 0
+    sched.manager.check_no_leaks()
+
+
+# -- end-to-end: chaos through the session, stats plane byte-identical ----------
+
+
+def _task(task_id, **inf_kw):
+    return EvalTask(
+        task_id=task_id,
+        model=SLOT_MODEL,
+        inference=InferenceConfig(batch_size=8, n_workers=4, **inf_kw),
+        metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=200, ci_method="percentile"
+        ),
+    )
+
+
+def test_session_chaos_run_matches_fault_free_run_byte_for_byte():
+    rows = mixed_examples(30, seed=23)
+    plan = ServingFaultSchedule(
+        [
+            ServingFault(0, 4, "page_pressure", duration=2),
+            ServingFault(1, 6, "replica_crash"),
+            ServingFault(2, 3, "hang", duration=4),
+        ]
+    )
+    inf_kw = dict(
+        n_replicas=3, routing="round_robin", kv_page_size=4,
+        health_probe_steps=50,
+    )
+
+    def run(engine_kwargs):
+        with EvalSession(engine_kwargs=engine_kwargs) as session:
+            res = session.run_task(rows, _task("chaos", **inf_kw))
+            (snap,) = session.serving_stats()
+        return res, snap
+
+    base_res, base_snap = run({**SLOT_KW, "kv_page_size": 4})
+    chaos_res, chaos_snap = run(
+        {**SLOT_KW, "kv_page_size": 4, "fault_plan": plan}
+    )
+    assert not chaos_res.failures  # zero lost requests
+    assert chaos_snap["errors"] == 0
+    for name in base_res.metrics:
+        assert _mv_tuple(chaos_res.metrics[name]) == _mv_tuple(
+            base_res.metrics[name]
+        )
+    assert chaos_snap["restarts"] >= 1
+    assert chaos_snap["batcher"]["preemptions"] >= 1
+    assert len(plan.injected) == 3
+    assert chaos_snap["completed"] == base_snap["completed"]
