@@ -45,6 +45,8 @@ GAUGES: dict[str, list[str]] = {
         "shared_prefix.speedup",
         "shared_prefix.prefix_reuse",
         "chaos.completed_fraction",
+        "quantized.capacity_ratio",
+        "quantized.speedup",
     ],
     "BENCH_concurrency.json": ["speedup_at_4_inflight"],
     "BENCH_suite.json": ["speedup"],

@@ -13,6 +13,12 @@ import numpy as np
 
 from repro.kernels.bertscore.ref import bertscore_ref
 from repro.kernels.bootstrap.ref import bootstrap_means_ref
+from repro.kernels.decode_attention import (
+    kv_page_bytes,
+    paged_decode_attention_ref,
+    quant_paged_decode_attention_ref,
+    quantize_pages,
+)
 from repro.models.attention import chunked_attention
 from repro.models.ssm import ssd_chunked
 
@@ -58,6 +64,39 @@ def run(smoke: bool = False) -> list[str]:
     lines.append(
         f"kernel_bootstrap_jnp_n{nboot_data // 1000}k_B256,{us:.0f},"
         f"resample_elems_per_s={256 * nboot_data / us * 1e6:.2e}"
+    )
+
+    # paged decode attention (bf16/f32 pages) vs int8 block-quantized
+    # pages with dequant fused into the gather — same jnp-oracle timing
+    # methodology; the interesting derived number is KV bytes per token
+    # resident in the pool, which the quantized path roughly halves.
+    pb, pkh, pg, pd, pps = 8, 2, 4, 64, 16
+    npg = 4 if smoke else 16  # pages per sequence (seq len = npg * ps)
+    pool = pb * npg + 1       # +1 trash page (page 0 by convention)
+    qd = jnp.asarray(rng.randn(pb, pkh, pg, pd), jnp.float32)
+    kp = jnp.asarray(rng.randn(pool, pkh, pps, pd), jnp.float32)
+    vp = jnp.asarray(rng.randn(pool, pkh, pps, pd), jnp.float32)
+    tables = jnp.arange(1, pool, dtype=jnp.int32).reshape(pb, npg)
+    lengths = jnp.asarray(
+        [npg * pps - (i * 7) % (npg * pps - 1) for i in range(pb)], jnp.int32
+    )
+    fn5 = jax.jit(paged_decode_attention_ref)
+    us = _time(fn5, qd, kp, vp, tables, lengths)
+    f32_bpt = 2 * pkh * pd * 4  # K+V bytes per resident token, f32 pages
+    lines.append(
+        f"kernel_paged_decode_jnp_b{pb}_p{npg * pps},{us:.0f},"
+        f"kv_bytes_per_token={f32_bpt}"
+    )
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    fn6 = jax.jit(quant_paged_decode_attention_ref)
+    us_q = _time(fn6, qd, kq, vq, ks, vs, tables, lengths)
+    int8_bpt = 2 * pkh * pd * 1 + 2 * pkh * 4 // pps  # + amortized scales
+    lines.append(
+        f"kernel_quant_paged_decode_jnp_b{pb}_p{npg * pps},{us_q:.0f},"
+        f"kv_bytes_per_token={int8_bpt} "
+        f"capacity_ratio={f32_bpt / int8_bpt:.2f} "
+        f"page_bytes_int8={kv_page_bytes(pps, pkh, pd, 1, 'int8')}"
     )
 
     nb = 16 if smoke else 64

@@ -35,6 +35,15 @@ pre-service code path, kept verbatim as ``LockStepInferStage``):
   with byte-identical metrics and ``prefix_tokens_saved > 0`` surfaced
   in the suite markdown.
 
+* **quantized KV pages** (ISSUE 10) — the same pool *byte* budget served
+  with bf16 vs int8 block-quantized pages under decode-growth pressure.
+  int8 pages are ~half the bytes, so the budget admits ~2x pages.
+  Acceptance: **>= 1.8x page capacity**, **>= 1.5x wall-clock**
+  (min-of-3), preemptions strictly reduced, and metrics/CIs/significance
+  matrices byte-identical across 1/2/4 replicas x page sizes at fixed
+  dtype (the real-model int8-vs-bf16 token-match gate lives in
+  ``tests/test_quantized_serving.py``).
+
 Emits ``BENCH_serving.json``.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke|--full]
@@ -366,6 +375,176 @@ def _shared_prefix(n_rows: int, header_words: int, trials: int = 3) -> dict:
     }
 
 
+#: quantized-cache engine: byte-budgeted page pool under decode-growth
+#: pressure — the pool, not the slot count, is the admission bottleneck,
+#: so KV bytes-per-token is the lever being measured.  Outputs long
+#: enough that decode growth (one page per generated token past the
+#: prompt) overcommits what the admission gate reserved, forcing organic
+#: preemptions on the smaller bf16 pool.
+QUANT_SLOT_KW = {"n_slots": 8, "step_ms": 0.25, "wall_clock": True,
+                 "min_out": 32, "max_out": 64,
+                 "prefill_ms_per_token": 0.05, "decode_page_growth": True}
+#: fixed pool byte budget — 14 bf16 pages at kv_page_size=16 under the
+#: simulator's nominal KV geometry (~1.8 MB).  A fully decoded request
+#: spans ~7 pages (39-word prompt + up to 64 generated tokens), so bf16
+#: sustains ~2 resident requests while the same budget in int8 (~28
+#: pages) sustains ~4 — admission-gate reserve (one page per busy slot)
+#: understates decode growth, so the bf16 pool preempts organically
+QUANT_POOL_BYTES = 14 * 131072
+
+
+def _quantized(
+    n_rows: int,
+    trials: int = 3,
+    counts: tuple[int, ...] = (1, 2, 4),
+    page_sizes: tuple[int, ...] = (16, 64),
+) -> dict:
+    """Quantized paged KV cache (ISSUE 10): the same pool *byte* budget
+    served with bf16 pages vs int8 block-quantized pages.  int8 pages are
+    ~half the bytes, so the budget admits ~2x pages: fewer preemptions,
+    fewer re-decoded tokens, less wall.  Acceptance: **>= 1.8x**
+    resident-page capacity and **>= 1.5x wall-clock** (min-of-3) with
+    preemptions strictly reduced; metrics, CIs and significance matrices
+    byte-identical across 1/2/4 replicas x page sizes at fixed dtype; and
+    int8 stats byte-identical to bf16 (the simulator's token plane is a
+    pure prompt function — the real-model >= 99% greedy token-match gate
+    lives in ``tests/test_quantized_serving.py``)."""
+    rows = [
+        {
+            "question": " ".join(f"ctx{i}w{j}" for j in range(36))
+            + f" question {i} now",
+            "reference": f"ref {i}",
+        }
+        for i in range(n_rows)
+    ]
+
+    def build_suite(dtype: str, page: int, n_replicas: int) -> EvalSuite:
+        task = EvalTask(
+            task_id="quant",
+            model=SLOT_MODEL,
+            inference=InferenceConfig(
+                batch_size=16, n_workers=4, cache_dir="", use_service=True,
+                kv_page_size=page, kv_cache_dtype=dtype,
+                n_replicas=n_replicas,
+            ),
+            metrics=(MetricConfig("exact_match"), MetricConfig("token_f1")),
+            statistics=StatisticsConfig(
+                bootstrap_iterations=200, ci_method="percentile"
+            ),
+        )
+        suite = EvalSuite(f"quant-{dtype}").add_task(task, rows)
+        return suite.sweep_models([SLOT_MODEL, SLOT_MODEL_B])
+
+    def run(dtype: str, page: int = 16, n_replicas: int = 1) -> dict:
+        t0 = time.perf_counter()
+        kw = {**QUANT_SLOT_KW, "page_pool_bytes": QUANT_POOL_BYTES}
+        with EvalSession(engine_kwargs=kw) as session:
+            res = session.run_suite(
+                build_suite(dtype, page, n_replicas), parallel_jobs=2
+            )
+            serving = session.serving_stats()
+        wall = time.perf_counter() - t0
+        metrics = {
+            f"{model}|{task_id}": _metric_dict(res.results[(model, task_id)])
+            for (model, task_id) in res.results
+        }
+        comparisons = {
+            task_id: {
+                metric: {
+                    "|".join(pair): _cmp_cell(cell)
+                    for pair, cell in cells.items()
+                }
+                for metric, cells in metrics_.items()
+            }
+            for task_id, metrics_ in res.comparisons.items()
+        }
+        bat = [s["batcher"] for s in serving if "batcher" in s]
+        return {
+            "wall_s": wall,
+            "metrics": metrics,
+            "comparisons": comparisons,
+            "preemptions": sum(b.get("preemptions", 0) for b in bat),
+            "preempted_tokens": sum(b.get("preempted_tokens", 0) for b in bat),
+            # one service per model; each run's pools are identically
+            # sized, so max == the per-service pool page count
+            "pool_pages": max((b.get("pool_pages", 0) for b in bat), default=0),
+            "kv_bytes_per_token": max(
+                (b.get("kv_bytes_per_token", 0) for b in bat), default=0
+            ),
+        }
+
+    def best_of(dtype: str) -> dict:
+        attempts = [run(dtype) for _ in range(trials)]
+        for r in attempts[1:]:
+            assert r["metrics"] == attempts[0]["metrics"]
+            assert r["comparisons"] == attempts[0]["comparisons"]
+        return min(attempts, key=lambda r: r["wall_s"])
+
+    baseline = best_of("bf16")
+    quant = best_of("int8")
+    speedup = baseline["wall_s"] / quant["wall_s"]
+    capacity_ratio = quant["pool_pages"] / max(1, baseline["pool_pages"])
+    # value-plane quantization must not touch the token plane: in the
+    # simulator texts are pure prompt functions, so every metric byte
+    # (and every significance cell) must survive the dtype switch
+    token_match = (
+        quant["metrics"] == baseline["metrics"]
+        and quant["comparisons"] == baseline["comparisons"]
+    )
+
+    # fixed dtype => byte-identical stats across replica counts and page
+    # sizes (single-trial runs: identity is deterministic, only the wall
+    # comparison above needs min-of-trials)
+    identical = True
+    parity: dict[str, dict] = {}
+    for dtype, base in (("bf16", baseline), ("int8", quant)):
+        for page in page_sizes:
+            for n in counts:
+                if page == 16 and n == 1:
+                    continue  # == base, already run (min-of-trials)
+                r = run(dtype, page=page, n_replicas=n)
+                same = (
+                    r["metrics"] == base["metrics"]
+                    and r["comparisons"] == base["comparisons"]
+                )
+                identical = identical and same
+                parity[f"{dtype}|page{page}|replicas{n}"] = {
+                    "stats_identical": same,
+                    "preemptions": r["preemptions"],
+                }
+
+    return {
+        "n_rows": n_rows,
+        "n_models": 2,
+        "engine": {"model": SLOT_MODEL.model_name, **QUANT_SLOT_KW},
+        "pool_bytes": QUANT_POOL_BYTES,
+        "kv_page_size": 16,
+        "bf16": {
+            k: baseline[k]
+            for k in ("wall_s", "pool_pages", "kv_bytes_per_token",
+                      "preemptions", "preempted_tokens")
+        },
+        "int8": {
+            k: quant[k]
+            for k in ("wall_s", "pool_pages", "kv_bytes_per_token",
+                      "preemptions", "preempted_tokens")
+        },
+        "capacity_ratio": capacity_ratio,
+        "speedup": speedup,
+        "preemptions_reduced": quant["preemptions"] < baseline["preemptions"],
+        "token_match_ok": token_match,
+        "parity": parity,
+        "byte_identical_stats": identical,
+        "ok": (
+            capacity_ratio >= 1.8
+            and speedup >= 1.5
+            and quant["preemptions"] < baseline["preemptions"]
+            and token_match
+            and identical
+        ),
+    }
+
+
 def _dedup(n_unique: int, repeats: int, n_workers: int) -> dict:
     unique = qa_examples(n_unique, seed=7)
     rows = [r for _ in range(repeats) for r in unique]  # chunk = unique set
@@ -411,16 +590,19 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         n_unique, repeats, n_workers = 60, 16, 8
         rs_per_task, rs_tasks, rs_chunk, rs_window = 150, 2, 30, 4
         sp_rows, sp_header = 24, 320
+        qz_rows, qz_counts = 40, (1, 2)
     elif full:
         n_per_task, n_tasks, chunk, window = 600, 4, 75, 8
         n_unique, repeats, n_workers = 120, 16, 8
         rs_per_task, rs_tasks, rs_chunk, rs_window = 240, 3, 60, 8
         sp_rows, sp_header = 64, 600
+        qz_rows, qz_counts = 64, (1, 2, 4)
     else:
         n_per_task, n_tasks, chunk, window = 250, 3, 50, 4
         n_unique, repeats, n_workers = 60, 16, 8
         rs_per_task, rs_tasks, rs_chunk, rs_window = 150, 2, 30, 4
         sp_rows, sp_header = 40, 600
+        qz_rows, qz_counts = 48, (1, 2, 4)
 
     lines = []
     mt = _multi_task(n_per_task, n_tasks, chunk, window)
@@ -455,6 +637,15 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         f"identical={sp['byte_identical_stats']}"
     )
 
+    qz = _quantized(qz_rows, counts=qz_counts)
+    lines.append(
+        f"serving_quantized,{qz['int8']['wall_s'] * 1e6 / qz['n_rows']:.1f},"
+        f"speedup={qz['speedup']:.2f}x "
+        f"capacity={qz['capacity_ratio']:.2f}x "
+        f"preempt={qz['int8']['preemptions']}/{qz['bf16']['preemptions']} "
+        f"identical={qz['byte_identical_stats']}"
+    )
+
     ok = (
         mt["speedup"] >= 2.0
         and mt["metrics_identical"]
@@ -462,6 +653,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         and de["metrics_identical"]
         and rs["ok"]
         and sp["ok"]
+        and qz["ok"]
     )
     payload = {
         "mode": "smoke" if smoke else ("full" if full else "default"),
@@ -469,6 +661,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         "dedup": de,
         "replica_scaling": rs,
         "shared_prefix": sp,
+        "quantized": qz,
         "speedup": mt["speedup"],
         "dedup_rate": de["dedup_rate"],
         "ok": ok,
@@ -479,6 +672,7 @@ def run(*, smoke: bool = False, full: bool = False) -> list[str]:
         f"dedup={de['dedup_rate']:.1%} "
         f"replicas@2={rs['speedup_2']:.2f}x @4={rs['speedup_4']:.2f}x "
         f"prefix={sp['speedup']:.2f}x "
+        f"quant={qz['speedup']:.2f}x "
         f"ok={ok}"
     )
     if not ok:

@@ -130,6 +130,12 @@ class BatcherStats:
     preemptions: int = 0
     #: decoded tokens discarded by preemptions (the recompute cost)
     preempted_tokens: int = 0
+    #: HBM bytes one cached token costs, quantization-scale buffer
+    #: included (0 on contiguous-cache batchers) — int8 pages halve this,
+    #: which is exactly where quantization buys pool capacity (DESIGN.md §10)
+    kv_bytes_per_token: int = 0
+    #: KV page-pool size in pages (0 on contiguous-cache batchers)
+    pool_pages: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -157,6 +163,8 @@ class BatcherStats:
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
             "preempted_tokens": self.preempted_tokens,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "pool_pages": self.pool_pages,
         }
 
 
@@ -337,6 +345,13 @@ class SimulatedAPIEngine(InferenceEngine):
 
 # -- simulated slot engine ---------------------------------------------------------
 
+#: nominal KV geometry the slot simulator charges page bytes against —
+#: shaped like the reduced qwen3 serving config, so simulated byte
+#: budgets and capacity ratios track the real batcher's page economics
+SIM_KV_HEADS = 8
+SIM_HEAD_DIM = 64
+SIM_LAYERS = 4
+
 
 class SimulatedSlotEngine(InferenceEngine):
     """Deterministic slot-multiplexed decode engine (no JAX): models the
@@ -370,6 +385,9 @@ class SimulatedSlotEngine(InferenceEngine):
         prefix_cache: bool = True,
         prefill_ms_per_token: float = 0.0,
         page_pool: int = 4096,
+        page_pool_bytes: int = 0,
+        kv_cache_dtype: str = "bf16",
+        decode_page_growth: bool = False,
         fault_plan: Any = None,
     ):
         self.model = model
@@ -386,12 +404,44 @@ class SimulatedSlotEngine(InferenceEngine):
         #: a measurable effect on the streaming path
         self.prefill_ms_per_token = prefill_ms_per_token
         self.kv_page_size = kv_page_size
+        #: "bf16" | "int8": accounting-only in the simulator — responses
+        #: are pure prompt functions, so quantization changes page *bytes*
+        #: (and therefore how many pages a byte budget admits), never text
+        self.kv_cache_dtype = kv_cache_dtype
+        #: charge one KV page per decoded token past the prompt (the real
+        #: batcher's decode growth) so long generations create organic
+        #: page pressure — off by default to keep prompt-only accounting
+        self.decode_page_growth = decode_page_growth
+        if kv_cache_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_cache_dtype must be 'bf16' or 'int8', got "
+                f"{kv_cache_dtype!r}"
+            )
+        if kv_cache_dtype == "int8" and not kv_page_size:
+            raise ValueError(
+                "kv_cache_dtype='int8' requires a paged cache "
+                "(kv_page_size > 0)"
+            )
+        page_bytes = 0
         if kv_page_size:
             # deferred import: repro.serve.scheduler imports this module
-            from repro.serve.paged_cache import PagedCacheManager
+            from repro.serve.paged_cache import (
+                PagedCacheManager,
+                kv_page_bytes,
+                pages_for_budget,
+            )
 
+            page_bytes = kv_page_bytes(
+                kv_page_size, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS,
+                kv_cache_dtype,
+            )
+            if page_pool_bytes:
+                # byte-budgeted pool: int8 pages are ~half the bytes, so
+                # the same budget admits ~2x pages
+                page_pool = pages_for_budget(page_pool_bytes, page_bytes)
             self._pages = PagedCacheManager(
-                page_pool, kv_page_size, prefix_cache=prefix_cache
+                page_pool, kv_page_size, prefix_cache=prefix_cache,
+                page_bytes=page_bytes,
             )
         else:
             self._pages = None
@@ -399,6 +449,9 @@ class SimulatedSlotEngine(InferenceEngine):
         self.total_cost = 0.0
         self.initialized = False
         self.stats = BatcherStats(n_slots=n_slots)
+        if kv_page_size:
+            self.stats.kv_bytes_per_token = page_bytes // kv_page_size
+            self.stats.pool_pages = self._pages.n_pages
         self._lock = threading.Lock()
         self._next_id = 0
         #: streaming admission queue: (rid, request, out_len)
@@ -562,6 +615,30 @@ class SimulatedSlotEngine(InferenceEngine):
             return fault.delay_s * 1000.0
         return 0.0
 
+    def _grow_decode_pages_locked(self) -> None:
+        """Charge each active slot the KV page holding this step's new
+        token (the real batcher's ``ensure_position``): long generations
+        spill past their prompt pages, so a tight pool preempts under
+        *decode* pressure, not just admission pressure.  Pool exhaustion
+        preempts the cheapest victim and retries — possibly the growing
+        slot itself, in which case its growth is moot this pump."""
+        from repro.serve.paged_cache import PagePoolExhausted
+
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            words = s["req"].prompt.split() or ["<bos>"]
+            pos = len(words) + (s["out"] - s["left"])
+            while self._slots[i] is not None:
+                try:
+                    pw = self._pages.ensure_position(s["rid"], pos)
+                    if pw.cow_src is not None:
+                        self.stats.cow_copies += 1
+                    break
+                except PagePoolExhausted:
+                    if not self._preempt_one_locked():
+                        break
+
     def stream_pump(self) -> list[tuple[int, InferenceResponse]]:
         slow_ms = 0.0
         with self._lock:
@@ -627,6 +704,8 @@ class SimulatedSlotEngine(InferenceEngine):
             )
         done: list[tuple[int, InferenceResponse]] = []
         with self._lock:
+            if self._pages is not None and self.decode_page_growth:
+                self._grow_decode_pages_locked()
             self._account_steps(1, n_active)
             for i, s in enumerate(self._slots):
                 if s is None:
@@ -700,7 +779,8 @@ class LocalJaxEngine(InferenceEngine):
                  max_len: int = 256, devices: Any = None,
                  max_prefills_per_step: int = 0,
                  kv_page_size: int = 0, prefix_cache: bool = True,
-                 page_pool: int = 0, fault_plan: Any = None):
+                 page_pool: int = 0, page_pool_bytes: int = 0,
+                 kv_cache_dtype: str = "bf16", fault_plan: Any = None):
         self.model_cfg = model
         self.n_slots = n_slots
         self.max_len = max_len
@@ -715,6 +795,12 @@ class LocalJaxEngine(InferenceEngine):
         #: 0 = auto-sized pool (worst case, never exhausts); > 0 pins the
         #: pool small enough that decode pressure triggers preemption
         self.page_pool = page_pool
+        #: byte-budgeted alternative to ``page_pool`` (pages = budget //
+        #: page bytes, scale buffers included)
+        self.page_pool_bytes = page_pool_bytes
+        #: "bf16" = full-precision pool pages; "int8" = absmax-quantized
+        #: pages + scales, dequantized at the decode gather (DESIGN.md §10)
+        self.kv_cache_dtype = kv_cache_dtype
         self._fault_plan = fault_plan
         self.fault_replica = fault_plan.attach() if fault_plan is not None else 0
         self.initialized = False
@@ -763,7 +849,8 @@ class LocalJaxEngine(InferenceEngine):
             max_prefills_per_step=self.max_prefills_per_step,
             device=device, rules=rules,
             page_size=self.kv_page_size, prefix_cache=self.prefix_cache,
-            page_pool=self.page_pool,
+            page_pool=self.page_pool, page_pool_bytes=self.page_pool_bytes,
+            kv_cache_dtype=self.kv_cache_dtype,
         )
         if self._fault_plan is not None:
             self._scheduler.fault_hook = self._fault_plan.as_hook(

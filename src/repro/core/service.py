@@ -348,9 +348,14 @@ def aggregate_batcher_stats(parts: Sequence[dict]) -> dict:
             "n_slots", "steps", "admissions", "completions",
             "tokens_generated", "active_slot_steps", "prefill_recompiles",
             "prefills_deferred", "prefix_pages_hit", "prefix_tokens_saved",
-            "cow_copies", "preemptions", "preempted_tokens",
+            "cow_copies", "preemptions", "preempted_tokens", "pool_pages",
         )
     }
+    # a rate, not a counter: replicas of one config share it, so take max
+    # (0 only when no replica runs a paged cache)
+    agg["kv_bytes_per_token"] = max(
+        (p.get("kv_bytes_per_token", 0) for p in parts), default=0
+    )
     cap = sum(p.get("steps", 0) * p.get("n_slots", 0) for p in parts)
     agg["slot_occupancy"] = round(
         agg["active_slot_steps"] / cap if cap else 0.0, 4

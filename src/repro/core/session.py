@@ -179,6 +179,8 @@ class EvalSession:
             kw.setdefault("kv_page_size", inf.kv_page_size)
             if not inf.prefix_cache:
                 kw.setdefault("prefix_cache", False)
+            if inf.kv_cache_dtype != "bf16":
+                kw.setdefault("kv_cache_dtype", inf.kv_cache_dtype)
 
     def service_for(
         self, model: EngineModelConfig, inf: InferenceConfig

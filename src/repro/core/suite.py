@@ -371,9 +371,9 @@ class SuiteResult:
                 "| engine | mode | replicas | submitted | dispatched "
                 "| coalesced | dedup | occupancy | tok/step | admissions "
                 "| recompiles | prefix hits | prefix tok saved "
-                "| preempt | restarts | hedges |"
+                "| kv B/tok | preempt | restarts | hedges |"
             )
-            lines.append("|---" * 16 + "|")
+            lines.append("|---" * 17 + "|")
             for s in serving:
                 b = s.get("batcher") or {}
                 lines.append(
@@ -388,6 +388,7 @@ class SuiteResult:
                     f"| {b.get('prefill_recompiles', '—')} "
                     f"| {b.get('prefix_pages_hit', '—')} "
                     f"| {b.get('prefix_tokens_saved', '—')} "
+                    f"| {b.get('kv_bytes_per_token', '—')} "
                     f"| {b.get('preemptions', '—')} "
                     f"| {s.get('restarts', 0)} "
                     f"| {s.get('hedges_issued', 0)}/{s.get('hedges_won', 0)} |"

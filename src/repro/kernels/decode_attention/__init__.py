@@ -2,22 +2,44 @@ from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ops import (
     decode_attention_bshd,
     paged_decode_attention_bshd,
+    quant_paged_decode_attention_bshd,
 )
 from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.paged_quant import (
+    quant_paged_decode_attention,
+)
+from repro.kernels.decode_attention.quant import (
+    absmax_dequantize,
+    absmax_quantize,
+    dequantize_pages,
+    kv_page_bytes,
+    quantize_pages,
+)
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     gather_pages_ref,
     paged_decode_attention_blocked_ref,
     paged_decode_attention_ref,
+    quant_paged_decode_attention_blocked_ref,
+    quant_paged_decode_attention_ref,
 )
 
 __all__ = [
+    "absmax_dequantize",
+    "absmax_quantize",
     "decode_attention",
     "decode_attention_bshd",
     "decode_attention_ref",
+    "dequantize_pages",
     "gather_pages_ref",
+    "kv_page_bytes",
     "paged_decode_attention",
     "paged_decode_attention_bshd",
     "paged_decode_attention_blocked_ref",
     "paged_decode_attention_ref",
+    "quant_paged_decode_attention",
+    "quant_paged_decode_attention_blocked_ref",
+    "quant_paged_decode_attention_bshd",
+    "quant_paged_decode_attention_ref",
+    "quantize_pages",
 ]

@@ -13,6 +13,9 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.paged import paged_decode_attention
+from repro.kernels.decode_attention.paged_quant import (
+    quant_paged_decode_attention,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -57,6 +60,33 @@ def paged_decode_attention_bshd(
     vt = jnp.transpose(v_pages, (0, 2, 1, 3))
     out = paged_decode_attention(
         qg, kt, vt, page_tables, (positions + 1).astype(jnp.int32),
+        scale=scale, interpret=interpret,
+    )
+    return out.reshape(b, 1, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def quant_paged_decode_attention_bshd(
+    q: jax.Array,            # (B, 1, H, d)
+    k_pages: jax.Array,      # (P, ps, K, d) int8 — pool pages, model layout
+    v_pages: jax.Array,      # (P, ps, K, d) int8
+    k_scales: jax.Array,     # (P, K) f32 per-(page, head) absmax scales
+    v_scales: jax.Array,     # (P, K) f32
+    page_tables: jax.Array,  # (B, nP) int32
+    positions: jax.Array,    # (B,) — position of the *current* token
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kh = k_pages.shape[2]
+    g = h // kh
+    qg = q[:, 0].reshape(b, kh, g, d)
+    kt = jnp.transpose(k_pages, (0, 2, 1, 3))
+    vt = jnp.transpose(v_pages, (0, 2, 1, 3))
+    out = quant_paged_decode_attention(
+        qg, kt, vt, k_scales, v_scales, page_tables,
+        (positions + 1).astype(jnp.int32),
         scale=scale, interpret=interpret,
     )
     return out.reshape(b, 1, h, d)

@@ -1,0 +1,155 @@
+"""Quantized paged GQA decode-attention Pallas TPU kernel.
+
+Identical gather/online-softmax structure to ``paged.py``, but the pool
+pages arrive as **int8** with per-(page, head) f32 scales
+(``quant.quantize_pages``) and are dequantized *inside the kernel body*:
+the page table gather moves int8 bytes HBM -> VMEM, the scale rides in a
+``(1, 1)`` block selected by the same prefetched table entry, and the
+``q * s`` dequant happens on the VPU right before the MXU contractions.
+Full-precision K/V therefore never materialize in HBM — the bandwidth
+(and the pool residency) of the paged decode path halves.
+
+* grid = (B, K, nP), page axis innermost (sequential on TPU) so the
+  online-softmax scratch survives across one sequence's pages;
+* scales use the same padding convention as the tables: padding entries
+  address pool page 0, whose scale is live data — the length mask zeroes
+  the padded positions' contribution exactly, so the fetched-but-masked
+  scale value is irrelevant;
+* the dequantized tile is (page_size, d) f32 in VMEM/registers only —
+  the int8 -> f32 widening is per-tile, never per-pool.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _quant_paged_kernel(
+    tables_ref,    # SMEM (B, nP) int32 — scalar prefetch
+    lengths_ref,   # SMEM (B,) int32 — scalar prefetch
+    q_ref,         # (1, 1, G, d)
+    k_ref,         # (1, 1, ps, d) int8 — pool page selected by index map
+    v_ref,         # (1, 1, ps, d) int8
+    k_scale_ref,   # (1, 1) f32 — per-(page, head) absmax scale
+    v_scale_ref,   # (1, 1) f32
+    o_ref,         # (1, 1, G, d)
+    m_ref,         # VMEM (G, 1) f32
+    l_ref,         # VMEM (G, 1) f32
+    acc_ref,       # VMEM (G, d) f32
+    *,
+    scale: float,
+    page_size: int,
+    n_pages: int,
+):
+    b = pl.program_id(0)
+    i_p = pl.program_id(2)
+
+    @pl.when(i_p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    # in-kernel dequant: int8 page tile * its (page, head) scale
+    k = k_ref[0, 0].astype(jnp.float32) * k_scale_ref[0, 0]  # (ps, d)
+    v = v_ref[0, 0].astype(jnp.float32) * v_scale_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, ps)
+
+    length = lengths_ref[b]
+    pos = i_p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[:, 0] = m_new
+
+    @pl.when(i_p == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-37)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def quant_paged_decode_attention(
+    q: jax.Array,         # (B, K, G, d)
+    k_pages: jax.Array,   # (P, K, ps, d) int8 — quantized page pool
+    v_pages: jax.Array,   # (P, K, ps, d) int8
+    k_scales: jax.Array,  # (P, K) f32 — per-(page, head) absmax scales
+    v_scales: jax.Array,  # (P, K) f32
+    page_tables: jax.Array,  # (B, nP) int32 — pool index per sequence page
+    lengths: jax.Array,   # (B,) int32 — valid token count per sequence
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kh, g, d = q.shape
+    p_pool, kh2, page_size, d2 = k_pages.shape
+    assert (kh2, d2) == (kh, d), (k_pages.shape, q.shape)
+    assert k_scales.shape == (p_pool, kh), (k_scales.shape, k_pages.shape)
+    assert page_tables.shape[0] == b, (page_tables.shape, b)
+    n_pages = page_tables.shape[1]
+    if scale is None:
+        scale = d**-0.5
+
+    kernel = functools.partial(
+        _quant_paged_kernel, scale=scale, page_size=page_size, n_pages=n_pages
+    )
+    page_spec = pl.BlockSpec(
+        (1, 1, page_size, d),
+        lambda b_, k_, ip_, tabs, lens: (tabs[b_, ip_], k_, 0, 0),
+    )
+    scale_spec = pl.BlockSpec(
+        (1, 1), lambda b_, k_, ip_, tabs, lens: (tabs[b_, ip_], k_)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, n_pages),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, d), lambda b_, k_, ip_, tabs, lens: (b_, k_, 0, 0)
+            ),
+            page_spec,
+            page_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, k_, ip_, tabs, lens: (b_, k_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(
+        page_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+        k_scales.astype(jnp.float32),
+        v_scales.astype(jnp.float32),
+    )

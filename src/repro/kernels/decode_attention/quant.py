@@ -1,0 +1,100 @@
+"""Symmetric absmax int8 block quantization for paged KV storage.
+
+One quantization group per **(page, kv head)**: the scale is the absmax
+over that head's ``(page_size, head_dim)`` tile divided by 127, stored
+as f32 alongside the int8 page.  Chosen over finer granularities because
+the scale buffer must stay negligible next to the page payload — at
+``(P, K)`` f32 scales the overhead is ``4 / (page_size * head_dim)`` of
+the bf16 payload (~0.4% at 16x64) — and over coarser ones because a
+single outlier head must not crush every other head's resolution.
+
+Properties the serving stack depends on:
+
+* **deterministic** — round-half-to-even on ``x / scale``; quantized
+  bytes are a pure function of the page's float content, so shared pages
+  are shared quantized bytes and replica count / routing / crash-resume
+  never change a stored byte at fixed dtype;
+* **zero-safe** — an all-zero group gets scale 1.0 (not 0), so
+  dequantization never divides by or multiplies NaNs out of empty pages;
+* **bounded** — round-trip error per element is at most ``scale / 2 =
+  absmax / 254`` of its group (tested by hypothesis in
+  ``tests/test_paged_cache.py``).
+
+The generic ``absmax_quantize`` / ``absmax_dequantize`` pair works on any
+layout given the group axes; ``quantize_pages`` fixes the kernel-suite
+pool layout ``(P, K, page_size, d)`` -> scales ``(P, K)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: int8 symmetric range: [-127, 127] (avoid -128 so negation is closed)
+QMAX = 127.0
+
+
+def kv_page_bytes(page_size, kv_heads, head_dim, n_layers, kv_cache_dtype="bf16"):
+    """Bytes per KV page — canonical formula lives with the host-side pool
+    accounting in :func:`repro.serve.paged_cache.kv_page_bytes`; deferred
+    import because the scheduler (pulled in by ``repro.serve``) imports
+    this module at load time."""
+    from repro.serve.paged_cache import kv_page_bytes as _impl
+
+    return _impl(page_size, kv_heads, head_dim, n_layers, kv_cache_dtype)
+
+
+def _norm_axes(ndim: int, axes: tuple[int, ...]) -> tuple[int, ...]:
+    return tuple(sorted(a % ndim for a in axes))
+
+
+def absmax_quantize(
+    x: jax.Array,
+    group_axes: tuple[int, ...],
+    *,
+    mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` to int8 with one f32 scale per quantization group.
+
+    ``group_axes`` are reduced away in the scale (one scale per remaining
+    index).  ``mask`` (broadcastable to ``x``) zeroes elements *before*
+    the absmax and the store — used to keep stale rows of a partially
+    filled page out of both the scale and the stored bytes, so quantized
+    content is a pure function of the valid token history.
+    """
+    axes = _norm_axes(x.ndim, group_axes)
+    xf = x.astype(jnp.float32)
+    if mask is not None:
+        xf = jnp.where(mask, xf, 0.0)
+    absmax = jnp.max(jnp.abs(xf), axis=axes)
+    scale = jnp.where(absmax > 0.0, absmax / QMAX, 1.0)
+    q = jnp.round(xf / jnp.expand_dims(scale, axes))
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def absmax_dequantize(
+    q: jax.Array,
+    scale: jax.Array,
+    group_axes: tuple[int, ...],
+    *,
+    dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Inverse of :func:`absmax_quantize` (up to rounding)."""
+    axes = _norm_axes(q.ndim, group_axes)
+    return (
+        q.astype(jnp.float32) * jnp.expand_dims(scale, axes)
+    ).astype(dtype)
+
+
+def quantize_pages(pages: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Kernel-suite pool layout: ``(P, K, ps, d)`` -> int8 pages plus
+    ``(P, K)`` f32 scales (one group per page per KV head)."""
+    return absmax_quantize(pages, (2, 3))
+
+
+def dequantize_pages(
+    q_pages: jax.Array, scales: jax.Array, *, dtype: jnp.dtype = jnp.float32
+) -> jax.Array:
+    """Inverse of :func:`quantize_pages`."""
+    return absmax_dequantize(q_pages, scales, (2, 3), dtype=dtype)

@@ -1,11 +1,13 @@
-"""Pure-jnp oracles for the GQA decode-attention kernels (contiguous
-and paged), including a blocked paged oracle that mirrors the kernel's
-page-at-a-time online-softmax recurrence."""
+"""Pure-jnp oracles for the GQA decode-attention kernels (contiguous,
+paged, and int8-quantized paged), including blocked oracles that mirror
+the kernels' page-at-a-time online-softmax recurrence."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.decode_attention.quant import dequantize_pages
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -84,6 +86,72 @@ def paged_decode_attention_blocked_ref(
     for i_p in range(n_p):
         k = k_pages[page_tables[:, i_p]].astype(jnp.float32)  # (B, K, ps, d)
         v = v_pages[page_tables[:, i_p]].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bksd->bkgs", qf, k) * scale
+        pos = i_p * ps + jnp.arange(ps)[None, None, None, :]
+        s = jnp.where(pos < lengths[:, None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgs,bksd->bkgd", p, v)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.astype(q.dtype)
+
+
+def quant_paged_decode_attention_ref(
+    q: jax.Array,         # (B, K, G, d)
+    k_pages: jax.Array,   # (P, K, ps, d) int8
+    v_pages: jax.Array,   # (P, K, ps, d) int8
+    k_scales: jax.Array,  # (P, K) f32
+    v_scales: jax.Array,  # (P, K) f32
+    page_tables: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,   # (B,) int32
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense oracle: dequantize the whole pool, then run the paged
+    reference — exactly what the kernel must match, since in-kernel
+    dequant uses the same per-(page, head) scales elementwise."""
+    return paged_decode_attention_ref(
+        q,
+        dequantize_pages(k_pages, k_scales),
+        dequantize_pages(v_pages, v_scales),
+        page_tables,
+        lengths,
+        scale=scale,
+    )
+
+
+def quant_paged_decode_attention_blocked_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_scales: jax.Array,
+    v_scales: jax.Array,
+    page_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Blocked oracle: the kernel's page-at-a-time recurrence with the
+    dequant applied per gathered tile (same order of operations as the
+    kernel body: gather int8, scale, then the m/l/acc update)."""
+    b, kh, g, d = q.shape
+    ps = k_pages.shape[2]
+    n_p = page_tables.shape[1]
+    if scale is None:
+        scale = d**-0.5
+    qf = q.astype(jnp.float32)
+    m = jnp.full((b, kh, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kh, g), jnp.float32)
+    acc = jnp.zeros((b, kh, g, d), jnp.float32)
+    for i_p in range(n_p):
+        tab = page_tables[:, i_p]
+        ks = k_scales[tab][:, :, None, None]  # (B, K, 1, 1)
+        vs = v_scales[tab][:, :, None, None]
+        k = k_pages[tab].astype(jnp.float32) * ks  # (B, K, ps, d)
+        v = v_pages[tab].astype(jnp.float32) * vs
         s = jnp.einsum("bkgd,bksd->bkgs", qf, k) * scale
         pos = i_p * ps + jnp.arange(ps)[None, None, None, :]
         s = jnp.where(pos < lengths[:, None, None, None], s, NEG_INF)

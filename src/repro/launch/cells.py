@@ -13,6 +13,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as sh
@@ -51,6 +52,30 @@ def _batch_spec(rules: sh.ShardingRules, shape: tuple[int, ...]) -> NamedShardin
 
 def _replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+#: serving-default page size used to translate a dense int8 cache into the
+#: paged pool's byte accounting (repro.serve.paged_cache.kv_page_bytes)
+_QUANT_PAGE = 16
+
+
+def _cache_meta_bytes(cache_specs: PyTree, cache_dtype: Any) -> int:
+    """Cache HBM bytes for the cell meta, reconciled with the serving pool.
+
+    ``pm.param_bytes`` counts stored elements only.  An ``int8`` cache in
+    the real serving stack additionally stores one f32 absmax scale per
+    (16-position page, head row) group — the grouping
+    :func:`repro.serve.paged_cache.kv_page_bytes` charges the byte-budgeted
+    pool for — so the analytical serve cells report the same bytes as the
+    batcher instead of an optimistic payload-only count."""
+    total = pm.param_bytes(cache_specs)
+    if cache_dtype is not None and np.dtype(cache_dtype) == np.int8:
+        for leaf in jax.tree.leaves(cache_specs):
+            rows = 1
+            for dim in leaf.shape[:-1]:  # every axis but the head row
+                rows *= dim
+            total += -(-rows // _QUANT_PAGE) * 4
+    return total
 
 
 def input_specs(
@@ -208,7 +233,7 @@ def _build_prefill_cell(
         meta={
             "params": pm.param_count(specs),
             "param_bytes": pm.param_bytes(specs),
-            "cache_bytes": pm.param_bytes(cache_specs),
+            "cache_bytes": _cache_meta_bytes(cache_specs, cache_dtype),
             "tokens_per_step": scfg.tokens
             - (cfg.n_vision_tokens * scfg.global_batch if cfg.family == "vlm" else 0),
         },
@@ -255,7 +280,7 @@ def _build_decode_cell(
         meta={
             "params": pm.param_count(specs),
             "param_bytes": pm.param_bytes(specs),
-            "cache_bytes": pm.param_bytes(cache_specs),
+            "cache_bytes": _cache_meta_bytes(cache_specs, cache_dtype),
             "tokens_per_step": scfg.global_batch,
         },
     )

@@ -167,8 +167,10 @@ def main():
         ))
         records.append(run_iteration(
             "deepseek-decode/2-ep2d+int8",
-            "int8 weight+cache storage halves remaining HBM reads; decode is "
-            "pure memory-bound so the bound should halve again",
+            "int8 weight+cache storage halves remaining HBM reads (cache "
+            "bytes charge the serving pool's per-page f32 absmax scales too "
+            "-- <1% overhead, repro.serve kv_page_bytes); decode is pure "
+            "memory-bound so the bound should halve again",
             arch, shape, mesh, rules_variant="serve_ep2d",
             weights_dtype=jnp.int8, cache_dtype=jnp.int8,
         ))

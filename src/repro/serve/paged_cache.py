@@ -48,6 +48,43 @@ class PagePoolExhausted(RuntimeError):
     allocation failure kill the whole replica (DESIGN.md §9)."""
 
 
+def kv_page_bytes(
+    page_size: int,
+    kv_heads: int,
+    head_dim: int,
+    n_layers: int,
+    kv_cache_dtype: str = "bf16",
+) -> int:
+    """HBM bytes one KV page costs, **including** the scale buffer.
+
+    K and V each store ``n_layers * kv_heads * page_size * head_dim``
+    elements per page; ``"int8"`` stores them as one byte each plus one
+    f32 absmax scale per (layer, kv head, K/V) per page (DESIGN.md §10).
+    This single formula is shared by the real batcher's byte-budgeted
+    pool sizing, the slot simulator, and the analytical serve cells
+    (``launch/cells.py``), so benchmark capacity ratios and napkin math
+    agree by construction.
+    """
+    elems = 2 * n_layers * kv_heads * page_size * head_dim  # K + V
+    if kv_cache_dtype == "int8":
+        return elems + 2 * n_layers * kv_heads * 4  # payload + f32 scales
+    if kv_cache_dtype == "bf16":
+        return elems * 2
+    raise ValueError(
+        f"kv_cache_dtype must be 'bf16' or 'int8', got {kv_cache_dtype!r}"
+    )
+
+
+def pages_for_budget(pool_bytes: int, page_bytes: int) -> int:
+    """Pages a byte budget admits; raises if it cannot hold even one."""
+    n = pool_bytes // page_bytes
+    if n <= 0:
+        raise ValueError(
+            f"pool budget {pool_bytes} B below one page ({page_bytes} B)"
+        )
+    return n
+
+
 def page_hash_chain(tokens: Sequence, page_size: int) -> list[bytes]:
     """One digest per *full* page; ``h_i`` commits to ``tokens[:(i+1)*ps]``."""
     chain: list[bytes] = []
@@ -101,6 +138,7 @@ class PagedCacheManager:
         page_size: int,
         *,
         prefix_cache: bool = True,
+        page_bytes: int = 0,
     ):
         if page_size <= 0:
             raise ValueError(f"page_size must be positive, got {page_size}")
@@ -109,6 +147,11 @@ class PagedCacheManager:
         self.n_pages = n_pages
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        #: HBM bytes one page costs *including* its quantization-scale
+        #: buffer (0 = caller never asked for byte accounting).  Pure
+        #: metadata: allocation is in pages; bytes exist so pool budgets,
+        #: leak checks and ``kv_bytes_per_token`` stats agree on one number.
+        self.page_bytes = page_bytes
         self._free: list[int] = list(range(n_pages - 1, -1, -1))
         self._ref = [0] * n_pages
         #: page id -> chain hash for indexed pages (and the reverse map)
@@ -132,6 +175,27 @@ class PagedCacheManager:
     @property
     def pages_active(self) -> int:
         return self.n_pages - len(self._free) - len(self._cached)
+
+    @property
+    def pool_bytes(self) -> int:
+        return self.n_pages * self.page_bytes
+
+    @property
+    def bytes_free(self) -> int:
+        return self.pages_free * self.page_bytes
+
+    @property
+    def bytes_cached(self) -> int:
+        return self.pages_cached * self.page_bytes
+
+    @property
+    def bytes_active(self) -> int:
+        return self.pages_active * self.page_bytes
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """Bytes one cached token costs, scale buffer included."""
+        return self.page_bytes // self.page_size
 
     def refcount(self, page_id: int) -> int:
         return self._ref[page_id]
@@ -292,3 +356,9 @@ class PagedCacheManager:
             raise AssertionError(f"leaked pages with nonzero refcount: {held}")
         if len(self._free) + len(self._cached) != self.n_pages:
             raise AssertionError("free + cached does not cover the pool")
+        if self.bytes_free + self.bytes_cached + self.bytes_active \
+                != self.pool_bytes:
+            raise AssertionError(
+                "byte partition (free + cached + active) does not cover "
+                "the pool budget — scale-buffer bytes miscounted"
+            )

@@ -37,9 +37,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.engines import BatcherStats
+from repro.kernels.decode_attention.quant import absmax_quantize
 from repro.models.params import init_params, is_spec
 from repro.serve import steps as steps_lib
-from repro.serve.paged_cache import PagedCacheManager, PagePoolExhausted
+from repro.serve.paged_cache import (
+    PagedCacheManager,
+    PagePoolExhausted,
+    pages_for_budget,
+)
 from repro.sharding import ShardingRules, use_rules
 
 PyTree = Any
@@ -102,6 +107,58 @@ def paged_pool_specs(
     return jax.tree.map(to_pool, cache_specs, is_leaf=is_spec)
 
 
+def _pool_rest_shape(spec) -> tuple[int, ...]:
+    """Leaf dims other than (pages, page row), in normalized order — what
+    the moveaxis helpers see as the trailing ``...`` of ``(P, ps, ...)``."""
+    ax = spec.axes.index("kv_pages" if "kv_pages" in spec.axes else "batch")
+    return tuple(
+        d for i, d in enumerate(spec.shape) if i not in (ax, ax + 1)
+    )
+
+
+def paged_scale_specs(pool_specs: PyTree) -> PyTree:
+    """Per-page quantization-scale specs for an int8 pool: one f32 scale
+    per (page, *rest[:-1]) group — the trailing axis (head_dim) and the
+    page-row axis are reduced away by the absmax.  Stored pre-normalized
+    as ``(P, ...)`` so the movement helpers index them without moveaxis.
+    Init is "ones", matching the all-zero-group convention of
+    ``absmax_quantize`` (zero bytes at scale 1.0 dequantize to exact 0)."""
+
+    def to_scale(spec):
+        ax = spec.axes.index("kv_pages")
+        rest = _pool_rest_shape(spec)
+        rest_axes = tuple(
+            a for i, a in enumerate(spec.axes) if i not in (ax, ax + 1)
+        )
+        return dataclasses.replace(
+            spec,
+            shape=(spec.shape[ax],) + rest[:-1],
+            axes=("kv_pages",) + rest_axes[:-1],
+            dtype=jnp.float32,
+            init="ones",
+        )
+
+    return jax.tree.map(to_scale, pool_specs, is_leaf=is_spec)
+
+
+def paged_page_bytes(
+    cache_specs: PyTree, page_size: int, kv_cache_dtype: str
+) -> int:
+    """HBM bytes one pool page costs across every cache leaf, including
+    the f32 scale buffer in int8 mode (the spec-tree counterpart of
+    ``paged_cache.kv_page_bytes``, exact for any leaf layout)."""
+    total = 0
+    for spec in jax.tree.leaves(cache_specs, is_leaf=is_spec):
+        rest = _pool_rest_shape(spec)
+        elems = page_size * int(np.prod(rest)) if rest else page_size
+        if kv_cache_dtype == "int8":
+            total += elems  # one byte per element
+            total += int(np.prod(rest[:-1])) * 4 if rest else 4  # f32 scales
+        else:
+            total += elems * jnp.dtype(spec.dtype).itemsize
+    return total
+
+
 class ContinuousBatcher:
     """Slot-multiplexed decode loop around jitted prefill/decode steps."""
 
@@ -123,6 +180,8 @@ class ContinuousBatcher:
         page_size: int = 0,
         prefix_cache: bool = True,
         page_pool: int = 0,
+        kv_cache_dtype: str = "bf16",
+        page_pool_bytes: int = 0,
     ):
         self.model, self.cfg, self.params = model, cfg, params
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
@@ -141,6 +200,21 @@ class ContinuousBatcher:
         self.prefix = cfg.n_vision_tokens if cfg.family == "vlm" else 0
         #: 0 = contiguous per-slot cache; > 0 = paged pool with this page size
         self.page_size = page_size
+        #: "bf16" = full-precision pool pages (the pre-quantization path);
+        #: "int8" = absmax block-quantized pages + per-(page, head) scales,
+        #: dequantized in-kernel / at gather time (DESIGN.md §10)
+        if kv_cache_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_cache_dtype must be 'bf16' or 'int8', got "
+                f"{kv_cache_dtype!r}"
+            )
+        if kv_cache_dtype == "int8" and not page_size:
+            raise ValueError(
+                "kv_cache_dtype='int8' requires a paged cache (page_size > 0)"
+            )
+        self.kv_cache_dtype = kv_cache_dtype
+        self.quantized = kv_cache_dtype == "int8"
+        self.scales: PyTree | None = None
 
         cache_specs = model.cache_specs(n_slots, max_len, cache_dtype)
         self._batch_axes = batch_axis_tree(cache_specs)
@@ -170,13 +244,38 @@ class ContinuousBatcher:
             #: pressure then triggers preemption instead of death.  One
             #: extra trailing page absorbs decode writes from inactive
             #: slots (their stale positions must scatter *somewhere* valid)
-            n_pool = page_pool or (n_slots * self.pages_per_slot + n_slots)
+            self._page_bytes = paged_page_bytes(
+                cache_specs, page_size, kv_cache_dtype
+            )
+            if page_pool_bytes:
+                if page_pool:
+                    raise ValueError(
+                        "page_pool and page_pool_bytes are mutually exclusive"
+                    )
+                #: byte-budgeted pool: same HBM budget admits ~2x pages at
+                #: int8 — this is where quantization buys capacity
+                n_pool = pages_for_budget(page_pool_bytes, self._page_bytes)
+            else:
+                n_pool = page_pool or (n_slots * self.pages_per_slot + n_slots)
             self._trash_page = n_pool
             self.manager = PagedCacheManager(
-                n_pool, page_size, prefix_cache=prefix_cache
+                n_pool, page_size, prefix_cache=prefix_cache,
+                page_bytes=self._page_bytes,
             )
             pool_specs = paged_pool_specs(cache_specs, n_pool + 1, page_size)
-            self.cache = init_params(jax.random.key(0), pool_specs)
+            if self.quantized:
+                pool_specs = jax.tree.map(
+                    lambda s: dataclasses.replace(
+                        s, dtype=jnp.int8, init="zeros"
+                    ),
+                    pool_specs, is_leaf=is_spec,
+                )
+                self.cache = init_params(jax.random.key(0), pool_specs)
+                self.scales = init_params(
+                    jax.random.key(0), paged_scale_specs(pool_specs)
+                )
+            else:
+                self.cache = init_params(jax.random.key(0), pool_specs)
         else:
             self.cache = init_params(jax.random.key(0), cache_specs)
         if rules is not None:
@@ -189,6 +288,8 @@ class ContinuousBatcher:
         elif device is not None:
             self.params = jax.device_put(self.params, device)
             self.cache = jax.device_put(self.cache, device)
+            if self.scales is not None:
+                self.scales = jax.device_put(self.scales, device)
         row_specs = model.cache_specs(1, max_len, cache_dtype)
         self._row_specs = row_specs
 
@@ -201,12 +302,20 @@ class ContinuousBatcher:
                 ),
                 static_argnums=(3,),
             )
-            self._paged_decode = jax.jit(self._paged_decode_impl)
-            self._read_prefix = jax.jit(self._read_prefix_impl)
-            self._write_pages = jax.jit(
-                self._write_pages_impl, static_argnums=(3,)
-            )
-            self._copy_page = jax.jit(self._copy_page_impl)
+            if self.quantized:
+                self._paged_decode_q = jax.jit(self._paged_decode_q_impl)
+                self._read_prefix_q = jax.jit(self._read_prefix_q_impl)
+                self._write_pages_q = jax.jit(
+                    self._write_pages_q_impl, static_argnums=(4,)
+                )
+                self._copy_page_q = jax.jit(self._copy_page_q_impl)
+            else:
+                self._paged_decode = jax.jit(self._paged_decode_impl)
+                self._read_prefix = jax.jit(self._read_prefix_impl)
+                self._write_pages = jax.jit(
+                    self._write_pages_impl, static_argnums=(3,)
+                )
+                self._copy_page = jax.jit(self._copy_page_impl)
         else:
             self._prefill = jax.jit(
                 lambda params, batch, cache: model.prefill(params, batch, cache)
@@ -227,6 +336,9 @@ class ContinuousBatcher:
         #: occupancy/throughput counters for the persistent streaming mode
         #: (surfaced through the InferenceService into session accounting)
         self.stats = BatcherStats(n_slots=n_slots)
+        if page_size:
+            self.stats.kv_bytes_per_token = self._page_bytes // page_size
+            self.stats.pool_pages = self.manager.n_pages
         #: prompt shapes already compiled: lengths in contiguous mode,
         #: (shared_prefix, suffix_len) pairs in paged mode
         self._seen_prefill_shapes: set = set()
@@ -331,6 +443,163 @@ class ContinuousBatcher:
         pools = jax.tree.map(scatter, pools, view, self._batch_axes)
         return logits, pools
 
+    # -- quantized paged movement (kv_cache_dtype == "int8") ---------------------
+    #
+    # Same normalized (pages, page_size, ...) layout as above, but pool
+    # leaves hold int8 bytes and the separate ``self.scales`` tree holds
+    # one f32 absmax scale per (page, *rest[:-1]) group — the page-row and
+    # head_dim axes are the reduced ones.  Dequantization happens at
+    # gather time; every write re-quantizes from full-precision values
+    # with stale rows masked to zero, so stored bytes are a pure function
+    # of the valid token history (the fixed-dtype determinism contract).
+
+    @staticmethod
+    def _expand_scale(s: jax.Array) -> jax.Array:
+        """(n, *rest[:-1]) scale -> broadcastable over (n, ps, *rest)."""
+        return jnp.expand_dims(s, (1, s.ndim + 1))
+
+    def _map_pool_scale(self, fn, pools, scales, extra=None):
+        """Map ``fn(pool, scale, extra, ax) -> (pool', scale')`` over the
+        cache trees, unzipping the per-leaf pairs back into two trees."""
+        p_leaves, tdef = jax.tree.flatten(pools)
+        s_leaves = tdef.flatten_up_to(scales)
+        a_leaves = tdef.flatten_up_to(self._batch_axes)
+        e_leaves = (
+            tdef.flatten_up_to(extra) if extra is not None
+            else [None] * len(p_leaves)
+        )
+        pairs = [
+            fn(p, s, e, a)
+            for p, s, e, a in zip(p_leaves, s_leaves, e_leaves, a_leaves)
+        ]
+        return (
+            tdef.unflatten([p for p, _ in pairs]),
+            tdef.unflatten([s for _, s in pairs]),
+        )
+
+    def _read_prefix_q_impl(
+        self, row: PyTree, pools: PyTree, scales: PyTree, shared_ids: jax.Array
+    ) -> PyTree:
+        """Quantized twin of ``_read_prefix_impl``: dequantize the shared
+        prefix pages while gathering them into the full-precision row."""
+
+        def read(r, pool, sc, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            deq = p[shared_ids].astype(jnp.float32) * self._expand_scale(
+                sc[shared_ids]
+            )
+            pref = deq.reshape((-1,) + p.shape[2:])
+            rr = jnp.moveaxis(r, (ax, ax + 1), (0, 1))
+            rr = rr.at[0, : pref.shape[0]].set(pref.astype(rr.dtype))
+            return jnp.moveaxis(rr, (0, 1), (ax, ax + 1))
+
+        return jax.tree.map(read, row, pools, scales, self._batch_axes)
+
+    def _write_pages_q_impl(
+        self,
+        pools: PyTree,
+        scales: PyTree,
+        row: PyTree,
+        fresh_ids: jax.Array,
+        start_page: int,
+        n_valid: jax.Array,
+    ) -> tuple[PyTree, PyTree]:
+        """Quantized twin of ``_write_pages_impl``: quantize the prefill's
+        fresh pages on write.  Rows past ``n_valid`` (the prompt's tail
+        inside its final, partially filled page) are masked out of both
+        the absmax and the stored bytes, so stale prefill-buffer content
+        never reaches the pool."""
+        ps = self.page_size
+        n = fresh_ids.shape[0]
+
+        def write(pool, sc, r, ax):
+            rr = jnp.moveaxis(r, (ax, ax + 1), (0, 1))
+            chunk = rr[0, start_page * ps : (start_page + n) * ps]
+            chunk = chunk.reshape((n, ps) + rr.shape[2:])
+            mask = (jnp.arange(n * ps) < n_valid).reshape(
+                (n, ps) + (1,) * (chunk.ndim - 2)
+            )
+            q, s = absmax_quantize(chunk, (1, chunk.ndim - 1), mask=mask)
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[fresh_ids].set(q)
+            return (
+                jnp.moveaxis(p, (0, 1), (ax, ax + 1)),
+                sc.at[fresh_ids].set(s),
+            )
+
+        return self._map_pool_scale(write, pools, scales, extra=row)
+
+    def _copy_page_q_impl(
+        self, pools: PyTree, scales: PyTree, src: jax.Array, dst: jax.Array
+    ) -> tuple[PyTree, PyTree]:
+        """CoW for quantized pages: bytes and scales copy verbatim — the
+        copy is bit-identical to its source, never a requantization."""
+
+        def cp(pool, sc, _e, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[dst].set(p[src])
+            return (
+                jnp.moveaxis(p, (0, 1), (ax, ax + 1)),
+                sc.at[dst].set(sc[src]),
+            )
+
+        return self._map_pool_scale(cp, pools, scales)
+
+    def _paged_decode_q_impl(
+        self,
+        params: PyTree,
+        tokens: jax.Array,
+        pools: PyTree,
+        scales: PyTree,
+        tables: jax.Array,
+        positions: jax.Array,
+        write_pages: jax.Array,
+        write_offsets: jax.Array,
+    ) -> tuple[jax.Array, PyTree, PyTree]:
+        """Quantized twin of ``_paged_decode_impl``: dequantize at gather,
+        decode on the full-precision view, then re-quantize each slot's
+        *whole* write page from the updated view (valid rows only — the
+        new token and everything before it in that page).  The page scale
+        tracks its absmax as tokens land, so earlier rows re-round at most
+        once per scale increase: bounded, deterministic drift that the
+        end-to-end token-match gate bounds."""
+        b = tokens.shape[0]
+        ps = self.page_size
+
+        def gather(pool, sc, ax):
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            scg = sc[tables]                        # (B, nP, *rest[:-1])
+            g = p[tables].astype(jnp.float32) * jnp.expand_dims(
+                scg, (2, scg.ndim + 1)
+            )                                       # (B, nP, ps, ...)
+            g = g.reshape((b, -1) + p.shape[2:])
+            return jnp.moveaxis(g, (0, 1), (ax, ax + 1))
+
+        view = jax.tree.map(gather, pools, scales, self._batch_axes)
+        logits, view = self._decode_fn(params, tokens, view, positions)
+
+        page_start = positions - write_offsets
+        rows = page_start[:, None] + jnp.arange(ps)[None, :]       # (B, ps)
+        rows = jnp.clip(rows, 0, self.max_len - 1)
+        valid = jnp.arange(ps)[None, :] <= write_offsets[:, None]  # (B, ps)
+
+        def scatter(pool, sc, leaf, ax):
+            v = jnp.moveaxis(leaf, (ax, ax + 1), (0, 1))  # (B, S, ...)
+            pages = v[jnp.arange(b)[:, None], rows]       # (B, ps, ...)
+            mask = valid.reshape((b, ps) + (1,) * (pages.ndim - 2))
+            q, s = absmax_quantize(pages, (1, pages.ndim - 1), mask=mask)
+            p = jnp.moveaxis(pool, (ax, ax + 1), (0, 1))
+            p = p.at[write_pages].set(q)
+            return (
+                jnp.moveaxis(p, (0, 1), (ax, ax + 1)),
+                sc.at[write_pages].set(s),
+            )
+
+        pools, scales = self._map_pool_scale(
+            scatter, pools, scales, extra=view
+        )
+        return logits, pools, scales
+
     # -- public API --------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -408,14 +677,25 @@ class ContinuousBatcher:
                 shared = jnp.asarray(
                     match.page_ids[: match.n_shared_pages], jnp.int32
                 )
-                row = self._read_prefix(row, self.cache, shared)
+                if self.quantized:
+                    row = self._read_prefix_q(
+                        row, self.cache, self.scales, shared
+                    )
+                else:
+                    row = self._read_prefix(row, self.cache, shared)
             logits, row = self._prefill(self.params, batch, row, start)
             fresh = jnp.asarray(
                 match.page_ids[match.n_shared_pages :], jnp.int32
             )
-            self.cache = self._write_pages(
-                self.cache, row, fresh, match.n_shared_pages
-            )
+            if self.quantized:
+                self.cache, self.scales = self._write_pages_q(
+                    self.cache, self.scales, row, fresh,
+                    match.n_shared_pages, len(ptoks) - start,
+                )
+            else:
+                self.cache = self._write_pages(
+                    self.cache, row, fresh, match.n_shared_pages
+                )
             first_tok = int(
                 jax.device_get(
                     steps_lib.greedy_sample(logits, self.cfg.vocab_size)
@@ -568,9 +848,14 @@ class ContinuousBatcher:
                 if pw.cow_src is not None:
                     # defensive: unreachable while sharing stops short of
                     # the final prompt token (see paged_cache docstring)
-                    self.cache = self._copy_page(
-                        self.cache, pw.cow_src, pw.page_id
-                    )
+                    if self.quantized:
+                        self.cache, self.scales = self._copy_page_q(
+                            self.cache, self.scales, pw.cow_src, pw.page_id
+                        )
+                    else:
+                        self.cache = self._copy_page(
+                            self.cache, pw.cow_src, pw.page_id
+                        )
                     self.stats.cow_copies += 1
                 write_pages[slot] = pw.page_id
                 write_offsets[slot] = pw.offset
@@ -619,7 +904,13 @@ class ContinuousBatcher:
             self.stats.tokens_generated += len(active)
             tokens = jnp.asarray(self.cur_tokens)
             positions = jnp.asarray(self.slot_pos)
-            if self.page_size:
+            if self.page_size and self.quantized:
+                logits, self.cache, self.scales = self._paged_decode_q(
+                    self.params, tokens, self.cache, self.scales,
+                    jnp.asarray(tables), positions,
+                    jnp.asarray(wpages), jnp.asarray(woffs),
+                )
+            elif self.page_size:
                 logits, self.cache = self._paged_decode(
                     self.params, tokens, self.cache, jnp.asarray(tables),
                     positions, jnp.asarray(wpages), jnp.asarray(woffs),

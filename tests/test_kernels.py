@@ -9,10 +9,15 @@ from repro.kernels.bootstrap import bootstrap_means, bootstrap_means_ref
 from repro.kernels.decode_attention import (
     decode_attention,
     decode_attention_ref,
+    dequantize_pages,
     gather_pages_ref,
     paged_decode_attention,
     paged_decode_attention_blocked_ref,
     paged_decode_attention_ref,
+    quant_paged_decode_attention,
+    quant_paged_decode_attention_blocked_ref,
+    quant_paged_decode_attention_ref,
+    quantize_pages,
 )
 from repro.kernels.flash_attention import (
     flash_attention,
@@ -177,6 +182,105 @@ def test_paged_decode_padding_pages_ignored(rng):
         q, k, v, jnp.asarray([[2, 3, 5, 1]], jnp.int32), lengths, interpret=True
     )
     np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=0, rtol=0)
+
+
+def _quant_paged_case(rng, b, kh, g, n_p, ps, d, dtype, lens):
+    """Like ``_paged_case`` but the pool is int8 block-quantized: q stays
+    in ``dtype``; pages carry per-(page, head) f32 absmax scales."""
+    q, k, v, tables, lengths = _paged_case(rng, b, kh, g, n_p, ps, d, dtype, lens)
+    kq, ks = quantize_pages(jnp.asarray(k, jnp.float32))
+    vq, vs = quantize_pages(jnp.asarray(v, jnp.float32))
+    return q, kq, vq, ks, vs, tables, lengths
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize(
+    "b,kh,g,n_p,ps,d,lens",
+    [
+        # ragged lengths, mid-page offsets
+        (3, 2, 4, 4, 16, 32, [5, 33, 64]),
+        # page-boundary lengths (len % ps == 0) and a single-token sequence
+        (3, 1, 8, 4, 16, 64, [16, 48, 1]),
+        # one page per sequence
+        (2, 4, 1, 1, 32, 32, [7, 32]),
+    ],
+)
+def test_quant_paged_decode_attention(b, kh, g, n_p, ps, d, lens, dtype, rng):
+    """In-kernel dequant matches both oracles: the dense one (dequantize
+    the pool, run the paged reference) and the blocked page-at-a-time
+    recurrence with per-tile dequant."""
+    q, kq, vq, ks, vs, tables, lengths = _quant_paged_case(
+        rng, b, kh, g, n_p, ps, d, dtype, lens
+    )
+    out = quant_paged_decode_attention(
+        q, kq, vq, ks, vs, tables, lengths, interpret=True
+    )
+    dense = quant_paged_decode_attention_ref(q, kq, vq, ks, vs, tables, lengths)
+    blocked = quant_paged_decode_attention_blocked_ref(
+        q, kq, vq, ks, vs, tables, lengths
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(dense, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(blocked, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_quant_paged_close_to_full_precision(rng):
+    """int8 round-trip error is bounded (absmax/254 per element), so the
+    quantized kernel's output tracks the full-precision paged kernel
+    within a loose tolerance — the end-to-end >= 99% greedy token match
+    is gated on the real model in tests/test_quantized_serving.py."""
+    b, kh, g, n_p, ps, d = 3, 2, 4, 4, 16, 32
+    q, k, v, tables, lengths = _paged_case(
+        rng, b, kh, g, n_p, ps, d, jnp.float32, [5, 33, 64]
+    )
+    kq, ks = quantize_pages(k)
+    vq, vs = quantize_pages(v)
+    out = quant_paged_decode_attention(
+        q, kq, vq, ks, vs, tables, lengths, interpret=True
+    )
+    full = paged_decode_attention_ref(q, k, v, tables, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(full), atol=5e-2, rtol=5e-2
+    )
+
+
+def test_quant_paged_zero_pages_are_safe(rng):
+    """All-zero pages quantize with scale 1.0 (never 0), so sequences
+    whose live pages are zeros still produce finite output — and the
+    kernel agrees with the dense oracle exactly on that case."""
+    b, kh, g, n_p, ps, d = 2, 2, 4, 2, 16, 32
+    pool = b * n_p + 1
+    k = jnp.zeros((pool, kh, ps, d), jnp.float32)
+    v = jnp.zeros((pool, kh, ps, d), jnp.float32)
+    q = jnp.asarray(rng.randn(b, kh, g, d), jnp.float32)
+    kq, ks = quantize_pages(k)
+    vq, vs = quantize_pages(v)
+    assert np.all(np.asarray(ks) == 1.0) and np.all(np.asarray(vs) == 1.0)
+    tables = jnp.arange(1, pool, dtype=jnp.int32).reshape(b, n_p)
+    lengths = jnp.asarray([9, 20], jnp.int32)
+    out = quant_paged_decode_attention(
+        q, kq, vq, ks, vs, tables, lengths, interpret=True
+    )
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_quantize_pages_round_trip_exact_for_representable(rng):
+    """Pages whose entries are exact multiples of their scale survive the
+    round trip bit-exactly; dequantize_pages inverts quantize_pages."""
+    kh, ps, d = 2, 8, 16
+    scale = 0.5
+    vals = rng.randint(-127, 128, (3, kh, ps, d)).astype(np.float32) * scale
+    vals[:, :, 0, 0] = 127 * scale  # pin each group's absmax -> scale is exact
+    kq, ks = quantize_pages(jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(ks), scale, atol=0, rtol=0)
+    back = dequantize_pages(kq, ks)
+    np.testing.assert_allclose(np.asarray(back), vals, atol=0, rtol=0)
 
 
 @pytest.mark.parametrize(

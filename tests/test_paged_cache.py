@@ -1,12 +1,21 @@
 """Paged KV cache manager (ISSUE 8): hash-chain prefix matching,
 refcounted sharing, LRU eviction of cached pages, copy-on-write
-divergence, and no-leak invariants under churn."""
+divergence, and no-leak invariants under churn — plus (ISSUE 10) the
+byte-accounting layer for quantized pools: bytes-per-page formulae,
+byte-budget sizing, partition invariants, and int8 round-trip bounds."""
 
 import random
 
+import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.serve.paged_cache import PagedCacheManager, page_hash_chain
+from repro.serve.paged_cache import (
+    PagedCacheManager,
+    kv_page_bytes,
+    page_hash_chain,
+    pages_for_budget,
+)
 
 
 def _mgr(n_pages=32, page_size=4, **kw):
@@ -229,6 +238,190 @@ def test_ensure_position_cow_on_indexed_private_page():
 
 
 # -- churn stress ---------------------------------------------------------------
+
+
+# -- byte accounting (quantized pools) -------------------------------------------
+
+
+def test_kv_page_bytes_formula():
+    """bf16 pages cost 2 bytes/elem; int8 pages cost 1 byte/elem plus one
+    f32 scale per (layer, kv head, K/V) — under 1% overhead at 16x64."""
+    bf16 = kv_page_bytes(16, 8, 64, 4)
+    int8 = kv_page_bytes(16, 8, 64, 4, "int8")
+    elems = 2 * 4 * 8 * 16 * 64  # K+V x layers x heads x page x head_dim
+    assert bf16 == elems * 2 == 131072
+    assert int8 == elems + 2 * 4 * 8 * 4 == 65792
+    assert bf16 / int8 >= 1.8  # the capacity lever the benchmark gates on
+    with pytest.raises(ValueError):
+        kv_page_bytes(16, 8, 64, 4, "fp8")
+
+
+def test_pages_for_budget():
+    pb = kv_page_bytes(16, 8, 64, 4)
+    assert pages_for_budget(10 * pb, pb) == 10
+    assert pages_for_budget(10 * pb + pb - 1, pb) == 10  # floor, never round up
+    with pytest.raises(ValueError):
+        pages_for_budget(pb - 1, pb)  # budget below a single page
+
+
+def test_byte_partition_tracks_page_partition():
+    """With ``page_bytes`` set, the byte view is page counts scaled: the
+    free/cached/active partition holds in bytes at every transition and
+    check_no_leaks enforces it."""
+    m = _mgr(n_pages=8, page_size=4, page_bytes=100)
+    assert m.pool_bytes == 800
+    assert m.kv_bytes_per_token == 25
+    m.acquire("a", list(range(10)))  # 3 pages active
+    m.register("a", list(range(10)))
+    assert (m.bytes_active, m.bytes_cached, m.bytes_free) == (300, 0, 500)
+    m.release("a")  # 2 full pages park in the prefix cache
+    assert (m.bytes_active, m.bytes_cached, m.bytes_free) == (0, 200, 600)
+    assert m.bytes_free + m.bytes_cached + m.bytes_active == m.pool_bytes
+    m.check_no_leaks()
+
+
+def test_launch_cells_int8_cache_meta_matches_pool_formula():
+    """The analytical serve cells charge int8 caches the same per-page
+    f32 scale overhead as the byte-budgeted serving pool: a GQA decode
+    cell's ``cache_bytes`` meta equals pages x kv_page_bytes exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.cells import build_cell
+
+    devs = np.array(jax.devices() * 16)[:16]
+    mesh = jax.sharding.Mesh(devs.reshape(4, 4), ("data", "model"))
+    cfg = get_config("qwen3-4b")
+    scfg = SHAPES["decode_32k"]
+    assert scfg.seq_len % 16 == 0
+    cell = build_cell("qwen3-4b", "decode_32k", mesh, cache_dtype=jnp.int8)
+    pages = scfg.global_batch * (scfg.seq_len // 16)
+    assert cell.meta["cache_bytes"] == pages * kv_page_bytes(
+        16, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, "int8"
+    )
+    # and the bf16 cell sees the ~2x capacity lever the pool advertises
+    bf16 = build_cell("qwen3-4b", "decode_32k", mesh)
+    assert bf16.meta["cache_bytes"] / cell.meta["cache_bytes"] >= 1.8
+
+
+# -- int8 round-trip bounds (hypothesis + deterministic counterparts) ------------
+
+
+def _round_trip_check(vals):
+    """Shared property body: |dequant - x| <= scale/2 per group, zero
+    groups get scale 1.0 exactly."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention import absmax_dequantize, absmax_quantize
+
+    x = np.asarray(vals, np.float32).reshape(1, -1)
+    q, s = absmax_quantize(jnp.asarray(x), (1,))
+    back = np.asarray(absmax_dequantize(q, s, (1,)))
+    scale = float(np.asarray(s)[0])
+    absmax = float(np.abs(x).max())
+    if absmax == 0.0:
+        assert scale == 1.0
+        assert (back == 0.0).all()
+    else:
+        assert scale == pytest.approx(absmax / 127.0, rel=1e-6)
+        # bound: half a quantization step, plus f32 rounding headroom
+        assert np.abs(back - x).max() <= scale / 2 + 1e-6 * absmax
+
+
+@given(
+    st.lists(
+        st.floats(-1e6, 1e6, width=32, allow_nan=False, allow_infinity=False),
+        min_size=1,
+        max_size=64,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_quant_round_trip_error_bounded_property(vals):
+    """Property: for arbitrary f32 content (zeros, denormals, outliers)
+    the absmax round-trip error never exceeds half a quantization step
+    of its own group."""
+    _round_trip_check(vals)
+
+
+def test_quant_round_trip_error_bounded_examples():
+    """Deterministic counterpart: all-zero group, a single-outlier group
+    (one huge head crushing resolution elsewhere is bounded by *its own*
+    group's scale), and a plain random group."""
+    rng = np.random.RandomState(0)
+    _round_trip_check([0.0] * 16)
+    _round_trip_check([1e6] + [1e-3] * 15)
+    _round_trip_check(list(rng.randn(64)))
+
+
+def test_quant_masked_rows_excluded_from_scale_and_bytes():
+    """The write-path mask keeps stale rows out of the absmax AND the
+    stored bytes — quantized content is a pure function of valid
+    history, the determinism the serving stack's resume relies on."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention import absmax_quantize
+
+    x = np.zeros((1, 4), np.float32)
+    x[0, :2] = [1.0, -2.0]
+    stale = x.copy()
+    stale[0, 2:] = 1e6  # garbage beyond the valid prefix
+    mask = np.asarray([[True, True, False, False]])
+    q1, s1 = absmax_quantize(jnp.asarray(x), (1,), mask=jnp.asarray(mask))
+    q2, s2 = absmax_quantize(jnp.asarray(stale), (1,), mask=jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert float(np.asarray(s1)[0]) == pytest.approx(2.0 / 127.0)
+    assert (np.asarray(q1)[0, 2:] == 0).all()  # masked rows store zero bytes
+
+
+# -- churn stress ---------------------------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_byte_partition_invariant_under_churn_property(seed):
+    """Property: under arbitrary acquire/register/extend/release churn on
+    a byte-accounted (quantized-geometry) pool, free+cached+active bytes
+    always partition the pool budget exactly."""
+    _churn(random.Random(seed), page_bytes=65792)
+
+
+def _churn(rnd, page_bytes=0):
+    m = _mgr(n_pages=32, page_size=4, page_bytes=page_bytes)
+    live: dict[int, list[int]] = {}
+    headers = [[h * 1000 + t for t in range(12)] for h in range(3)]
+    for i in range(120):
+        roll = rnd.random()
+        if live and (roll < 0.35 or len(live) >= 8):
+            owner = rnd.choice(list(live))
+            m.release(owner)
+            del live[owner]
+        elif live and roll < 0.55:
+            owner = rnd.choice(list(live))
+            m.ensure_position(owner, len(live[owner]))
+            live[owner].append(i)
+        else:
+            toks = rnd.choice(headers) + [i, i + 1]
+            try:
+                m.acquire(i, toks)
+            except RuntimeError:
+                continue  # pool exhausted under churn: fine, keep going
+            m.register(i, toks)
+            live[i] = toks
+        assert m.pages_free + m.pages_cached + m.pages_active == 32
+        assert (
+            m.bytes_free + m.bytes_cached + m.bytes_active == m.pool_bytes
+        )
+    for owner in list(live):
+        m.release(owner)
+    m.check_no_leaks()
+
+
+def test_byte_partition_invariant_under_churn_examples():
+    """Deterministic counterpart of the churn property."""
+    for seed in (0, 7):
+        _churn(random.Random(seed), page_bytes=65792)
 
 
 def test_no_leaks_under_interleaved_shared_prefix_churn():

@@ -1,0 +1,284 @@
+"""Quantized paged KV cache (ISSUE 10) through the serving stack: the
+real reduced-model int8-vs-bf16 greedy token-match gate, quantized
+copy-on-write copying bytes *and* scales verbatim, byte-identical
+determinism under preemption pressure, dtype validation, and the
+simulated engine's byte-budget accounting surfaced in suite reports.
+
+The token-match workload is pinned (param seed + prompt seeds): greedy
+argmax on a random-init reduced model sits on razor-thin logit gaps, so
+the acceptable quantization noise is calibrated against this exact
+workload — changing the seeds moves the gap distribution, not the
+quantizer's quality.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (
+    EngineModelConfig,
+    EvalSession,
+    EvalSuite,
+    EvalTask,
+    InferenceConfig,
+    InferenceRequest,
+    MetricConfig,
+    SimulatedSlotEngine,
+    StatisticsConfig,
+)
+from repro.core.engines import SIM_HEAD_DIM, SIM_KV_HEADS, SIM_LAYERS
+from repro.models import params as pm
+from repro.models.model import build_model
+from repro.serve import ContinuousBatcher, Request
+from repro.serve.paged_cache import kv_page_bytes, pages_for_budget
+
+SLOT_MODEL = EngineModelConfig(provider="slotsim", model_name="slot-sim")
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen3-4b"].reduced()
+    model = build_model(cfg, remat="none")
+    params = pm.init_params(jax.random.key(1), model.param_specs())
+    return model, cfg, params
+
+
+def _workload(cfg, seed, n=10):
+    """Mixed shared-prefix + unique-tail prompts (the paged cache's
+    target regime): 10 requests, 15-23 prompt tokens, 12 new tokens."""
+    rng = np.random.default_rng(seed)
+    shared = list(rng.integers(2, cfg.vocab_size, 20))
+    reqs = []
+    for i in range(n):
+        toks = shared[: 12 + (i % 5)] + list(
+            rng.integers(2, cfg.vocab_size, 3 + i % 7)
+        )
+        reqs.append(
+            Request(i, prompt_tokens=[int(t) for t in toks], max_new_tokens=12)
+        )
+    return reqs
+
+
+def _run(model, cfg, params, reqs, **kw):
+    sched = ContinuousBatcher(
+        model, cfg, params, n_slots=4, max_len=64, eos_id=1, page_size=16,
+        **kw,
+    )
+    for r in reqs:
+        sched.submit(r)
+    done = {c.request_id: c for c in sched.run_to_completion()}
+    return sched, [done[r.request_id].tokens for r in reqs]
+
+
+# -- real-model token-match gate --------------------------------------------------
+
+
+def test_int8_greedy_token_match_floor(qwen):
+    """The acceptance gate: int8 pages must reproduce >= 99% of the
+    bf16-page greedy tokens on the real reduced model.  Quantization
+    noise (~absmax/254 per element) can flip argmax only at near-ties;
+    the calibrated workload keeps that below 1% of steps."""
+    model, cfg, params = qwen
+    total = matched = 0
+    for seed in (11, 4):
+        reqs = _workload(cfg, seed)
+        _, full = _run(model, cfg, params, reqs)
+        sq, quant = _run(model, cfg, params, reqs, kv_cache_dtype="int8")
+        assert sq.quantized and sq.scales is not None
+        for a, b in zip(full, quant):
+            total += max(len(a), len(b))
+            matched += sum(1 for x, y in zip(a, b) if x == y)
+        sq.manager.check_no_leaks()
+    assert total >= 200  # enough decode steps for the rate to mean something
+    assert matched / total >= 0.99, f"token match {matched}/{total}"
+
+
+def test_int8_run_is_deterministic(qwen):
+    """Quantize-on-write is a pure function of the token history, so two
+    int8 runs are byte-identical (the crash-resume / replica-parity
+    property at fixed dtype)."""
+    model, cfg, params = qwen
+    reqs = _workload(cfg, 11)
+    _, a = _run(model, cfg, params, reqs, kv_cache_dtype="int8")
+    _, b = _run(model, cfg, params, reqs, kv_cache_dtype="int8")
+    assert a == b
+
+
+def test_int8_identical_under_preemption(qwen):
+    """A pool too small for the fleet's decode growth forces organic
+    preempt/recompute cycles (short prompts, long generations — growth
+    past the admission gate's one-page reserve); requantizing the
+    replayed history must reproduce the exact bytes, so outputs never
+    change (preemption costs work, not correctness)."""
+    model, cfg, params = qwen
+    rng = np.random.default_rng(11)
+    reqs = [
+        Request(
+            i,
+            prompt_tokens=[int(t) for t in rng.integers(
+                2, cfg.vocab_size, 10 + i % 5
+            )],
+            max_new_tokens=40,
+        )
+        for i in range(8)
+    ]
+    roomy, a = _run(model, cfg, params, reqs, kv_cache_dtype="int8")
+    tight, b = _run(
+        model, cfg, params, reqs, kv_cache_dtype="int8", page_pool=8
+    )
+    assert tight.stats.preemptions > 0
+    assert roomy.stats.preemptions == 0
+    assert a == b
+    tight.manager.check_no_leaks()
+
+
+# -- quantized copy-on-write ------------------------------------------------------
+
+
+def test_quantized_cow_copies_bytes_and_scales(qwen):
+    """The CoW primitive for int8 pools must copy the stored int8 bytes
+    AND the scale rows verbatim — requantizing on copy would round twice
+    and break shared-page parity."""
+    model, cfg, params = qwen
+    sched = ContinuousBatcher(
+        model, cfg, params, n_slots=2, max_len=64, eos_id=1, page_size=16,
+        kv_cache_dtype="int8", page_pool=23,
+    )
+    sched.submit(Request(0, prompt_tokens=list(range(10, 30)),
+                         max_new_tokens=4))
+    sched.run_to_completion()
+    src, dst = 1, 9  # src was written by the prefill above
+    cache2, scales2 = sched._copy_page_q(sched.cache, sched.scales, src, dst)
+    pool_leaves = zip(jax.tree.leaves(sched.cache), jax.tree.leaves(cache2))
+    scale_leaves = zip(jax.tree.leaves(sched.scales), jax.tree.leaves(scales2))
+    for (p0, p1), (s0, s1) in zip(pool_leaves, scale_leaves):
+        n_pages = s0.shape[0]  # scale leaves lead with the page axis
+        ax = p0.shape.index(n_pages)
+        p0, p1 = np.asarray(p0), np.asarray(p1)
+        np.testing.assert_array_equal(
+            np.take(p1, dst, axis=ax), np.take(p0, src, axis=ax)
+        )
+        np.testing.assert_array_equal(np.asarray(s1)[dst], np.asarray(s0)[src])
+        # every other page (and its scales) is untouched
+        keep = [i for i in range(n_pages) if i != dst]
+        np.testing.assert_array_equal(
+            np.take(p1, keep, axis=ax), np.take(p0, keep, axis=ax)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s1)[keep], np.asarray(s0)[keep]
+        )
+
+
+# -- validation -------------------------------------------------------------------
+
+
+def test_kv_cache_dtype_validation(qwen):
+    model, cfg, params = qwen
+    with pytest.raises(ValueError, match="kv_page_size|page"):
+        ContinuousBatcher(model, cfg, params, kv_cache_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        ContinuousBatcher(
+            model, cfg, params, page_size=16, kv_cache_dtype="fp8"
+        )
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ContinuousBatcher(
+            model, cfg, params, page_size=16, page_pool=8,
+            page_pool_bytes=1 << 20,
+        )
+    with pytest.raises(ValueError):
+        SimulatedSlotEngine(SLOT_MODEL, kv_cache_dtype="int8")
+    with pytest.raises(ValueError):
+        SimulatedSlotEngine(
+            SLOT_MODEL, kv_page_size=16, kv_cache_dtype="int4"
+        )
+
+
+# -- simulated engine: byte budgets ----------------------------------------------
+
+
+def test_sim_engine_byte_budget_capacity():
+    """At a fixed pool byte budget the int8 engine admits ~2x the pages
+    and halves the advertised bytes-per-token."""
+    budget = 14 * kv_page_bytes(16, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS)
+    bf = SimulatedSlotEngine(
+        SLOT_MODEL, kv_page_size=16, page_pool_bytes=budget, step_ms=0.0
+    )
+    q8 = SimulatedSlotEngine(
+        SLOT_MODEL, kv_page_size=16, page_pool_bytes=budget,
+        kv_cache_dtype="int8", step_ms=0.0,
+    )
+    pb_bf = kv_page_bytes(16, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS, "bf16")
+    pb_q8 = kv_page_bytes(16, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS, "int8")
+    assert bf._pages.n_pages == pages_for_budget(budget, pb_bf) == 14
+    assert q8._pages.n_pages == pages_for_budget(budget, pb_q8)
+    assert q8._pages.n_pages / bf._pages.n_pages >= 1.8
+    assert bf.stats.kv_bytes_per_token == pb_bf // 16
+    assert q8.stats.kv_bytes_per_token == pb_q8 // 16
+    assert q8.stats.pool_pages == q8._pages.n_pages
+    # the pool partitions its byte budget exactly
+    assert q8._pages.pool_bytes == q8._pages.n_pages * pb_q8 <= budget
+
+
+def test_sim_engine_quantized_identical_under_pressure():
+    """Decode growth against a tight byte budget preempts the bf16 pool
+    while the token plane never moves: int8 and bf16 produce identical
+    texts, and the bf16 side preempts at least as often."""
+    budget = 8 * kv_page_bytes(16, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS)
+    rows = [
+        " ".join(f"load{i}w{j}" for j in range(36)) + f" tail {i}"
+        for i in range(12)
+    ]
+
+    def run(dtype):
+        eng = SimulatedSlotEngine(
+            SLOT_MODEL, n_slots=4, step_ms=0.0, kv_page_size=16,
+            kv_cache_dtype=dtype, page_pool_bytes=budget,
+            decode_page_growth=True, min_out=32, max_out=48,
+        )
+        eng.initialize()
+        reqs = {
+            eng.stream_submit(InferenceRequest(p, 48, 0.0)): p for p in rows
+        }
+        out = {}
+        while eng.stream_pending():
+            for rid, resp in eng.stream_pump():
+                out[reqs[rid]] = resp.text
+        eng._pages.check_no_leaks()
+        return out, eng.stats
+
+    bf_out, bf_stats = run("bf16")
+    q8_out, q8_stats = run("int8")
+    assert bf_out == q8_out
+    assert bf_stats.preemptions > 0  # the budget actually binds
+    assert q8_stats.preemptions <= bf_stats.preemptions
+
+
+def test_inference_config_forwards_kv_cache_dtype():
+    """``InferenceConfig.kv_cache_dtype`` reaches the engine through the
+    session's paging kwargs, and the per-token byte rate lands in the
+    serving snapshot and the suite markdown."""
+    rows = [
+        {"question": f"fwd check question {i} please", "reference": f"r {i}"}
+        for i in range(8)
+    ]
+    task = EvalTask(
+        task_id="fwd",
+        model=SLOT_MODEL,
+        inference=InferenceConfig(
+            batch_size=8, n_workers=2, kv_page_size=16, kv_cache_dtype="int8"
+        ),
+        metrics=(MetricConfig("exact_match"),),
+        statistics=StatisticsConfig(
+            bootstrap_iterations=100, ci_method="percentile"
+        ),
+    )
+    suite = EvalSuite("quantmd").add_task(task, rows)
+    with EvalSession(engine_kwargs={"n_slots": 4, "step_ms": 0.0}) as session:
+        sres = session.run_suite(suite)
+        (snap,) = session.serving_stats()
+    expect = kv_page_bytes(16, SIM_KV_HEADS, SIM_HEAD_DIM, SIM_LAYERS, "int8")
+    assert snap["batcher"]["kv_bytes_per_token"] == expect // 16
+    md = sres.to_markdown()
+    assert "| kv B/tok " in md
+    assert f" {expect // 16} " in md
